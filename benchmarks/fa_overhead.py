@@ -1,0 +1,33 @@
+"""Paper Fig. 5: FA-2's tile-update overhead vs vanilla attention, and what
+SU-FA removes, as exp/cmp/mul counts and equivalent adds vs sequence length.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import opcount
+
+
+def run():
+    t, d, bc = 128, 64, 16  # the paper profiles Bc=16 -> Tc = S/16
+    for s in (512, 1024, 2048, 4096):
+        vanilla = opcount.vanilla_attention_ops(t, s, d)
+        fa2 = opcount.fa2_ops(t, s, d, bc)
+        sufa = opcount.sufa_ops(t, s, d, bc, keep_ratio=1.0, strict=False)
+        extra_exp = fa2.exp - vanilla.exp
+        extra_cmp = fa2.cmp - vanilla.cmp
+        overhead = (fa2.equivalent_adds / vanilla.equivalent_adds - 1)
+        emit(f"fig5_fa2_overhead_s{s}", 0.0,
+             f"extra_exp={extra_exp:.2e} extra_cmp={extra_cmp:.2e} "
+             f"eqadd_overhead={overhead:.1%}")
+        emit(f"fig5_sufa_vs_fa2_s{s}", 0.0,
+             f"nonmatmul_eqadds: fa2={opcount.OpCount(cmp=fa2.cmp, exp=fa2.exp, mul=0, div=fa2.div).equivalent_adds:.2e} "
+             f"sufa={opcount.OpCount(cmp=sufa.cmp, exp=sufa.exp, mul=0, div=sufa.div).equivalent_adds:.2e} "
+             f"mul_saved={fa2.mul - sufa.mul:.2e} exp_saved={fa2.exp - sufa.exp:.2e}")
+
+    # paper §II-B anchor: S=2048, Bc=16 -> extra exps grow ~ T_c per row
+    fa2 = opcount.fa2_ops(t, 2048, d, bc)
+    vanilla = opcount.vanilla_attention_ops(t, 2048, d)
+    emit("fig5_anchor_s2048", 0.0,
+         f"extra_exp_per_row={(fa2.exp - vanilla.exp) / t:.0f} "
+         f"(=T_c={2048 // bc})")

@@ -1,0 +1,32 @@
+"""Paper Table III analog: per-(arch x shape x mesh) roofline terms from the
+dry-run artifacts (results/dryrun/*.json). The ASIC rows of Table III have
+no TPU analogue; the honest comparison on v5e is the three-term roofline +
+useful-FLOP ratio recorded by the dry-run."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run():
+    files = sorted(RESULTS.glob("*.json")) if RESULTS.exists() else []
+    if not files:
+        emit("table3_roofline", 0.0, "no dry-run artifacts; run "
+             "python -m repro.launch.dryrun --all first")
+        return
+    for f in files:
+        r = json.loads(f.read_text())
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        emit(f"table3_{f.stem}", rl[f"{rl['bottleneck']}_s"] * 1e6,
+             f"bottleneck={rl['bottleneck']} "
+             f"compute={rl['compute_s']:.2e}s "
+             f"memory={rl['memory_s']:.2e}s "
+             f"collective={rl['collective_s']:.2e}s "
+             f"useful={rl['useful_ratio']:.2f}")

@@ -1,0 +1,65 @@
+"""Paper Fig. 19/20/22a: throughput gain and memory-access reduction of the
+STAR flow vs the dense baseline.
+
+On this CPU host we measure wall-clock for the XLA pipeline (dense vs STAR
+attention at matched shapes) and report the analytic TPU-side gains
+(FLOP and HBM-byte ratios) that the roofline model implies — the
+paper-faithful numbers for v5e are in EXPERIMENTS.md §Roofline/§Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.star_attention import STARConfig, dense_attention, \
+    star_attention
+
+
+def run():
+    d = 64
+    for s, ratio in ((2048, 0.2), (4096, 0.15)):
+        t = 512
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (t, d), jnp.float32)
+        k = jax.random.normal(ks[1], (s, d), jnp.float32)
+        v = jax.random.normal(ks[2], (s, d), jnp.float32)
+        cfg = STARConfig(top_k_ratio=ratio, block_q=128, block_kv=128)
+
+        dense_fn = jax.jit(lambda q, k, v: dense_attention(q, k, v,
+                                                           causal=True))
+        star_fn = jax.jit(lambda q, k, v: star_attention(q, k, v, cfg,
+                                                         causal=True))
+        t_dense = time_fn(dense_fn, q, k, v)
+        t_star = time_fn(star_fn, q, k, v)
+        emit(f"fig19_dense_attn_s{s}", t_dense, "wall_clock_cpu")
+        emit(f"fig19_star_attn_s{s}", t_star,
+             f"speedup={t_dense / t_star:.2f}x k={ratio}")
+
+        # analytic memory-access reduction (Fig. 22a): decode reads
+        # dense: K+V bf16 = 4 S d bytes; STAR: int8 LZ (S d) + selected
+        # K,V (4 k S d) -> paper reports 79% total reduction.
+        dense_bytes = 4 * s * d
+        star_bytes = 1 * s * d + 4 * ratio * s * d
+        emit(f"fig22a_mem_access_s{s}", 0.0,
+             f"reduction={1 - star_bytes / dense_bytes:.1%} "
+             f"(paper: 79% with SU-FA+tiling)")
+
+
+def run_kernels():
+    """Kernel-path timing (interpret mode: correctness-grade, not perf)."""
+    from repro.kernels import ops
+
+    t = s = 512
+    d = 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, t, d), jnp.float32)
+    k = jax.random.normal(ks[1], (1, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (1, s, d), jnp.float32)
+    t_flash = time_fn(lambda: ops.flash(q, k, v, causal=True, block_q=128,
+                                        block_kv=128), iters=1)
+    t_star = time_fn(lambda: ops.star_attention_fused(
+        q, k, v, keep=1, causal=True, block_q=128, block_kv=128), iters=1)
+    emit("kernel_flash_interpret", t_flash, "fa2_baseline")
+    emit("kernel_star_fused_interpret", t_star, "dlzs+sads+sufa")

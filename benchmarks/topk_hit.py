@@ -1,0 +1,69 @@
+"""Paper Fig. 17a / 18b: DLZS+SADS top-k hit rate vs SLZS+SADS, and the
+accuracy <-> reduced-complexity trade-off vs top-k ratio.
+
+Paper claims: DLZS+SADS hit rate > 97% at top-20% (SLZS < 93%); attention
+output degrades gracefully down to k~0.15-0.2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import dlzs, sads
+from repro.core.star_attention import STARConfig, dense_attention, \
+    star_attention
+
+
+def _scores(s=2048, d=64, rows=64, seed=0, peaked=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    q = jax.random.normal(ks[0], (rows, d))
+    k = jax.random.normal(ks[1], (s, d))
+    if peaked:  # Type I/II mixture (paper Fig. 9: ~95% of rows)
+        k = k.at[: s // 16].mul(3.0)
+    exact = (q @ k.T) / jnp.sqrt(float(d))
+    return q, k, exact
+
+
+def _hit_rate(exact, approx, ratio, n_segments=16):
+    s = exact.shape[-1]
+    kk = int(ratio * s) // n_segments * n_segments
+    sel = sads.sads_select(approx, kk, n_segments, radius=1e9)
+    hits = 0
+    for r in range(exact.shape[0]):
+        true_top = set(np.argsort(np.asarray(exact[r]))[-kk:].tolist())
+        pred = set(np.asarray(sel.indices[r]).tolist())
+        hits += len(true_top & pred) / kk
+    return hits / exact.shape[0]
+
+
+def run():
+    q, k, exact = _scores()
+    scale = 1.0 / jnp.sqrt(64.0)
+    dlzs_hat = dlzs.dlzs_scores(q, dlzs.pow2_quantize(k), scale)
+    slzs_hat = dlzs.slzs_scores(q, k, scale)
+
+    for ratio in (0.05, 0.1, 0.2):
+        hd = _hit_rate(exact, dlzs_hat, ratio)
+        hs = _hit_rate(exact, slzs_hat, ratio)
+        emit(f"fig17a_hit_top{int(ratio * 100)}", 0.0,
+             f"dlzs={hd:.1%} slzs={hs:.1%} delta={hd - hs:+.1%} "
+             f"(paper: dlzs>97% slzs<93% @20%)")
+
+    # Fig. 18b: accuracy proxy (attention output error) vs reduced complexity
+    ksz, d = 2048, 64
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    qf = jax.random.normal(keys[0], (256, d))
+    kf = jax.random.normal(keys[1], (ksz, d)).at[: ksz // 16].mul(3.0)
+    vf = jax.random.normal(keys[2], (ksz, d))
+    ref = dense_attention(qf, kf, vf, causal=False)
+    for ratio in (0.1, 0.15, 0.2, 0.3, 0.5):
+        cfg = STARConfig(top_k_ratio=ratio, block_q=128, block_kv=128,
+                         radius=1e9)  # isolate the top-k axis (the sphere
+        #                               saturates selection on peaked rows)
+        out = star_attention(qf, kf, vf, cfg, causal=False)
+        err = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        emit(f"fig18b_tradeoff_k{int(ratio * 100)}", 0.0,
+             f"rel_err={err:.3f} reduced_complexity={1 - ratio:.0%}")

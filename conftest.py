@@ -1,0 +1,7 @@
+import pathlib
+import sys
+
+# Make `pytest tests/` work without PYTHONPATH=src (dry-run and smoke tests
+# must see 1 CPU device here — never set xla_force_host_platform_device_count
+# globally; multi-device tests spawn subprocesses instead).
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "src"))

@@ -1,0 +1,57 @@
+"""Spatial-architecture demo: DRAttention ring on 8 simulated devices and
+the MRCA schedule that realizes it on a mesh NoC without wrap-around links.
+
+Run:  PYTHONPATH=src python examples/spatial_ring_demo.py
+(This script re-execs itself with 8 fake XLA devices.)
+"""
+
+import os
+import sys
+
+if os.environ.get("_SPATIAL_DEMO") != "1":
+    os.environ["_SPATIAL_DEMO"] = "1"
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mrca
+from repro.core.dr_attention import dr_attention
+from repro.core.star_attention import dense_attention
+
+
+def main():
+    n = 8
+    mesh = jax.make_mesh((n,), ("sp",))
+    s, d = 1024, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (s, d), jnp.float32) for kk in ks)
+
+    out = jax.jit(lambda q, k, v: dr_attention(q, k, v, mesh=mesh,
+                                               axis="sp", causal=True)
+                  )(q, k, v)
+    ref = dense_attention(q, k, v, causal=True)
+    err = float(np.abs(np.asarray(out) - np.asarray(ref)).max())
+    print(f"DRAttention on {n} seq-sharded devices: max |err| vs dense = "
+          f"{err:.2e}")
+    print("  (Q sub-blocks rotate with their (m, l, o) partial-softmax "
+          "state; KV stays resident — half the ring traffic of "
+          "RingAttention-KV)")
+
+    # MRCA: the same ring as a wrap-around-free mesh schedule
+    sim = mrca.simulate(n)
+    cost_mrca = mrca.schedule_cost(mrca.mrca_schedule(n))
+    cost_naive = mrca.schedule_cost(mrca.naive_ring_schedule(n))
+    print(f"MRCA on a 1x{n} mesh: every CU computed all {n} chunks in "
+          f"{n} steps, max {sim.max_chunks_stored} chunks stored, "
+          f"{sim.link_conflicts} link conflicts")
+    print(f"  latency vs naive ring-on-mesh: {cost_mrca['latency_ns']:.0f} "
+          f"vs {cost_naive['latency_ns']:.0f} ns "
+          f"({cost_naive['latency_ns'] / cost_mrca['latency_ns']:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

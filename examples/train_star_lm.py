@@ -1,0 +1,79 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full framework stack (synthetic data -> sharded loader -> fault-tolerant
+train loop -> checkpoints).
+
+Run:  PYTHONPATH=src python examples/train_star_lm.py [--steps 300] [--tiny]
+
+The default config is the 100M-class star_paper smoke model; ``--tiny``
+shrinks it for CI-speed runs. On a single CPU the 100M model takes a few
+hundred ms/step at seq 256.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLM
+from repro.launch import steps as launch_steps
+from repro.models import lm
+from repro.runtime import TrainLoopCfg, train_loop
+
+
+class LocalLoader:
+    def __init__(self, ds):
+        self.ds, self.step = ds, 0
+
+    def __iter__(self):
+        import jax.numpy as jnp
+        while True:
+            b = {k: jnp.asarray(v) for k, v in
+                 self.ds.batch(self.step).items()}
+            s, self.step = self.step, self.step + 1
+            yield s, b
+
+    def seek(self, step):
+        self.step = step
+        return self
+
+    def stop(self):
+        pass
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/star_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("star_paper")
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, d_model=128, n_layers=2, n_heads=4,
+                                  n_kv=4, d_ff=256)
+    n_params = sum(l.size for l in jax.tree.leaves(
+        jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))))
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params), "
+          f"seq {args.seq}, batch {args.batch}")
+
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    _, opt_init, _, _ = launch_steps.make_optimizer(cfg)
+    opt_state = opt_init(params)
+    step_fn = jax.jit(launch_steps.make_train_step(
+        cfg, lr=6e-4, warmup=50, total_steps=args.steps), donate_argnums=(0,
+                                                                          1))
+    ds = SyntheticLM(vocab=cfg.vocab, seq=args.seq, global_batch=args.batch)
+    loop_cfg = TrainLoopCfg(total_steps=args.steps, ckpt_every=100,
+                            ckpt_dir=args.ckpt, log_every=10)
+    params, opt_state, hist = train_loop(step_fn, params, opt_state,
+                                         LocalLoader(ds), loop_cfg)
+    first, last = hist[0][1], hist[-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({'OK' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each config module defines ``config()`` (the exact published shape) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "grok_1_314b",
+    "olmoe_1b_7b",
+    "xlstm_125m",
+    "seamless_m4t_large_v2",
+    "jamba_1_5_large_398b",
+    "chatglm3_6b",
+    "starcoder2_15b",
+    "nemotron_4_340b",
+    "olmo_1b",
+    "internvl2_26b",
+    "star_paper",
+)
+
+
+def _module(name: str):
+    name = name.replace("-", "_").replace(".", "_")
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCHS}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()

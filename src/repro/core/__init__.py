@@ -1,0 +1,20 @@
+# The paper's primary contribution — the STAR cross-stage sparse-attention
+# pipeline (DLZS prediction, SADS selection, SU-FA formal compute) plus the
+# spatial-architecture layer (DRAttention dataflow, MRCA schedule).
+
+from repro.core.dlzs import (dlzs_scores, lz_pack, lz_unpack, pow2_quantize,
+                             predict_khat, slzs_scores)
+from repro.core.sads import (BlockSelection, SADSSelection, gather_blocks,
+                             gather_selected, sads_select, sads_select_blocks)
+from repro.core.star_attention import (STARConfig, dense_attention,
+                                       star_attention,
+                                       star_attention_batched, star_decode)
+from repro.core.sufa import masked_attention_ref, sufa_gathered, sufa_scan
+
+__all__ = [
+    "BlockSelection", "SADSSelection", "STARConfig", "dense_attention",
+    "dlzs_scores", "gather_blocks", "gather_selected", "lz_pack", "lz_unpack",
+    "masked_attention_ref", "pow2_quantize", "predict_khat", "sads_select",
+    "sads_select_blocks", "slzs_scores", "star_attention",
+    "star_attention_batched", "star_decode", "sufa_gathered", "sufa_scan",
+]

@@ -1,0 +1,120 @@
+"""DLZS — Differential Leading-Zero Scheme (paper §IV-A).
+
+Log-domain, multiplier-free sparsity prediction. An integer ``x`` is written
+``x = sign · M · 2^(W−LZ)`` (Eq. 3); approximating the mantissa of *one*
+operand as 1 turns a multiply into a shift (Eq. 4b). "Differential" = only one
+operand is LZ-coded (vs. SLZS in FACT which codes both), which halves the
+conversion cost and the quantization error.
+
+TPU adaptation (DESIGN.md §2a): a ``sign·2^e`` multiply costs one MXU FLOP like
+any other, so the win on TPU is (i) the prediction operand can be *stored and
+streamed as a 1-byte LZ code* (4× less prediction traffic than bf16) and
+(ii) one-sided quantization keeps prediction accuracy high. The float-domain
+equivalent of ``sign·2^(W−LZ)`` is ``sign(x)·2^floor(log2|x|)``, which we use
+throughout; the int-domain faithful path is kept for fidelity tests.
+
+Cross-phase (paper Fig. 8a): the weights ``W_k`` are pow2-converted *offline*
+(``pow2_quantize`` at init), so the Key-prediction phase (1.1) is shift-only;
+the attention-prediction phase (1.2) LZ-codes Q's counterpart K instead of Q
+to avoid error accumulation — in our differential convention the *K side* is
+the coded operand in both phases and Q stays exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# int8 LZ-code layout: code = sign(x) * (exponent + _BIAS); code 0 <=> x == 0.
+_BIAS = 64
+_EXP_MIN, _EXP_MAX = -63, 63
+
+
+def pow2_quantize(x: jax.Array) -> jax.Array:
+    """sign(x) · 2^floor(log2|x|): float-domain DLZS operand (mantissa -> 1).
+
+    Quantization ratio q/x lies in (1/2, 1]: the estimate never overshoots and
+    underestimates by at most 2x, preserving relative order well.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    m, e = jnp.frexp(jnp.abs(xf))  # |x| = m * 2^e with m in [0.5, 1)
+    del m
+    q = jnp.sign(xf) * jnp.exp2((e - 1).astype(jnp.float32))
+    return jnp.where(xf == 0.0, 0.0, q).astype(dtype)
+
+
+def lz_pack(x: jax.Array) -> jax.Array:
+    """Pack x into int8 LZ codes: sign * (floor(log2|x|) + 64); 0 -> 0.
+
+    This is the compact on-HBM representation of the prediction-side operand
+    (1 byte vs 2 for bf16) — the paper's "load a 4-bit LZ value" claim, rounded
+    up to the TPU-friendly int8.
+    """
+    xf = x.astype(jnp.float32)
+    _, e = jnp.frexp(jnp.abs(xf))
+    e = jnp.clip(e - 1, _EXP_MIN, _EXP_MAX)
+    code = jnp.sign(xf) * (e + _BIAS).astype(jnp.float32)
+    return jnp.where(xf == 0.0, 0.0, code).astype(jnp.int8)
+
+
+def lz_unpack(code: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Decode int8 LZ codes back to sign·2^e floats (cheap, fuses into matmul)."""
+    c = code.astype(jnp.float32)
+    mag = jnp.exp2(jnp.abs(c) - _BIAS)
+    return jnp.where(c == 0.0, 0.0, jnp.sign(c) * mag).astype(dtype)
+
+
+def dlzs_scores(q: jax.Array, k_pow2: jax.Array, scale: float | jax.Array = 1.0,
+                ) -> jax.Array:
+    """Estimated attention scores Â = scale · Q · pow2(K)ᵀ  (differential: Q exact).
+
+    q: [..., T, d]; k_pow2: [..., S, d] already pow2-quantized (offline for
+    weights, or via ``pow2_quantize``/``lz_unpack`` for activations).
+    """
+    return jnp.einsum("...td,...sd->...ts", q, k_pow2) * scale
+
+
+def slzs_scores(q: jax.Array, k: jax.Array, scale: float | jax.Array = 1.0,
+                ) -> jax.Array:
+    """Symmetric LZ scheme (FACT [9] baseline): BOTH operands pow2-quantized."""
+    return dlzs_scores(pow2_quantize(q), pow2_quantize(k), scale)
+
+
+def predict_khat(x: jax.Array, wk_pow2: jax.Array) -> jax.Array:
+    """Cross-phase Key prediction (phase 1.1): K̂ = X · pow2(W_k).
+
+    ``wk_pow2`` is pre-converted at parameter-init time (weights are static),
+    so this phase needs no runtime LZ coding at all.
+    """
+    return jnp.einsum("...th,hd->...td", x, wk_pow2)
+
+
+# ---------------------------------------------------------------------------
+# Int-domain faithful path (used by fidelity tests / op-count benchmarks).
+# ---------------------------------------------------------------------------
+
+def int_quantize(x: jax.Array, w: int = 8):
+    """Symmetric per-tensor quantization to W-bit signed integers."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    scale = amax / (2.0 ** (w - 1) - 1)
+    xi = jnp.round(x / scale)
+    return xi, scale
+
+
+def int_lz(xi: jax.Array, w: int = 8) -> jax.Array:
+    """Leading-zero count of the (w-1)-bit magnitude field (paper Eq. 3).
+
+    LZ in [1, w]; value ≈ sign · 2^(w − LZ). mag==0 maps to LZ=w (value 2^0
+    scaled by sign 0 -> 0).
+    """
+    mag = jnp.abs(xi)
+    exp = jnp.floor(jnp.log2(jnp.maximum(mag, 1.0)))  # floor(log2 mag), mag>=1
+    return jnp.where(mag == 0, w, (w - 1) - exp).astype(jnp.int32)
+
+
+def int_dlzs_value(xi: jax.Array, w: int = 8) -> jax.Array:
+    """sign · 2^(W−1−LZ') reconstruction of a W-bit int (mantissa -> 1)."""
+    mag = jnp.abs(xi)
+    exp = jnp.floor(jnp.log2(jnp.maximum(mag, 1.0)))
+    return jnp.where(mag == 0, 0.0, jnp.sign(xi) * jnp.exp2(exp))

@@ -1,0 +1,132 @@
+"""SADS — Sphere-search Aided Distributed Sorting (paper §IV-B).
+
+Splits each estimated-score row into ``n`` segments; each segment contributes
+its own top-(k/n) entries (distributed sorting, breaking the row-wide sort
+dependency so the top-k stage tiles). A sphere radius ``r`` centred on each
+segment's max prunes entries whose softmax contribution is provably tiny:
+softmax(x) < e^{-Δ} for an element Δ below the max (Eq. 5), so Δ > r=5 means
+contribution < 0.0067.
+
+Justified by the paper's data study (Fig. 9): Type I (few dominant tokens) and
+Type II (large tokens spread evenly) cover >95% of attention rows, so local
+segment maxima are trustworthy proxies for the global max.
+
+Two granularities are provided:
+  * ``sads_select``        — element-level (used by the decode path);
+  * ``sads_select_blocks`` — tile-level (used by SU-FA / the Pallas kernel):
+    a query tile keeps the top ``keep`` KV tiles ranked by predicted tile max,
+    which is the TPU-native skip granularity (DESIGN.md §2b).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class SADSSelection(NamedTuple):
+    """Element-level selection result (flattened over segments)."""
+
+    indices: jax.Array  # [..., k_total] global column indices, segment-major
+    valid: jax.Array    # [..., k_total] bool — in-sphere and not a masked slot
+    values: jax.Array   # [..., k_total] the estimated scores of the survivors
+
+
+def sads_select(scores: jax.Array, k_total: int, n_segments: int,
+                radius: float = 5.0) -> SADSSelection:
+    """Element-level SADS over the last axis.
+
+    scores: [..., S] estimated scores (already -inf at masked positions).
+    k_total must be divisible by n_segments, S by n_segments.
+    """
+    s = scores.shape[-1]
+    if s % n_segments:
+        raise ValueError(f"S={s} not divisible by n_segments={n_segments}")
+    if k_total % n_segments:
+        raise ValueError(f"k={k_total} not divisible by n_segments={n_segments}")
+    seg_len = s // n_segments
+    k_seg = k_total // n_segments
+
+    segs = scores.reshape(*scores.shape[:-1], n_segments, seg_len)
+    vals, idx = jax.lax.top_k(segs, k_seg)          # [..., n, k/n] descending
+    seg_max = vals[..., :1]                          # local max (= sphere centre)
+    in_sphere = vals >= (seg_max - radius)
+    valid = in_sphere & (vals > NEG_INF / 2)
+    offset = (jnp.arange(n_segments) * seg_len)[..., :, None]
+    gidx = idx + offset
+
+    flat = lambda a: a.reshape(*a.shape[:-2], k_total)
+    return SADSSelection(flat(gidx), flat(valid), flat(vals))
+
+
+class BlockSelection(NamedTuple):
+    """Tile-level selection: per query tile, which KV tiles to visit."""
+
+    block_idx: jax.Array   # [..., n_qt, keep] KV-tile ids, DESC by predicted max
+    block_valid: jax.Array  # [..., n_qt, keep] bool
+    block_max: jax.Array   # [..., n_qt, keep] predicted tile max (desc order)
+
+
+def block_maxima(scores: jax.Array, block_q: int, block_kv: int) -> jax.Array:
+    """Predicted tile maxima: [..., T, S] -> [..., T/block_q, S/block_kv]."""
+    *lead, t, s = scores.shape
+    n_qt, n_kt = t // block_q, s // block_kv
+    r = scores.reshape(*lead, n_qt, block_q, n_kt, block_kv)
+    return r.max(axis=(-3, -1))
+
+
+def sads_select_blocks(scores: jax.Array, block_q: int, block_kv: int,
+                       keep: int, radius: float = 5.0,
+                       causal: bool = False) -> BlockSelection:
+    """Tile-level SADS: keep the top ``keep`` KV tiles per query tile.
+
+    ``jax.lax.top_k`` returns values in descending order, which *is* the SU-FA
+    descend-updating visit order — selection and ordering come out of one op.
+    For causal attention, tiles strictly above the diagonal are masked out
+    before ranking.
+    """
+    bmax = block_maxima(scores, block_q, block_kv)   # [..., n_qt, n_kt]
+    n_qt, n_kt = bmax.shape[-2], bmax.shape[-1]
+    if causal:
+        qt = jnp.arange(n_qt)[:, None]
+        kt = jnp.arange(n_kt)[None, :]
+        # KV tile kt overlaps queries of tile qt iff kt*Bc <= qt*Bq + Bq - 1.
+        vis = (kt * block_kv) <= (qt * block_q + block_q - 1)
+        bmax = jnp.where(vis, bmax, NEG_INF)
+
+    keep = min(keep, n_kt)
+    vals, idx = jax.lax.top_k(bmax, keep)            # desc — SU-FA order
+    row_best = vals[..., :1]
+    valid = (vals > NEG_INF / 2) & (vals >= row_best - radius)
+    return BlockSelection(idx, valid, vals)
+
+
+def sphere_stats(scores: jax.Array, n_segments: int, radius: float) -> jax.Array:
+    """rho — fraction of entries inside the sphere (per paper's complexity
+    model O(S·S·k·rho/n)); measured, feeds benchmarks/complexity_reduction."""
+    s = scores.shape[-1]
+    segs = scores.reshape(*scores.shape[:-1], n_segments, s // n_segments)
+    seg_max = segs.max(axis=-1, keepdims=True)
+    return (segs >= seg_max - radius).mean()
+
+
+def gather_selected(kv: jax.Array, indices: jax.Array) -> jax.Array:
+    """Gather selected rows: kv [..., S, d], indices [..., k] -> [..., k, d]."""
+    return jnp.take_along_axis(kv, indices[..., None], axis=-2)
+
+
+def gather_blocks(kv: jax.Array, block_idx: jax.Array, block_kv: int) -> jax.Array:
+    """Gather selected KV tiles.
+
+    kv: [..., S, d]; block_idx: [..., n_qt, keep] -> [..., n_qt, keep, block_kv, d].
+    """
+    *lead, s, d = kv.shape
+    tiles = kv.reshape(*lead, s // block_kv, block_kv, d)
+    n_qt, keep = block_idx.shape[-2], block_idx.shape[-1]
+    flat_idx = block_idx.reshape(*block_idx.shape[:-2], n_qt * keep)
+    g = jnp.take_along_axis(tiles, flat_idx[..., None, None], axis=-3)
+    return g.reshape(*lead, n_qt, keep, block_kv, d)

@@ -1,0 +1,250 @@
+"""The STAR cross-stage pipeline: DLZS predict -> SADS select -> SU-FA compute.
+
+This is the paper's primary contribution as a composable JAX module. The three
+stages share one tile grid so the estimated score matrix never leaves the
+chip: in the fused Pallas path it literally stays in VMEM; in the XLA path the
+per-tile maxima are the only [n_qt, n_kt]-sized intermediate.
+
+Entry points:
+  * ``star_attention``         — tile-granular prefill/training attention
+                                 (single head; vmap over batch/head outside).
+  * ``star_attention_scanq``   — same, scanning over query chunks so memory
+                                 stays O(chunk) for long sequences.
+  * ``star_attention_batched`` — convenience vmap over [..., heads].
+  * ``star_decode``            — element-granular decode against a (possibly
+                                 LZ-compressed) KV cache.
+  * ``dense_attention``        — the non-sparse reference the paper baselines
+                                 against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dlzs, sads, sufa
+from repro.core.sads import NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class STARConfig:
+    """Static configuration of the STAR sparse-attention pipeline."""
+
+    top_k_ratio: float = 0.2     # fraction of KV kept (paper sweet spot .15-.2)
+    block_q: int = 128           # B_r — query tile rows
+    block_kv: int = 128          # B_c — KV tile cols = SADS segment size
+    radius: float = 5.0          # sphere radius r (paper default)
+    strict: bool = True          # exact rescale vs descend-updating fast path
+    elementwise: bool = False    # apply in-tile sphere masks (element SADS)
+    use_scan: bool = False       # streaming SU-FA (faithful) vs gathered XLA
+    chunk_tiles: int = 4         # q tiles per scan step (scanq path)
+    prefix_groups: int = 1       # causal prefill: split Q into G groups that
+    #                              predict only over their visible K prefix
+    #                              (~2x less prediction work; beyond-paper)
+
+    def keep_blocks(self, s: int) -> int:
+        n_kt = s // self.block_kv
+        return max(1, min(n_kt, math.ceil(self.top_k_ratio * n_kt)))
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, scale: Optional[float] = None) -> jax.Array:
+    """Dense softmax attention (single head): the paper's dense baseline."""
+    t, d = q.shape[-2], q.shape[-1]
+    s = k.shape[-2]
+    scale = scale or (1.0 / math.sqrt(d))
+    sc = jnp.einsum("...td,...sd->...ts", q, k).astype(jnp.float32) * scale
+    if causal:
+        offset = s - t  # queries are the last t positions
+        mask = jnp.arange(s)[None, :] <= (jnp.arange(t)[:, None] + offset)
+        sc = jnp.where(mask, sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("...ts,...sd->...td", p / l, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def predict_scores(q: jax.Array, k: jax.Array, *, scale: float,
+                   k_lz: Optional[jax.Array] = None,
+                   k_pow2: Optional[jax.Array] = None) -> jax.Array:
+    """Stage 1 (pre-compute): DLZS estimated scores Â.
+
+    Precedence: an int8 LZ cache ``k_lz`` (1 byte/elem HBM traffic) > a
+    precomputed ``k_pow2`` > on-the-fly pow2 quantization of K.
+    """
+    if k_lz is not None:
+        k_pow2 = dlzs.lz_unpack(k_lz, q.dtype)
+    elif k_pow2 is None:
+        k_pow2 = dlzs.pow2_quantize(k)
+    return dlzs.dlzs_scores(q, k_pow2, scale)
+
+
+def star_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   cfg: STARConfig, *, causal: bool,
+                   q_offset: Optional[jax.Array | int] = None,
+                   k_lz: Optional[jax.Array] = None,
+                   k_pow2: Optional[jax.Array] = None,
+                   scale: Optional[float] = None) -> jax.Array:
+    """Full STAR pipeline for one head. q [T,d], k/v [S,d] -> [T,d].
+
+    ``q_offset`` gives the absolute position of q row 0 (default: queries are
+    the trailing T positions of the S keys, the usual self-attention case).
+    """
+    t, d = q.shape
+    s = k.shape[0]
+    scale = scale or (1.0 / math.sqrt(d))
+    if cfg.block_q > t or cfg.block_kv > s:
+        cfg = dataclasses.replace(cfg, block_q=min(cfg.block_q, t),
+                                  block_kv=min(cfg.block_kv, s))
+    if q_offset is None:
+        q_offset = s - t
+    q_pos = jnp.arange(t) + q_offset                       # [T]
+    kv_pos_all = jnp.arange(s)                             # [S]
+
+    # Stage 1 — DLZS prediction (log-domain, one-sided quantization).
+    s_hat = predict_scores(q, k, scale=scale, k_lz=k_lz, k_pow2=k_pow2)
+    if causal:
+        s_hat = jnp.where(kv_pos_all[None, :] <= q_pos[:, None], s_hat,
+                          NEG_INF)
+
+    # Stage 2 — SADS tile selection (top-k per q-tile, desc by predicted max).
+    sel = sads.sads_select_blocks(
+        s_hat, cfg.block_q, cfg.block_kv, cfg.keep_blocks(s),
+        radius=cfg.radius, causal=False)  # causality already folded in
+
+    n_qt = t // cfg.block_q
+    keep = sel.block_idx.shape[-1]
+    elem_mask = None
+    if causal:
+        # In-tile causal masking (diagonal tiles are partially visible).
+        qp = q_pos.reshape(n_qt, cfg.block_q)
+        kv_pos = (sel.block_idx[..., None] * cfg.block_kv
+                  + jnp.arange(cfg.block_kv))              # [n_qt, keep, Bc]
+        elem_mask = (kv_pos[:, :, None, :] <= qp[:, None, :, None])
+    if cfg.elementwise:
+        # Element-level sphere pruning inside the selected tiles.
+        sh = s_hat.reshape(n_qt, cfg.block_q, s // cfg.block_kv, cfg.block_kv)
+        sh_sel = jnp.take_along_axis(
+            sh, sel.block_idx[:, None, :, None], axis=2)  # [n_qt,Bq,keep,Bc]
+        row_max = jnp.where(
+            sel.block_valid[:, None, :, None], sh_sel, NEG_INF
+        ).max(axis=(2, 3), keepdims=True)
+        sphere = sh_sel >= (row_max - cfg.radius)
+        sphere = jnp.moveaxis(sphere, 1, 2)               # -> [n_qt,keep,Bq,Bc]
+        elem_mask = sphere if elem_mask is None else (elem_mask & sphere)
+
+    # Stage 3 — SU-FA formal compute on the survivors.
+    if cfg.use_scan:
+        return sufa.sufa_scan(
+            q, k, v, sel, scale=scale, block_q=cfg.block_q,
+            block_kv=cfg.block_kv, strict=cfg.strict, elem_mask=elem_mask)
+    return sufa.sufa_gathered(
+        q, k, v, sel, scale=scale, block_q=cfg.block_q,
+        block_kv=cfg.block_kv, elem_mask=elem_mask)
+
+
+def star_attention_scanq(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cfg: STARConfig, *, causal: bool,
+                         q_offset: int = 0,
+                         scale: Optional[float] = None) -> jax.Array:
+    """STAR attention scanning over query chunks (memory O(chunk), long T).
+
+    The pow2-quantized K is computed once and reused by every chunk — the
+    cross-*phase* reuse from the paper (prediction operand prepared once).
+    """
+    t, d = q.shape
+    s = k.shape[0]
+    chunk = min(cfg.block_q, t) * cfg.chunk_tiles
+    if t <= chunk:
+        return star_attention(q, k, v, cfg, causal=causal, q_offset=q_offset,
+                              scale=scale)
+    if t % chunk:
+        raise ValueError(f"T={t} not divisible by q-chunk {chunk}")
+    n_chunks = t // chunk
+    k_pow2 = dlzs.pow2_quantize(k)
+
+    groups = cfg.prefix_groups if (causal and t == s and q_offset == 0) else 1
+    while n_chunks % groups or s % groups:
+        groups -= 1
+
+    def make_step(k_g, v_g, kp_g):
+        def step(_, inp):
+            qc, off = inp
+            out = star_attention(qc, k_g, v_g, cfg, causal=causal,
+                                 q_offset=off, k_pow2=kp_g, scale=scale)
+            return None, out
+        return step
+
+    if groups == 1:
+        offsets = q_offset + jnp.arange(n_chunks) * chunk
+        _, outs = jax.lax.scan(jax.checkpoint(make_step(k, v, k_pow2)), None,
+                               (q.reshape(n_chunks, chunk, d), offsets))
+        return outs.reshape(t, d)
+
+    # Prefix groups: group g's queries see only k[: (g+1)·s/G] — prediction
+    # and gathers shrink to the visible prefix (Σ = (G+1)/2G of full work).
+    cpg = n_chunks // groups
+    outs = []
+    for g in range(groups):
+        prefix = (g + 1) * (s // groups)
+        qg = q[g * cpg * chunk:(g + 1) * cpg * chunk]
+        offsets = q_offset + (g * cpg + jnp.arange(cpg)) * chunk
+        _, og = jax.lax.scan(
+            jax.checkpoint(make_step(k[:prefix], v[:prefix],
+                                     k_pow2[:prefix])),
+            None, (qg.reshape(cpg, chunk, d), offsets))
+        outs.append(og.reshape(cpg * chunk, d))
+    return jnp.concatenate(outs, axis=0)
+
+
+def star_attention_batched(q: jax.Array, k: jax.Array, v: jax.Array,
+                           cfg: STARConfig, *, causal: bool,
+                           scan_q: bool = False,
+                           scale: Optional[float] = None) -> jax.Array:
+    """vmap wrapper: q [..., T, d], k/v [..., S, d] with matching lead dims."""
+    if scan_q:
+        fn = lambda q_, k_, v_: star_attention_scanq(
+            q_, k_, v_, cfg, causal=causal,
+            q_offset=k_.shape[-2] - q_.shape[-2], scale=scale)
+    else:
+        fn = lambda q_, k_, v_: star_attention(
+            q_, k_, v_, cfg, causal=causal, scale=scale)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+def star_decode(q: jax.Array, k: jax.Array, v: jax.Array, cfg: STARConfig, *,
+                length: jax.Array | int, k_lz: Optional[jax.Array] = None,
+                n_segments: Optional[int] = None,
+                scale: Optional[float] = None) -> jax.Array:
+    """Element-granular STAR decode: one query against a KV cache.
+
+    q [d], k/v [S_max, d]; ``length`` marks the valid prefix. Prediction reads
+    the compressed LZ cache when given; the formal stage gathers only the
+    selected rows, so compute AND memory traffic scale with k, not S.
+    """
+    s, d = k.shape
+    scale = scale or (1.0 / math.sqrt(d))
+    n_seg = n_segments or max(1, s // cfg.block_kv)
+    s_hat = predict_scores(q[None, :], k, scale=scale, k_lz=k_lz)[0]  # [S]
+    valid = jnp.arange(s) < length
+    s_hat = jnp.where(valid, s_hat, NEG_INF)
+
+    k_total = max(n_seg, int(s * cfg.top_k_ratio) // n_seg * n_seg)
+    sel = sads.sads_select(s_hat, k_total, n_seg, cfg.radius)
+    kg = sads.gather_selected(k, sel.indices)          # [k, d]
+    vg = sads.gather_selected(v, sel.indices)
+    sc = (kg @ q).astype(jnp.float32) * scale          # exact scores, k only
+    sc = jnp.where(sel.valid, sc, NEG_INF)
+    m = sc.max()
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    out = (p @ vg.astype(jnp.float32)) / jnp.maximum(p.sum(), 1e-30)
+    return out.astype(q.dtype)

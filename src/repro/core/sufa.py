@@ -1,0 +1,165 @@
+"""SU-FA — Sorted-Updating FlashAttention (paper §IV-C).
+
+FlashAttention's per-tile online-softmax pays for cross-tile max refreshes:
+every tile recomputes ``m' = max(m, rowmax(S_ij))`` and rescales the
+accumulator ``o <- o · e^{m−m'}`` (Fig. 5 lines 5-8). SU-FA exploits the
+*sorted* tile order coming out of SADS: tiles are visited in DESCENDING order
+of predicted tile max, so after the first tile the running max (almost) never
+changes and the rescale multiplies vanish (Fig. 11b, "descend updating"; the
+paper shows ascend updating costs one extra multiply per step, hence descend
+is the default).
+
+Three implementations, all consuming the same ``BlockSelection``:
+
+  * ``sufa_scan``       — faithful streaming recurrence (lax.scan over tiles),
+                          ``strict=True`` keeps the exact rescale (bit-exact vs
+                          the oracle), ``strict=False`` is the paper's fast
+                          path: the max is frozen after tile 0 and the rescale
+                          is skipped entirely (error bounded by the SADS
+                          radius: a late element can exceed the frozen max
+                          only if prediction mis-ranked tiles, and then by at
+                          most the prediction error).
+  * ``sufa_gathered``   — one-shot masked softmax over the *gathered* selected
+                          tiles. Mathematically identical to strict scan; this
+                          is the XLA-friendly form the model layers use (the
+                          FLOP count is the sparse one: T·keep·Bc·d, not T·S·d).
+  * the Pallas kernel (kernels/sufa) — the TPU implementation, streaming like
+                          ``sufa_scan`` with scalar-prefetched tile indices.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sads import NEG_INF, BlockSelection, gather_blocks
+
+
+class AttnState(NamedTuple):
+    m: jax.Array  # [rows] running max (fp32)
+    l: jax.Array  # [rows] running denominator (fp32)
+    o: jax.Array  # [rows, d] unnormalized accumulator (fp32)
+
+
+def _tile_scores(q_tile, k_tile, scale):
+    return jnp.einsum("td,cd->tc", q_tile, k_tile).astype(jnp.float32) * scale
+
+
+def sufa_scan(q: jax.Array, k: jax.Array, v: jax.Array, sel: BlockSelection,
+              *, scale: float, block_q: int, block_kv: int,
+              strict: bool = True, elem_mask: jax.Array | None = None,
+              ) -> jax.Array:
+    """Streaming SU-FA over one head. q [T,d], k/v [S,d] -> [T,d].
+
+    sel.block_idx [n_qt, keep] must be in descending predicted-max order (as
+    produced by ``sads_select_blocks``). elem_mask, if given, is
+    [n_qt, keep, block_q, block_kv] (sphere-pruned in-tile elements).
+    """
+    t, d = q.shape
+    s = k.shape[0]
+    n_qt = t // block_q
+    keep = sel.block_idx.shape[-1]
+    k_tiles = k.reshape(s // block_kv, block_kv, d)
+    v_tiles = v.reshape(s // block_kv, block_kv, d)
+
+    def per_qtile(q_tile, blk_idx, blk_valid, mask_qt):
+        def step(state: AttnState, inputs):
+            kv_id, is_valid, emask = inputs
+            k_tile = k_tiles[kv_id]
+            v_tile = v_tiles[kv_id]
+            sc = _tile_scores(q_tile, k_tile, scale)       # [Bq, Bc]
+            sc = jnp.where(emask, sc, NEG_INF)
+            sc = jnp.where(is_valid, sc, NEG_INF)
+            tile_max = sc.max(axis=-1)                      # [Bq]
+            if strict:
+                m_new = jnp.maximum(state.m, tile_max)
+                alpha = jnp.exp(state.m - m_new)            # rescale (==1 when sorted)
+            else:
+                # Descend updating: freeze the max established by tile 0.
+                first = state.m <= NEG_INF / 2
+                m_new = jnp.where(first, tile_max, state.m)
+                alpha = jnp.ones_like(state.m)              # no rescale multiply
+            p = jnp.exp(sc - m_new[:, None])
+            p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+            l_new = state.l * alpha + p.sum(axis=-1)
+            o_new = state.o * alpha[:, None] + p @ v_tile.astype(jnp.float32)
+            return AttnState(m_new, l_new, o_new), None
+
+        init = AttnState(
+            jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32),
+            jnp.zeros((block_q, d), jnp.float32),
+        )
+        state, _ = jax.lax.scan(step, init, (blk_idx, blk_valid, mask_qt))
+        return state.o / jnp.maximum(state.l, 1e-30)[:, None]
+
+    if elem_mask is None:
+        elem_mask = jnp.ones(
+            (n_qt, keep, block_q, block_kv), dtype=bool)
+    out = jax.vmap(per_qtile)(
+        q.reshape(n_qt, block_q, d), sel.block_idx, sel.block_valid,
+        elem_mask)
+    return out.reshape(t, d).astype(q.dtype)
+
+
+def sufa_gathered(q: jax.Array, k: jax.Array, v: jax.Array,
+                  sel: BlockSelection, *, scale: float, block_q: int,
+                  block_kv: int, elem_mask: jax.Array | None = None,
+                  ) -> jax.Array:
+    """One-shot masked softmax over gathered selected tiles (model fast path).
+
+    FLOPs: 4·T·keep·Bc·d — the *sparse* count; the full S never appears.
+    """
+    t, d = q.shape
+    n_qt = t // block_q
+    keep = sel.block_idx.shape[-1]
+    kg = gather_blocks(k, sel.block_idx, block_kv)  # [n_qt, keep, Bc, d]
+    vg = gather_blocks(v, sel.block_idx, block_kv)
+    qt = q.reshape(n_qt, block_q, d)
+    sc = jnp.einsum("qtd,qkcd->qtkc", qt, kg).astype(jnp.float32) * scale
+    sc = jnp.where(sel.block_valid[:, None, :, None], sc, NEG_INF)
+    if elem_mask is not None:
+        # elem_mask convention: [n_qt, keep, Bq, Bc] -> [n_qt, Bq, keep, Bc]
+        sc = jnp.where(jnp.moveaxis(elem_mask, 1, 2), sc, NEG_INF)
+    sc = sc.reshape(n_qt, block_q, keep * block_kv)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    # P.V in the model dtype (stats stay fp32): halves the formal-stage
+    # HBM traffic for bf16 models — §Perf cell B iteration 4.
+    vg = vg.reshape(n_qt, keep * block_kv, d)
+    out = jnp.einsum("qtc,qcd->qtd", (p / l).astype(q.dtype), vg)
+    return out.reshape(t, d).astype(q.dtype)
+
+
+def masked_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: jax.Array, *, scale: float) -> jax.Array:
+    """Oracle: dense softmax attention restricted to ``mask`` [T, S]."""
+    sc = jnp.einsum("td,sd->ts", q, k).astype(jnp.float32) * scale
+    sc = jnp.where(mask, sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return ((p / l) @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def selection_to_mask(sel: BlockSelection, t: int, s: int, block_q: int,
+                      block_kv: int,
+                      elem_mask: jax.Array | None = None) -> jax.Array:
+    """Expand a BlockSelection (+ optional in-tile mask) to a dense [T,S] mask."""
+    n_qt, keep = sel.block_idx.shape
+    n_kt = s // block_kv
+    onehot = jax.nn.one_hot(sel.block_idx, n_kt, dtype=bool)  # [n_qt, keep, n_kt]
+    onehot = onehot & sel.block_valid[..., None]
+    if elem_mask is None:
+        blk = onehot.any(axis=1)                             # [n_qt, n_kt]
+        mask = jnp.repeat(jnp.repeat(blk, block_q, 0), block_kv, 1)
+    else:
+        # elem_mask [n_qt, keep, Bq, Bc] -> scatter to [n_qt, Bq, n_kt, Bc]
+        dense = jnp.einsum("nkqc,nkt->nqtc", elem_mask, onehot).astype(bool)
+        mask = dense.reshape(n_qt * block_q, n_kt * block_kv)
+    return mask

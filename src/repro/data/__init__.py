@@ -1,0 +1,4 @@
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import SyntheticLM, synthetic_batch
+
+__all__ = ["ShardedLoader", "SyntheticLM", "synthetic_batch"]

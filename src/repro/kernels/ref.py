@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (assert_allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_ref(q, k, v, *, causal=True, scale=None):
+    """Dense softmax attention, fp32 statistics. q [BH,T,d] -> [BH,T,d]."""
+    bh, t, d = q.shape
+    s = k.shape[1]
+    scale = scale or (1.0 / math.sqrt(d))
+    sc = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(s)[None, :] <= jnp.arange(t)[:, None] + (s - t)
+        sc = jnp.where(mask, sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bts,bsd->btd", p / l, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def sufa_ref(q, kg, vg, mask, *, scale=None):
+    """Masked softmax over gathered tiles. Shapes as kernels.sufa."""
+    bh, t, d = q.shape
+    _, n_qt, keep, bc, _ = kg.shape
+    bq = t // n_qt
+    scale = scale or (1.0 / math.sqrt(d))
+    qt = q.reshape(bh, n_qt, bq, d).astype(jnp.float32)
+    sc = jnp.einsum("bqtd,bqkcd->bqtkc", qt, kg.astype(jnp.float32)) * scale
+    sc = jnp.where(jnp.moveaxis(mask, 3, 2) != 0, sc, NEG_INF)
+    sc = sc.reshape(bh, n_qt, bq, keep * bc)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    vflat = vg.reshape(bh, n_qt, keep * bc, d).astype(jnp.float32)
+    o = jnp.einsum("bqtc,bqcd->bqtd", p / l, vflat)
+    return o.reshape(bh, t, d).astype(q.dtype)
+
+
+def dlzs_block_ref(q, k, *, causal=True, scale=None, block_q=128,
+                   block_kv=128):
+    """Predicted block maxima via the float-domain pow2 quantizer."""
+    from repro.core.dlzs import pow2_quantize
+
+    bh, t, d = q.shape
+    s = k.shape[1]
+    scale = scale or (1.0 / math.sqrt(d))
+    block_q = min(block_q, t)
+    block_kv = min(block_kv, s)
+    sc = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                    pow2_quantize(k).astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(s)[None, :] <= jnp.arange(t)[:, None] + (s - t)
+        sc = jnp.where(mask, sc, NEG_INF)
+    n_qt, n_kt = t // block_q, s // block_kv
+    sc = sc.reshape(bh, n_qt, block_q, n_kt, block_kv)
+    return sc.max(axis=(2, 4))

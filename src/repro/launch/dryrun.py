@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (arch x input-shape x mesh) cell: build shardings from the logical
+rules, ``jit(step).lower(...).compile()`` with ShapeDtypeStruct inputs (no
+allocation), print ``memory_analysis()`` / ``cost_analysis()``, parse the
+optimized HLO for collective traffic, and persist everything to a JSON cache
+consumed by EXPERIMENTS.md and benchmarks/roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo_1b --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all [--mesh pod1|pod2|both] [--force]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _cell_id(arch, shape, mesh_name, variant=""):
+    v = f"+{variant}" if variant else ""
+    return f"{arch}__{shape}__{mesh_name}{v}"
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             variant: str = "", force: bool = False,
+             star_long: bool = False, overrides=None) -> dict:
+    """Lower + compile one cell; returns the result record (cached)."""
+    from repro.configs import get_config
+    from repro.launch import roofline, shapes as shp, steps
+    from repro.launch.mesh import make_production_mesh
+    from repro.shardlib import rules as shr
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS / f"{_cell_id(arch, shape_name, mesh_name, variant)}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = shp.SHAPES[shape_name]
+    skip = shp.applicability(cfg, shape, allow_star_long=star_long)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "status": "skip", "skip_reason": skip}
+    if skip:
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    n_dev = mesh.size
+    rules = steps.rules_for(cfg, shape)
+
+    t0 = time.time()
+    with shr.axis_rules(mesh, rules):
+        p_shard = steps.param_shardings(mesh, cfg, rules)
+        p_sds = shp.params_specs(cfg)
+        if shape.kind == "train":
+            o_sds = steps.opt_state_specs(cfg)
+            o_shard = steps.opt_shardings(mesh, cfg, rules)
+            b_shard = steps.batch_shardings(mesh, cfg, shape, rules)
+            b_sds = shp.batch_specs(cfg, shape)
+            fn = steps.make_train_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(p_sds, o_sds, b_sds)
+        elif shape.kind == "prefill":
+            b_shard = steps.batch_shardings(mesh, cfg, shape, rules)
+            b_sds = shp.batch_specs(cfg, shape)
+            fn = steps.make_prefill_step(cfg, cache_len=shape.seq)
+            c_sds = jax.eval_shape(fn, p_sds, b_sds)[1]
+            c_shard = steps.cache_shardings(mesh, c_sds, rules)
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(p_sds, b_sds)
+        else:  # decode
+            tok_sds, c_sds = shp.decode_specs(cfg, shape)
+            c_shard = steps.cache_shardings(mesh, c_sds, rules)
+            tok_shard = NamedSharding(
+                mesh, shr.logical_spec(("batch", None), tok_sds.shape))
+            fn = steps.make_decode_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_shard, tok_shard, c_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(p_sds, tok_sds, c_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # authoritative costs: while-trip-aware HLO model (hlo_cost.py);
+    # cost_analysis() counts loop bodies once and is kept for comparison.
+    from repro.launch import hlo_cost
+    hc = hlo_cost.analyze_hlo(hlo, n_dev)
+    rl = roofline.analyze_hlo_costs(hc, n_dev, cfg, shape)
+
+    mem_rec = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_rec[f] = getattr(mem, f, None)
+    n_total, n_active = roofline.count_params(cfg)
+    rec.update(
+        status="ok",
+        devices=n_dev,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory=mem_rec,
+        cost={k: v for k, v in cost.items()
+              if k in ("flops", "bytes accessed")},
+        collectives={"bytes": hc.collective_link_bytes,
+                     "seconds": hc.collective_seconds,
+                     "by_op": hc.coll_by_op, "n_while": hc.n_while},
+        roofline=rl.as_dict(),
+        params={"total": n_total, "active": n_active},
+    )
+    out_path.write_text(json.dumps(rec, indent=2))
+    print(f"[dryrun] {out_path.name}: OK "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+          f"bottleneck={rl.bottleneck})")
+    print(f"  memory_analysis: {mem}")
+    print(f"  cost_analysis: flops={cost.get('flops'):.3e} "
+          f"bytes={cost.get('bytes accessed'):.3e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--star-long", action="store_true",
+                    help="beyond-spec: STAR sparse decode for long_500k")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+    from repro.launch import shapes as shp
+
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            if arch == "star_paper":
+                continue
+            for shape in shp.SHAPES:
+                for m in meshes:
+                    cells.append((arch, shape, m))
+    else:
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = []
+    for arch, shape, m in cells:
+        try:
+            rec = run_cell(arch, shape, m, force=args.force,
+                           star_long=args.star_long)
+            if rec["status"] == "skip":
+                print(f"[dryrun] {arch}/{shape}/{m}: SKIP "
+                      f"({rec['skip_reason']})")
+        except Exception as e:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            failures.append((arch, shape, m, str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells OK.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = modeled collective seconds (ring model over parsed HLO ops)
+
+``cost_analysis()`` reports the per-device post-SPMD module, so its numbers
+are already per-chip. Collective bytes are NOT in cost_analysis — we parse
+the optimized HLO text and apply per-op ring formulas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e hardware constants (per spec).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"(?P<outshape>\(?[a-z0-9_]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*(?:\},?\{[^}]*)*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over all tensors in a (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [G,N]<=[T]: G groups of N participants
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        return max(1, len([t for t in first.split(",") if t.strip() != ""]))
+    return total_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_moved: float = 0.0       # modeled per-device link bytes
+    seconds: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, op: str, link_bytes: float):
+        self.bytes_moved += link_bytes
+        self.seconds += link_bytes / LINK_BW
+        ent = self.by_op.setdefault(op, [0, 0.0])
+        ent[0] += 1
+        ent[1] += link_bytes
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    """Ring-model per-device link traffic for every collective in the HLO.
+
+    all-reduce: 2·B·(n−1)/n; all-gather (B = gathered result): B·(n−1)/n;
+    reduce-scatter (B = input = result·n): B·(n−1)/n; all-to-all:
+    B·(n−1)/n; collective-permute: B (one hop).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # count the -start, skip its completion marker
+        op = m.group("op")
+        b = _shape_bytes(m.group("outshape"))
+        n = _group_size(line, total_devices)
+        if n <= 1 or b == 0:
+            continue
+        frac = (n - 1) / n
+        if op == "all-reduce":
+            stats.add(op, 2.0 * b * frac)
+        elif op == "all-gather":
+            stats.add(op, b * frac)          # b = full gathered output
+        elif op == "reduce-scatter":
+            stats.add(op, b * n * frac)      # b = scattered output
+        elif op == "all-to-all":
+            stats.add(op, b * frac)
+        else:  # collective-permute
+            stats.add(op, float(b))
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (analytic 6·N·D / 2·N·D) and parameter counting
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total body params N, active body params N_active), embeddings
+    excluded (standard 6·N·D convention)."""
+    import jax
+    import numpy as np
+    from repro.launch import shapes as shp
+
+    sds = shp.params_specs(cfg)
+    total = 0
+    active = 0
+    moe_scale = 1.0
+    if cfg.moe is not None:
+        moe_scale = cfg.moe.top_k / cfg.moe.n_experts
+
+    def visit(path, leaf):
+        nonlocal total, active
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        n = int(np.prod(leaf.shape))
+        if keys[0] in ("embed", "out_head"):
+            return
+        total += n
+        # expert weights count at top_k/E for N_active
+        if "ffn" in keys and any(k in ("w1", "w2", "w3") for k in keys) \
+                and cfg.moe is not None and _is_moe_leaf(keys, leaf):
+            active += int(n * moe_scale)
+        else:
+            active += n
+
+    def _is_moe_leaf(keys, leaf):
+        # MoE expert tensors have a leading virtual-expert dim (>= n_experts
+        # stacked under blocks: [layers, V, ...] -> ndim >= 3 with V >= E).
+        return leaf.ndim >= 3
+
+    jax.tree_util.tree_map_with_path(visit, sds)
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for the step (6·N·D train; 2·N·D forward)."""
+    _, n_active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.batch
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    model_flops: float
+    hlo_total_flops: float
+    useful_ratio: float
+    bottleneck: str
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(cost: dict, coll: CollectiveStats, n_devices: int, cfg,
+            shape) -> Roofline:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll.seconds
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * n_devices
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collective_bytes=coll.bytes_moved, model_flops=mf,
+        hlo_total_flops=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        bottleneck=bottleneck)
+
+
+def analyze_hlo_costs(hc, n_devices: int, cfg, shape) -> Roofline:
+    """Roofline terms from the while-aware HLO cost model (hlo_cost.py) —
+    the authoritative path; cost_analysis() under-counts loop bodies."""
+    compute_s = hc.flops / PEAK_FLOPS
+    memory_s = hc.bytes / HBM_BW
+    coll_s = hc.collective_seconds
+    mf = model_flops(cfg, shape)
+    hlo_total = hc.flops * n_devices
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        flops_per_device=hc.flops, bytes_per_device=hc.bytes,
+        collective_bytes=hc.collective_link_bytes, model_flops=mf,
+        hlo_total_flops=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        bottleneck=bottleneck)

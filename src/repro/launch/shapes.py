@@ -1,0 +1,137 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins (no allocation).
+
+LM transformer shapes are (seq_len, global_batch); ``decode_*``/``long_*``
+lower ``serve_step`` (one token against a seq_len KV cache), not train_step.
+``long_500k`` is lowered only for sub-quadratic archs (SSM/hybrid) per spec —
+plus an explicitly-marked beyond-spec STAR sparse-decode cell (see
+EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.models import lm
+from repro.models.lm import ModelCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def is_subquadratic(cfg: ModelCfg) -> bool:
+    return any(b.kind in ("mamba", "mlstm", "slstm") for b in cfg.pattern)
+
+
+def applicability(cfg: ModelCfg, shape: ShapeCfg,
+                  allow_star_long: bool = False) -> Optional[str]:
+    """None if the (arch, shape) cell is in the official matrix, else the
+    skip reason string."""
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        if allow_star_long and cfg.star is not None:
+            return None  # beyond-spec STAR long-context cell
+        return ("pure full-attention arch: long_500k skipped per spec "
+                "(sub-quadratic attention required)")
+    return None
+
+
+def batch_specs(cfg: ModelCfg, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStructs for the train/prefill batch of this (arch, shape)."""
+    b, s = shape.batch, shape.seq
+    specs = {}
+    if cfg.enc_layers:
+        # enc-dec (seamless): encoder frames stub + decoder tokens
+        specs["enc_embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        specs["tokens"] = SDS((b, s), jnp.int32)
+    elif cfg.embeds_input:
+        # VLM/audio stub: precomputed patch/frame embeddings
+        specs["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = SDS((b, s), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = SDS((b, s), jnp.int32)
+    return specs
+
+
+def batch_logical_axes(cfg: ModelCfg, shape: ShapeCfg) -> dict:
+    ax = {}
+    if cfg.enc_layers:
+        ax["enc_embeds"] = ("batch", "seq", "embed")
+        ax["tokens"] = ("batch", "seq")
+    elif cfg.embeds_input:
+        ax["embeds"] = ("batch", "seq", "embed")
+    else:
+        ax["tokens"] = ("batch", "seq")
+    if shape.kind == "train":
+        ax["labels"] = ("batch", "seq")
+    return ax
+
+
+def decode_specs(cfg: ModelCfg, shape: ShapeCfg):
+    """(tokens SDS, cache SDS-tree) for serve_step — derived via eval_shape
+    of prefill so the cache structure can never drift from the model."""
+    b, s = shape.batch, shape.seq
+    prompt = batch_specs(cfg, dataclasses.replace(shape, kind="prefill"))
+    _, cache_sds = jax.eval_shape(
+        lambda p, bt: lm.prefill(p, cfg, bt, cache_len=s),
+        params_specs(cfg), prompt)
+    tokens = SDS((b, 1), jnp.int32)
+    return tokens, cache_sds
+
+
+@functools.lru_cache(maxsize=None)
+def params_specs(cfg: ModelCfg):
+    """Abstract parameter tree (SDS) — no allocation."""
+    return jax.eval_shape(
+        lambda: lm.init(jax.random.PRNGKey(0), cfg))
+
+
+def cache_logical_axes(cache_tree) -> dict:
+    """Path-based logical axes for the serve cache pytree."""
+
+    def classify(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        base: tuple
+        if "attn" in keys or "cross" in keys:
+            name = keys[-1]
+            if name in ("k", "v", "k_lz"):
+                base = ("batch", "kv_seq", "kv_heads", "head_dim")
+            else:
+                base = ("batch",) * (leaf.ndim - 1)
+        elif "mamba" in keys:
+            base = {"conv": ("batch", None, "mlp"),
+                    "state": ("batch", "heads_ssm", "state", "head_dim"),
+                    }.get(keys[-1], ("batch",))
+        elif "mlstm" in keys:
+            base = ("batch", "heads_ssm", "state", "head_dim")
+        elif "slstm" in keys:
+            base = ("batch", "heads_ssm", "head_dim")
+        elif keys[-1] == "lengths":
+            return ("batch",)
+        else:
+            base = ("batch",)
+        if "layers" in keys:
+            base = ("layers",) + base
+        base = base[:leaf.ndim]
+        base = base + (None,) * (leaf.ndim - len(base))
+        return base
+
+    return jax.tree_util.tree_map_with_path(classify, cache_tree)

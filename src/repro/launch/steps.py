@@ -1,0 +1,145 @@
+"""train_step / serve_step factories + sharding trees for the launch layer."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import shapes as shp
+from repro.models import lm
+from repro.models.lm import ModelCfg
+from repro.optim import adafactor, adamw
+from repro.optim.adamw import AdamWConfig
+from repro.optim.adafactor import AdafactorConfig
+from repro.optim.schedule import warmup_cosine
+from repro.shardlib import rules as shr
+
+
+def make_optimizer(cfg: ModelCfg, lr: float | None = None):
+    """(opt_cfg, init_fn, update_fn, axes_fn) for the arch's optimizer."""
+    if cfg.optimizer == "adafactor":
+        ocfg = AdafactorConfig(**({"lr": lr} if lr else {}))
+        return (ocfg,
+                lambda p: adafactor.adafactor_init(p, ocfg),
+                lambda p, g, s, lr: adafactor.adafactor_update(
+                    p, g, s, ocfg, lr),
+                lambda ax, sds: adafactor.adafactor_axes(ax, sds, ocfg))
+    ocfg = AdamWConfig(moment_dtype=jax.numpy.bfloat16,
+                       **({"lr": lr} if lr else {}))
+    return (ocfg,
+            lambda p: adamw.adamw_init(p, ocfg),
+            lambda p, g, s, lr: adamw.adamw_update(p, g, s, ocfg, lr),
+            lambda ax, sds: {"m": ax, "v": ax, "step": ()})
+
+
+def make_train_step(cfg: ModelCfg, opt_cfg=None, *, lr: float | None =
+                    None, warmup: int = 200, total_steps: int = 10000):
+    """Full training step: fwd + bwd + clip + AdamW. Donated params/state.
+
+    With ``cfg.train_accum > 1`` the global batch is split into microbatches
+    scanned sequentially with gradient accumulation (activation memory
+    scales down by the accumulation factor — required for the 300B+ archs).
+    """
+    grad_fn = jax.value_and_grad(lm.loss_fn, has_aux=True)
+    accum = cfg.train_accum
+    _, _, opt_update, _ = make_optimizer(cfg, lr)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, cfg, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape(accum, a.shape[0] // accum,
+                                    *a.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                (l, m), g = grad_fn(params, cfg, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(cfg.accum_dtype), g_acc, g)
+                return (g_acc, loss_acc + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, cfg.accum_dtype), params)
+            (grads, loss_sum), ms = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda a: a.mean(), ms)
+        lr_scale = warmup_cosine(opt_state["step"], warmup=warmup,
+                                 total=total_steps)
+        params, opt_state, gn = opt_update(params, grads, opt_state,
+                                           lr_scale)
+        metrics = dict(metrics, loss=loss, grad_norm=gn)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelCfg, cache_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelCfg):
+    def serve_step(params, tokens, cache):
+        return lm.decode_step(params, cfg, tokens, cache)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def rules_for(cfg: ModelCfg, shape: Optional[shp.ShapeCfg] = None) -> dict:
+    """Logical rules = defaults + per-arch overrides + per-shape overrides."""
+    rules = dict(shr.DEFAULT_RULES)
+    rules.update(dict(cfg.rule_overrides))
+    if shape is not None and shape.kind == "decode":
+        # KV-cache sequence sharded over the TP axis (flash-decoding-style
+        # partial-softmax merge = DRAttention's (m,l) merge, DESIGN.md §6);
+        # without it a 314B GQA cache cannot fit 16 GB chips.
+        rules["kv_seq"] = "model"
+        if shape.batch == 1:
+            # long-context decode: batch unshardable -> the cache sequence
+            # is additionally sharded over the DP axes (distributed decode)
+            rules["batch"] = None
+            rules["kv_seq"] = ("pod", "data", "model")
+    return rules
+
+
+def param_shardings(mesh, cfg: ModelCfg, rules=None):
+    sds = shp.params_specs(cfg)
+    axes = lm.axes(cfg)
+    return shr.tree_shardings_shaped(mesh, axes, sds, rules)
+
+
+def opt_state_specs(cfg: ModelCfg):
+    _, opt_init, _, _ = make_optimizer(cfg)
+    return jax.eval_shape(opt_init, shp.params_specs(cfg))
+
+
+def opt_shardings(mesh, cfg: ModelCfg, rules=None):
+    _, _, _, axes_fn = make_optimizer(cfg)
+    sds = shp.params_specs(cfg)
+    state_axes = axes_fn(lm.axes(cfg), sds)
+    return shr.tree_shardings_shaped(mesh, state_axes, opt_state_specs(cfg),
+                                     rules)
+
+
+def batch_shardings(mesh, cfg: ModelCfg, shape: shp.ShapeCfg, rules=None):
+    specs = shp.batch_specs(cfg, shape)
+    axes = shp.batch_logical_axes(cfg, shape)
+    return shr.tree_shardings_shaped(
+        mesh, {k: axes[k] for k in specs}, specs, rules)
+
+
+def cache_shardings(mesh, cache_sds, rules=None):
+    axes = shp.cache_logical_axes(cache_sds)
+    return shr.tree_shardings_shaped(mesh, axes, cache_sds, rules)

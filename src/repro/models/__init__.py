@@ -1,0 +1,2 @@
+# Model substrate: functional layers (init / apply / axes triplets), composed
+# into the assigned architectures by repro.models.lm.

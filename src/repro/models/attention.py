@@ -1,0 +1,298 @@
+"""Multi-head attention layer: GQA + RoPE + {dense | STAR-sparse} + KV cache.
+
+Modes:
+  * prefill / train — full-sequence attention; dense (chunked masked softmax)
+    or the STAR pipeline (DLZS -> SADS -> SU-FA block-sparse) when a
+    ``STARConfig`` is supplied.
+  * decode — one new token against the cache; dense row attention or
+    element-granular ``star_decode`` reading the int8 LZ prediction cache.
+
+The layer is mesh-agnostic: logical sharding constraints (`shd`) become
+no-ops outside an ``axis_rules`` context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dlzs
+from repro.core.sads import NEG_INF
+from repro.core.star_attention import (STARConfig, star_attention_batched,
+                                       star_decode)
+from repro.models import common
+from repro.shardlib import shd
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionCfg:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_fraction: float = 1.0   # 0 = none, 0.5 = ChatGLM 2d-RoPE, 1 = full
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    causal: bool = True
+    q_chunk: int = 1024          # query tile for chunked dense softmax
+    star: Optional[STARConfig] = None   # sparse mode (None = dense)
+    lz_cache: bool = True        # keep int8 LZ codes of K in the KV cache
+    dtype: jnp.dtype = jnp.bfloat16
+
+
+def init(key, cfg: AttentionCfg):
+    ks = jax.random.split(key, 4)
+    h, nh, nkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": common.truncated_normal_init(ks[0], (h, nh * dh), 1.0,
+                                           cfg.dtype).reshape(h, nh, dh),
+        "wk": common.truncated_normal_init(ks[1], (h, nkv * dh), 1.0,
+                                           cfg.dtype).reshape(h, nkv, dh),
+        "wv": common.truncated_normal_init(ks[2], (h, nkv * dh), 1.0,
+                                           cfg.dtype).reshape(h, nkv, dh),
+        "wo": common.truncated_normal_init(ks[3], (nh * dh, h), 1.0,
+                                           cfg.dtype).reshape(nh, dh, h),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh, dh), cfg.dtype)
+        p["bk"] = jnp.zeros((nkv, dh), cfg.dtype)
+        p["bv"] = jnp.zeros((nkv, dh), cfg.dtype)
+    return p
+
+
+def axes(cfg: AttentionCfg):
+    a = {
+        "wq": ("embed_w", "heads", "head_dim"),
+        "wk": ("embed_w", "kv_heads", "head_dim"),
+        "wv": ("embed_w", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed_w"),
+    }
+    if cfg.qkv_bias:
+        a["bq"] = ("heads", "head_dim")
+        a["bk"] = ("kv_heads", "head_dim")
+        a["bv"] = ("kv_heads", "head_dim")
+    return a
+
+
+def _project_qkv(params, cfg: AttentionCfg, x, positions):
+    """x [B,S,H] -> q [B,S,nh,dh], k/v [B,S,nkv,dh] with RoPE applied."""
+    q = jnp.einsum("bsh,hnd->bsnd", x, params["wq"])
+    k = jnp.einsum("bsh,hnd->bsnd", x, params["wk"])
+    v = jnp.einsum("bsh,hnd->bsnd", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.rope_fraction > 0:
+        q = common.apply_rope(q, positions, theta=cfg.rope_theta,
+                              rotary_fraction=cfg.rope_fraction)
+        k = common.apply_rope(k, positions, theta=cfg.rope_theta,
+                              rotary_fraction=cfg.rope_fraction)
+    q = shd(q, "batch", "seq", "heads", "head_dim")
+    k = shd(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shd(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _repeat_kv(kv, n_rep: int):
+    """[B,S,nkv,dh] -> [B,S,nkv*n_rep,dh] (GQA group expansion)."""
+    if n_rep == 1:
+        return kv
+    return jnp.repeat(kv, n_rep, axis=2)
+
+
+def _dense_chunked(q, k, v, *, causal: bool, q_chunk: int, scale: float,
+                   kv_lengths=None):
+    """Chunked masked softmax: q [B,T,n,d], k/v [B,S,n,d] -> [B,T,n,d].
+
+    Scans over query chunks so the score matrix is [B,n,chunk,S], never
+    [B,n,T,S]. (Causal masking is applied; the masked upper-triangle matmul
+    work is accepted — see DESIGN.md §7 and the §Perf remat/causal notes.)
+    """
+    b, t, n, d = q.shape
+    s = k.shape[1]
+    chunk = min(q_chunk, t)
+    if t % chunk:
+        chunk = t  # fall back to a single chunk for odd sizes
+    n_chunks = t // chunk
+    qs = jnp.moveaxis(q.reshape(b, n_chunks, chunk, n, d), 1, 0)
+    kT = jnp.moveaxis(k, 1, 2)  # [B,n,S,d]
+    vT = jnp.moveaxis(v, 1, 2)
+
+    kv_pos = jnp.arange(s)
+
+    def step(_, inp):
+        qc, off = inp                                  # [B,chunk,n,d], scalar
+        qc = jnp.moveaxis(qc, 1, 2)                    # [B,n,chunk,d]
+        sc = jnp.einsum("bntd,bnsd->bnts", qc, kT).astype(jnp.float32)
+        sc = sc * scale
+        if causal:
+            q_pos = off + jnp.arange(chunk)
+            sc = jnp.where(kv_pos[None, :] <= q_pos[:, None], sc, NEG_INF)
+        if kv_lengths is not None:
+            sc = jnp.where(kv_pos[None, None, None, :]
+                           < kv_lengths[:, None, None, None], sc, NEG_INF)
+        m = sc.max(axis=-1, keepdims=True)
+        p = jnp.exp(sc - m)
+        p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+        l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+        o = jnp.einsum("bnts,bnsd->bntd", (p / l).astype(q.dtype), vT)
+        return None, jnp.moveaxis(o, 1, 2)             # [B,chunk,n,d]
+
+    offsets = jnp.arange(n_chunks) * chunk
+    # remat each chunk: backward recomputes the [B,n,chunk,S] score tile
+    # instead of keeping every chunk's scores+masks live (see §Perf log).
+    _, outs = jax.lax.scan(jax.checkpoint(step), None, (qs, offsets))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, t, n, d)
+
+
+def apply_prefill(params, cfg: AttentionCfg, x, positions, *,
+                  make_cache: bool = False, cache_len: Optional[int] = None):
+    """Full-sequence attention. x [B,S,H] -> (y [B,S,H], cache | None)."""
+    b, s, _ = x.shape
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    n_rep = cfg.n_heads // cfg.n_kv
+
+    if cfg.star is not None:
+        # Grouped GQA: vmap STAR over (batch, kv-head, rep) — K/V are shared
+        # per group, never materialized at n_heads width.
+        qh = jnp.moveaxis(q, 2, 1).reshape(b, cfg.n_kv, n_rep, s,
+                                           cfg.head_dim)
+        kh = jnp.moveaxis(k, 2, 1)    # [B,g,S,d]
+        vh = jnp.moveaxis(v, 2, 1)
+        from repro.core.star_attention import star_attention_scanq
+        one = lambda qv, kv, vv: star_attention_scanq(
+            qv, kv, vv, cfg.star, causal=cfg.causal, scale=scale)
+        f = jax.vmap(one, in_axes=(0, None, None))
+        f = jax.vmap(f, in_axes=(0, 0, 0))
+        f = jax.vmap(f, in_axes=(0, 0, 0))
+        o = f(qh, kh, vh)             # [B,g,r,S,d]
+        y = jnp.moveaxis(o.reshape(b, cfg.n_heads, s, cfg.head_dim), 1, 2)
+    else:
+        kf = shd(_repeat_kv(k, n_rep), "batch", "seq", "heads", "head_dim")
+        vf = shd(_repeat_kv(v, n_rep), "batch", "seq", "heads", "head_dim")
+        y = _dense_chunked(q, kf, vf, causal=cfg.causal, q_chunk=cfg.q_chunk,
+                           scale=scale)
+    y = shd(y, "batch", "seq", "heads", "head_dim")
+    out = jnp.einsum("bsnd,ndh->bsh", y, params["wo"])
+    out = shd(out, "batch", "act_seq", "embed")
+
+    cache = None
+    if make_cache:
+        s_max = cache_len or s
+        pad = s_max - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"k": shd(kc, "batch", "kv_seq", "kv_heads", "head_dim"),
+                 "v": shd(vc, "batch", "kv_seq", "kv_heads", "head_dim")}
+        if cfg.lz_cache:
+            cache["k_lz"] = shd(dlzs.lz_pack(kc),
+                                "batch", "kv_seq", "kv_heads", "head_dim")
+    return out, cache
+
+
+def apply_decode(params, cfg: AttentionCfg, x, cache, lengths):
+    """One-token decode. x [B,1,H]; cache k/v [B,S_max,nkv,dh]; lengths [B].
+
+    Returns (y [B,1,H], updated cache). The new token is written at position
+    ``lengths`` per sequence; attention covers [0, lengths].
+    """
+    b = x.shape[0]
+    s_max = cache["k"].shape[1]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k_new, v_new = _project_qkv(params, cfg, x, lengths[:, None])
+
+    def _scatter_row(c, row):
+        """Write row [B,1,n,d] into c [B,S,n,d] at per-sequence position."""
+        return jax.vmap(lambda ci, ri, i: jax.lax.dynamic_update_slice(
+            ci, ri.astype(ci.dtype), (i, 0, 0)))(c, row, lengths)
+
+    new_cache = dict(cache,
+                     k=_scatter_row(cache["k"], k_new),
+                     v=_scatter_row(cache["v"], v_new))
+    if cfg.lz_cache and "k_lz" in cache:
+        new_cache["k_lz"] = _scatter_row(cache["k_lz"], dlzs.lz_pack(k_new))
+
+    # Grouped-GQA decode: q heads are grouped per KV head and the cache is
+    # NEVER repeated to n_heads — a 16x replication at 32k context that
+    # would dominate decode memory (see §Perf log).
+    n_rep = cfg.n_heads // cfg.n_kv
+    qg = q[:, 0].reshape(b, cfg.n_kv, n_rep, cfg.head_dim)  # [B,g,r,d]
+    kc = jnp.moveaxis(new_cache["k"], 1, 2)   # [B,g,S,d]
+    vc = jnp.moveaxis(new_cache["v"], 1, 2)
+    kv_len = lengths + 1
+
+    if cfg.star is not None:
+        if cfg.lz_cache and "k_lz" in new_cache:
+            lzc = jnp.moveaxis(new_cache["k_lz"], 1, 2)
+            one = lambda qv, kv, vv, lv, ln: star_decode(
+                qv, kv, vv, cfg.star, length=ln, k_lz=lv, scale=scale)
+            f = jax.vmap(one, in_axes=(0, None, None, None, None))  # reps
+            f = jax.vmap(f, in_axes=(0, 0, 0, 0, None))             # kv grp
+            f = jax.vmap(f, in_axes=(0, 0, 0, 0, 0))                # batch
+            o = f(qg, kc, vc, lzc, kv_len)
+        else:
+            one = lambda qv, kv, vv, ln: star_decode(
+                qv, kv, vv, cfg.star, length=ln, scale=scale)
+            f = jax.vmap(one, in_axes=(0, None, None, None))
+            f = jax.vmap(f, in_axes=(0, 0, 0, None))
+            f = jax.vmap(f, in_axes=(0, 0, 0, 0))
+            o = f(qg, kc, vc, kv_len)
+    else:
+        sc = jnp.einsum("bgrd,bgsd->bgrs", qg, kc).astype(jnp.float32)
+        sc = sc * scale
+        pos = jnp.arange(s_max)
+        sc = jnp.where(pos[None, None, None, :]
+                       < kv_len[:, None, None, None], sc, NEG_INF)
+        m = sc.max(axis=-1, keepdims=True)
+        p = jnp.exp(sc - m)
+        p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+        l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+        o = jnp.einsum("bgrs,bgsd->bgrd", (p / l).astype(x.dtype), vc)
+
+    o = o.reshape(b, cfg.n_heads, cfg.head_dim)
+    y = jnp.einsum("bnd,ndh->bh", o, params["wo"])[:, None, :]
+    return shd(y, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder; seamless-m4t)
+# ---------------------------------------------------------------------------
+
+def cross_init(key, cfg: AttentionCfg):
+    return init(key, cfg)
+
+
+def cross_axes(cfg: AttentionCfg):
+    return axes(cfg)
+
+
+def cross_encode(params, cfg: AttentionCfg, enc_out):
+    """Precompute encoder-side K/V once (the cross-attention 'cache')."""
+    k = jnp.einsum("bsh,hnd->bsnd", enc_out, params["wk"])
+    v = jnp.einsum("bsh,hnd->bsnd", enc_out, params["wv"])
+    if cfg.qkv_bias:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return {"k": shd(k, "batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": shd(v, "batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def cross_apply(params, cfg: AttentionCfg, x, enc_cache):
+    """Decoder cross-attention: x [B,T,H] against cached encoder K/V."""
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q = jnp.einsum("bsh,hnd->bsnd", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    n_rep = cfg.n_heads // cfg.n_kv
+    kf = _repeat_kv(enc_cache["k"], n_rep)
+    vf = _repeat_kv(enc_cache["v"], n_rep)
+    y = _dense_chunked(q, kf.astype(q.dtype), vf.astype(q.dtype),
+                       causal=False, q_chunk=cfg.q_chunk, scale=scale)
+    out = jnp.einsum("bsnd,ndh->bsh", y, params["wo"])
+    return shd(out, "batch", "seq", "embed")

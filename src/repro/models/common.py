@@ -1,0 +1,130 @@
+"""Shared layer primitives: norms, activations, RoPE, initializers.
+
+Every layer exposes the triplet
+    init(key, cfg)  -> params (nested dict of arrays)
+    apply(params, x, ...) -> y
+    axes(cfg)       -> same-structure tree of logical-axis tuples
+so the launch layer can derive shardings without instantiating weights
+(dry-run uses jax.eval_shape over init).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale, dtype=jnp.float32):
+    """He/LeCun-style fan-in init used across the framework."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = (scale / max(1, fan_in)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32, parametric: bool = True):
+    if not parametric:   # OLMo's non-parametric LN
+        return {}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if "scale" in params:
+        y = y * params["scale"].astype(jnp.float32) \
+            + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return rmsnorm_init(d, dtype)
+    if kind == "layernorm":
+        return layernorm_init(d, dtype, parametric=True)
+    if kind == "nonparametric_ln":
+        return layernorm_init(d, dtype, parametric=False)
+    raise ValueError(f"unknown norm {kind}")
+
+
+def norm_apply(kind: str, params, x):
+    if kind == "rmsnorm":
+        return rmsnorm_apply(params, x)
+    return layernorm_apply(params, x)
+
+
+def norm_axes(kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ("embed",)}
+    if kind == "layernorm":
+        return {"scale": ("embed",), "bias": ("embed",)}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu
+    if kind == "silu":
+        return jax.nn.silu
+    if kind == "relu":
+        return jax.nn.relu
+    if kind == "relu2":  # Nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, rotary_dim: int, theta: float):
+    exponents = jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim
+    return 1.0 / (theta ** exponents)  # [rotary_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 1e4,
+               rotary_fraction: float = 1.0) -> jax.Array:
+    """Rotate pairs (x[2i], x[2i+1]) of the first ``rotary_fraction`` of dims.
+
+    x: [..., S, n_heads, head_dim]; positions: broadcastable to [..., S].
+    ``rotary_fraction=0.5`` gives ChatGLM's 2-d RoPE (rotary on half the
+    head dim, identity on the rest).
+    """
+    head_dim = x.shape[-1]
+    rotary_dim = int(head_dim * rotary_fraction)
+    rotary_dim -= rotary_dim % 2
+    if rotary_dim == 0:
+        return x
+    freqs = rope_frequencies(head_dim, rotary_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [...,S,rd/2]
+    cos = jnp.cos(angles)[..., :, None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    xr = x[..., :rotary_dim].astype(jnp.float32)
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate(
+        [rotated.astype(x.dtype), x[..., rotary_dim:]], axis=-1)

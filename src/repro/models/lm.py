@@ -1,0 +1,448 @@
+"""Top-level language models: pattern-based block stacks, scan-over-layers.
+
+A model is a repeated *super-block pattern* (e.g. jamba: 7 mamba + 1 attn per
+repeat, MoE on odd positions). ``jax.lax.scan`` runs over the repeats with
+stacked parameters, keeping HLO size O(pattern), not O(depth) — essential for
+compiling 96-layer configs on the dry-run host. Remat policy wraps the
+super-block for training.
+
+Paths: ``loss_fn`` (train), ``prefill`` (build KV/state caches + last-token
+logits), ``decode_step`` (one token). Encoder-decoder models (seamless-m4t)
+add an encoder stack whose output feeds per-layer cross-attention caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.star_attention import STARConfig
+from repro.models import attention, common, mlp, moe, ssm, xlstm
+from repro.shardlib import shd
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    kind: str              # attn | mamba | mlstm | slstm
+    ffn: str = "dense"     # dense | moe | none
+    cross_attn: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    pattern: tuple = (BlockCfg("attn", "dense"),)
+    norm: str = "rmsnorm"
+    mlp_act: str = "silu"
+    mlp_gated: bool = True
+    rope_fraction: float = 1.0
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    head_dim: Optional[int] = None
+    moe: Optional[moe.MoECfg] = None
+    mamba: Optional[ssm.MambaCfg] = None
+    xlstm_heads: int = 0
+    enc_layers: int = 0            # > 0 => encoder-decoder
+    embeds_input: bool = False     # modality frontend stub feeds embeddings
+    star: Optional[STARConfig] = None   # serving-time sparse attention
+    star_train: bool = False
+    causal: bool = True
+    q_chunk: int = 1024
+    seq_loss_chunk: int = 1024
+    vocab_pad_to: int = 2048
+    remat: str = "full"            # none | full | dots
+    optimizer: str = "adamw"       # adamw | adafactor (giants: factored v)
+    train_accum: int = 1           # gradient-accumulation microbatches
+    accum_dtype: Any = jnp.bfloat16  # grad accumulation buffer dtype (bf16:
+    #                                 at accum<=8 the loss is negligible and
+    #                                 it halves the largest train-time buffer)
+    dtype: Any = jnp.bfloat16
+    rule_overrides: tuple = ()     # ((logical, mesh_axis), ...)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_repeat(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, \
+            f"{self.n_layers} layers not a multiple of pattern " \
+            f"{len(self.pattern)}"
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def vocab_padded(self) -> int:
+        p = self.vocab_pad_to
+        return -(-self.vocab // p) * p
+
+    def attn_cfg(self, mode: str, causal: Optional[bool] = None
+                 ) -> attention.AttentionCfg:
+        use_star = self.star if (mode != "train" or self.star_train) else None
+        return attention.AttentionCfg(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.dh, rope_fraction=self.rope_fraction,
+            rope_theta=self.rope_theta, qkv_bias=self.qkv_bias,
+            causal=self.causal if causal is None else causal,
+            q_chunk=self.q_chunk, star=use_star, dtype=self.dtype)
+
+    def mlp_cfg(self) -> mlp.MLPCfg:
+        return mlp.MLPCfg(self.d_model, self.d_ff, self.mlp_act,
+                          self.mlp_gated, self.dtype)
+
+    def xlstm_cfg(self) -> xlstm.XLSTMCfg:
+        return xlstm.XLSTMCfg(self.d_model, self.xlstm_heads,
+                              dtype=self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Super-block (one pattern instance)
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelCfg, blk: BlockCfg, causal: bool = True):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": common.norm_init(cfg.norm, cfg.d_model)}
+    if blk.kind == "attn":
+        p["core"] = attention.init(ks[0], cfg.attn_cfg("train", causal))
+    elif blk.kind == "mamba":
+        p["core"] = ssm.init(ks[0], cfg.mamba)
+    elif blk.kind == "mlstm":
+        p["core"] = xlstm.mlstm_init(ks[0], cfg.xlstm_cfg())
+    elif blk.kind == "slstm":
+        p["core"] = xlstm.slstm_init(ks[0], cfg.xlstm_cfg())
+    else:
+        raise ValueError(blk.kind)
+    if blk.cross_attn:
+        p["norm_cross"] = common.norm_init(cfg.norm, cfg.d_model)
+        p["cross"] = attention.cross_init(ks[1], cfg.attn_cfg("train", False))
+    if blk.ffn != "none":
+        p["norm2"] = common.norm_init(cfg.norm, cfg.d_model)
+        if blk.ffn == "moe":
+            p["ffn"] = moe.init(ks[2], cfg.moe)
+        else:
+            p["ffn"] = mlp.init(ks[2], cfg.mlp_cfg())
+    return p
+
+
+def _block_axes(cfg: ModelCfg, blk: BlockCfg):
+    a = {"norm1": common.norm_axes(cfg.norm)}
+    if blk.kind == "attn":
+        a["core"] = attention.axes(cfg.attn_cfg("train"))
+    elif blk.kind == "mamba":
+        a["core"] = ssm.axes(cfg.mamba)
+    elif blk.kind == "mlstm":
+        a["core"] = xlstm.mlstm_axes(cfg.xlstm_cfg())
+    elif blk.kind == "slstm":
+        a["core"] = xlstm.slstm_axes(cfg.xlstm_cfg())
+    if blk.cross_attn:
+        a["norm_cross"] = common.norm_axes(cfg.norm)
+        a["cross"] = attention.cross_axes(cfg.attn_cfg("train"))
+    if blk.ffn != "none":
+        a["norm2"] = common.norm_axes(cfg.norm)
+        a["ffn"] = moe.axes(cfg.moe) if blk.ffn == "moe" \
+            else mlp.axes(cfg.mlp_cfg())
+    return a
+
+
+def _block_apply(params, cfg: ModelCfg, blk: BlockCfg, x, positions, *,
+                 mode: str, causal: bool = True, cache=None,
+                 enc_cache=None, lengths=None, cache_len=None):
+    """Returns (y, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = common.norm_apply(cfg.norm, params["norm1"], x)
+    acfg = cfg.attn_cfg(mode, causal)
+    new_cache = {}
+    if blk.kind == "attn":
+        if mode == "decode":
+            y, new_attn = attention.apply_decode(params["core"], acfg, h,
+                                                 cache["attn"], lengths)
+            new_cache["attn"] = new_attn
+        else:
+            y, c = attention.apply_prefill(
+                params["core"], acfg, h, positions,
+                make_cache=(mode == "prefill"), cache_len=cache_len)
+            if c is not None:
+                new_cache["attn"] = c
+    elif blk.kind == "mamba":
+        if mode == "decode":
+            y, c = ssm.apply_decode(params["core"], cfg.mamba, h,
+                                    cache["mamba"])
+            new_cache["mamba"] = c
+        else:
+            y, c = ssm.apply(params["core"], cfg.mamba, h,
+                             make_cache=(mode == "prefill"))
+            if c is not None:
+                new_cache["mamba"] = c
+    elif blk.kind == "mlstm":
+        xc = cfg.xlstm_cfg()
+        if mode == "decode":
+            y, c = xlstm.mlstm_decode(params["core"], xc, h, cache["mlstm"])
+            new_cache["mlstm"] = c
+        else:
+            y, c = xlstm.mlstm_apply(params["core"], xc, h,
+                                     make_cache=(mode == "prefill"))
+            if c is not None:
+                new_cache["mlstm"] = c
+    elif blk.kind == "slstm":
+        xc = cfg.xlstm_cfg()
+        if mode == "decode":
+            y, c = xlstm.slstm_decode(params["core"], xc, h, cache["slstm"])
+            new_cache["slstm"] = c
+        else:
+            y, c = xlstm.slstm_apply(params["core"], xc, h,
+                                     make_cache=(mode == "prefill"))
+            if c is not None:
+                new_cache["slstm"] = c
+    x = x + y
+
+    if blk.cross_attn:
+        if mode == "decode":
+            layer_cross = cache["cross"]        # built at prefill
+            new_cache["cross"] = layer_cross
+        elif enc_cache is not None:
+            # build this layer's cross K/V from the encoder output
+            layer_cross = attention.cross_encode(params["cross"], acfg,
+                                                 enc_cache)
+            if mode == "prefill":
+                new_cache["cross"] = layer_cross
+        else:
+            layer_cross = None
+        if layer_cross is not None:
+            hc = common.norm_apply(cfg.norm, params["norm_cross"], x)
+            yc = attention.cross_apply(params["cross"], acfg, hc,
+                                       layer_cross)
+            x = x + yc
+
+    if blk.ffn != "none":
+        h2 = common.norm_apply(cfg.norm, params["norm2"], x)
+        if blk.ffn == "moe":
+            y2, a = moe.apply(params["ffn"], cfg.moe, h2)
+            aux = aux + a * cfg.moe.aux_loss_weight
+        else:
+            y2 = mlp.apply(params["ffn"], cfg.mlp_cfg(), h2)
+        x = x + y2
+    return x, new_cache, aux
+
+
+def _superblock_init(key, cfg: ModelCfg, pattern, causal=True):
+    ks = jax.random.split(key, len(pattern))
+    return {f"b{i}": _block_init(ks[i], cfg, blk, causal)
+            for i, blk in enumerate(pattern)}
+
+
+def _superblock_axes(cfg: ModelCfg, pattern):
+    return {f"b{i}": _block_axes(cfg, blk) for i, blk in enumerate(pattern)}
+
+
+def _superblock_apply(params, cfg: ModelCfg, pattern, x, positions, *,
+                      mode, causal=True, caches=None, enc_cache=None,
+                      lengths=None, cache_len=None):
+    new_caches, aux_total = {}, jnp.zeros((), jnp.float32)
+    for i, blk in enumerate(pattern):
+        x, nc, aux = _block_apply(
+            params[f"b{i}"], cfg, blk, x, positions, mode=mode,
+            causal=causal, cache=caches[f"b{i}"] if caches else None,
+            enc_cache=enc_cache, lengths=lengths, cache_len=cache_len)
+        x = shd(x, "batch", "act_seq", "embed")
+        new_caches[f"b{i}"] = nc
+        aux_total = aux_total + aux
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Model init / axes
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelCfg):
+    ks = jax.random.split(key, 8)
+    vp = cfg.vocab_padded
+    p = {
+        "embed": common.truncated_normal_init(ks[0], (vp, cfg.d_model),
+                                              1.0, cfg.dtype),
+        "final_norm": common.norm_init(cfg.norm, cfg.d_model),
+        "out_head": common.truncated_normal_init(
+            ks[1], (cfg.d_model, vp), 1.0, cfg.dtype),
+    }
+    block_keys = jax.random.split(ks[2], cfg.n_repeat)
+    p["blocks"] = jax.vmap(
+        lambda k: _superblock_init(k, cfg, cfg.pattern, cfg.causal)
+    )(block_keys)
+    if cfg.enc_layers:
+        enc_pattern = (BlockCfg("attn", "dense"),)
+        enc_keys = jax.random.split(ks[3], cfg.enc_layers)
+        p["enc_blocks"] = jax.vmap(
+            lambda k: _superblock_init(k, cfg, enc_pattern, causal=False)
+        )(enc_keys)
+        p["enc_norm"] = common.norm_init(cfg.norm, cfg.d_model)
+    return p
+
+
+def axes(cfg: ModelCfg):
+    a = {
+        # Embedding sharded on the HIDDEN dim: the token gather then stays
+        # local per shard (no table all-gather, and the bwd scatter-add is
+        # sharded too). Vocab-dim sharding forces a full-table gather.
+        "embed": (None, "embed_tp"),
+        "final_norm": common.norm_axes(cfg.norm),
+        "out_head": ("embed_w", "vocab"),
+    }
+    blk = _superblock_axes(cfg, cfg.pattern)
+    a["blocks"] = jax.tree.map(lambda ax: ("layers",) + ax, blk,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    if cfg.enc_layers:
+        enc = _superblock_axes(cfg, (BlockCfg("attn", "dense"),))
+        a["enc_blocks"] = jax.tree.map(lambda ax: ("layers",) + ax, enc,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        a["enc_norm"] = common.norm_axes(cfg.norm)
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Forward paths
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelCfg, batch):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return shd(x, "batch", "act_seq", "embed")
+
+
+def _remat(fn, cfg: ModelCfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_stack(blocks, cfg: ModelCfg, pattern, x, positions, *, mode,
+               causal=True, caches=None, enc_cache=None, lengths=None,
+               cache_len=None):
+    """Scan the super-block over the repeat dim. Returns (x, caches, aux)."""
+
+    def body(carry, layer_in):
+        xc, aux_acc = carry
+        xc = shd(xc, "batch", "act_seq", "embed")  # pin the carry sharding
+        lp = layer_in["params"]
+        lc = layer_in.get("cache")
+        y, nc, aux = _superblock_apply(
+            lp, cfg, pattern, xc, positions, mode=mode, causal=causal,
+            caches=lc, enc_cache=enc_cache, lengths=lengths,
+            cache_len=cache_len)
+        y = shd(y, "batch", "act_seq", "embed")
+        return (y, aux_acc + aux), nc
+
+    body_fn = _remat(body, cfg) if mode == "train" else body
+    xs = {"params": blocks}
+    if caches is not None:
+        xs["cache"] = caches
+    (x, aux), new_caches = jax.lax.scan(body_fn, (x, jnp.zeros((),
+                                                               jnp.float32)),
+                                        xs)
+    return x, new_caches, aux
+
+
+def _logits(params, cfg: ModelCfg, x):
+    x = common.norm_apply(cfg.norm, params["final_norm"], x)
+    logits = jnp.einsum("bsh,hv->bsv", x, params["out_head"])
+    return shd(logits, "batch", "seq", "vocab")
+
+
+def _encode(params, cfg: ModelCfg, batch):
+    """Encoder stack (enc-dec models). Returns encoder output [B,S,H]."""
+    x = batch["enc_embeds"].astype(cfg.dtype) if "enc_embeds" in batch \
+        else jnp.take(params["embed"], batch["enc_tokens"], axis=0)
+    x = shd(x, "batch", "seq", "embed")
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, _, _ = _run_stack(params["enc_blocks"], cfg,
+                         (BlockCfg("attn", "dense"),), x, positions,
+                         mode="encode", causal=False)
+    return common.norm_apply(cfg.norm, params["enc_norm"], x)
+
+
+def loss_fn(params, cfg: ModelCfg, batch):
+    """Next-token CE loss (+ MoE aux + z-loss). batch: tokens|embeds, labels.
+
+    Returns (loss, metrics). Logits are computed in sequence chunks so the
+    [B, S, vocab] tensor never fully materializes.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    enc_cache = _encode(params, cfg, batch) if cfg.enc_layers else None
+    x, _, aux = _run_stack(params["blocks"], cfg, cfg.pattern, x, positions,
+                           mode="train", causal=cfg.causal,
+                           enc_cache=enc_cache)
+    x = common.norm_apply(cfg.norm, params["final_norm"], x)
+
+    labels = batch["labels"]
+    chunk = min(cfg.seq_loss_chunk, s)
+    while s % chunk:
+        chunk -= 1
+    n_chunks = s // chunk
+    vp = cfg.vocab_padded
+    vocab_ok = jnp.arange(vp) < cfg.vocab
+
+    def ce_chunk(_, inp):
+        xc, lc = inp                       # [B,chunk,H], [B,chunk]
+        logits = jnp.einsum("bsh,hv->bsv", xc, params["out_head"])
+        logits = shd(logits, "batch", "seq", "vocab").astype(jnp.float32)
+        logits = jnp.where(vocab_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        ce = ((lse - gold) * valid).sum()
+        zloss = (jnp.square(lse) * valid).sum()
+        return None, (ce, zloss, valid.sum())
+
+    xs = (jnp.moveaxis(x.reshape(-1, n_chunks, chunk, cfg.d_model), 1, 0),
+          jnp.moveaxis(labels.reshape(-1, n_chunks, chunk), 1, 0))
+    # remat each chunk: the [B,chunk,vocab] logits are recomputed in bwd.
+    _, (ces, zs, cnts) = jax.lax.scan(jax.checkpoint(ce_chunk), None, xs)
+    n_tok = jnp.maximum(cnts.sum(), 1.0)
+    ce = ces.sum() / n_tok
+    zloss = 1e-4 * zs.sum() / n_tok
+    loss = ce + zloss + aux
+    return loss, {"ce": ce, "aux": aux, "zloss": zloss, "tokens": n_tok}
+
+
+def prefill(params, cfg: ModelCfg, batch, *, cache_len: Optional[int] = None):
+    """Process the prompt; build caches. Returns (last_logits, caches)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    enc_cache = _encode(params, cfg, batch) if cfg.enc_layers else None
+    x, caches, _ = _run_stack(params["blocks"], cfg, cfg.pattern, x,
+                              positions, mode="prefill", causal=cfg.causal,
+                              enc_cache=enc_cache, cache_len=cache_len)
+    logits = _logits(params, cfg, x[:, -1:, :])
+    return logits[:, 0], {"layers": caches,
+                          "lengths": jnp.full((b,), s, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelCfg, tokens, cache):
+    """One decode step. tokens [B,1] -> (logits [B,vocab], new cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shd(x, "batch", "seq", "embed")
+    lengths = cache["lengths"]
+    x, new_caches, _ = _run_stack(params["blocks"], cfg, cfg.pattern, x,
+                                  lengths[:, None], mode="decode",
+                                  causal=cfg.causal,
+                                  caches=cache["layers"], lengths=lengths)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], {"layers": new_caches, "lengths": lengths + 1}

@@ -1,0 +1,55 @@
+"""Dense feed-forward blocks (gated SwiGLU / GeLU / Nemotron squared-ReLU)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.shardlib import shd
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPCfg:
+    d_model: int
+    d_ff: int
+    act: str = "silu"       # silu | gelu | relu | relu2
+    gated: bool = True      # SwiGLU-style w3 gate
+    dtype: jnp.dtype = jnp.bfloat16
+
+
+def init(key, cfg: MLPCfg):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": common.truncated_normal_init(ks[0], (cfg.d_model, cfg.d_ff),
+                                           1.0, cfg.dtype),
+        "w2": common.truncated_normal_init(ks[1], (cfg.d_ff, cfg.d_model),
+                                           1.0, cfg.dtype),
+    }
+    if cfg.gated:
+        p["w3"] = common.truncated_normal_init(ks[2], (cfg.d_model, cfg.d_ff),
+                                               1.0, cfg.dtype)
+    return p
+
+
+def axes(cfg: MLPCfg):
+    a = {"w1": ("embed_w", "mlp"), "w2": ("mlp", "embed_w")}
+    if cfg.gated:
+        a["w3"] = ("embed_w", "mlp")
+    return a
+
+
+def apply(params, cfg: MLPCfg, x):
+    """x [..., H] -> [..., H]; hidden activations sharded over 'mlp' (TP)."""
+    act = common.activation(cfg.act)
+    h = jnp.einsum("...h,hf->...f", x, params["w1"])
+    h = shd(h, "batch", "seq", "mlp")
+    h = act(h)
+    if cfg.gated:
+        g = jnp.einsum("...h,hf->...f", x, params["w3"])
+        g = shd(g, "batch", "seq", "mlp")
+        h = h * g
+    y = jnp.einsum("...f,fh->...h", h, params["w2"])
+    return shd(y, "batch", "act_seq", "embed")

@@ -1,0 +1,221 @@
+"""Chunked gated linear attention core + Mamba (SSD) block.
+
+The recurrence  h_t = a_t · h_{t-1} + B_t · X_tᵀ,   y_t = C_tᵀ h_t
+(with a_t a per-head scalar decay in (0, 1]) covers both Mamba-2/SSD selective
+SSMs and mLSTM matrix memories. Materializing h for every step costs
+O(S·n·p) memory — hopeless at 32k+ — so we use the SSD *chunked* form:
+within a chunk the contribution is an attention-like masked matmul
+(C Bᵀ ⊙ decay), across chunks a short scan carries the [n, p] state.
+Cost O(S·c·(n+p)) compute, O(c²) transient — TPU/MXU friendly.
+
+NOTE (DESIGN.md §2, changed assumptions): Jamba uses Mamba-1 (per-channel
+diagonal A). The chunk-parallel form requires per-head scalar decay, so we
+implement the Mamba-2/SSD structure — same selective-SSM family, TPU-native.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.shardlib import shd
+
+
+def chunked_linear_attention(c_read, b_write, x_val, log_a, *, chunk: int,
+                             h0=None):
+    """Run the gated linear-attention recurrence in chunk-parallel form.
+
+    c_read:  [B,S,H,n]  readout vectors (C / queries)
+    b_write: [B,S,H,n]  write vectors  (B / keys)
+    x_val:   [B,S,H,p]  values (input-gate and dt already folded in)
+    log_a:   [B,S,H]    log decay per step, <= 0
+    h0:      [B,H,n,p]  incoming state (decode/continuation), optional
+
+    Returns (y [B,S,H,p], h_final [B,H,n,p]); fp32 internally.
+    """
+    bsz, s, nh, n = c_read.shape
+    p = x_val.shape[-1]
+    if s % chunk:
+        raise ValueError(f"S={s} not divisible by chunk={chunk}")
+    nc = s // chunk
+
+    f32 = jnp.float32
+    cr = c_read.astype(f32).reshape(bsz, nc, chunk, nh, n)
+    bw = b_write.astype(f32).reshape(bsz, nc, chunk, nh, n)
+    xv = x_val.astype(f32).reshape(bsz, nc, chunk, nh, p)
+    la = log_a.astype(f32).reshape(bsz, nc, chunk, nh)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, n, p), f32)
+    else:
+        h0 = h0.astype(f32)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]          # τ <= t (lower triangular)
+
+    def step(h, inp):
+        crc, bwc, xvc, lac = inp                # [B,chunk,H,*]
+        L = jnp.cumsum(lac, axis=1)             # [B,chunk,H] inclusive
+        # intra-chunk: G[t,τ] = (C_t·B_τ)·exp(L_t − L_τ), τ <= t
+        dots = jnp.einsum("bthn,bshn->bhts", crc, bwc)
+        decay = jnp.exp(L[:, :, None, :] - L[:, None, :, :])  # [B,t,s,H]
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        g = dots * jnp.moveaxis(decay, 3, 1)    # [B,H,t,s]
+        y_intra = jnp.einsum("bhts,bshp->bthp", g, xvc)
+        # inter-chunk: y += exp(L_t) · C_t · h_prev
+        y_inter = jnp.einsum("bthn,bhnp->bthp", crc, h) \
+            * jnp.exp(L)[..., None]
+        # state update: h' = exp(L_T) h + Σ_τ exp(L_T − L_τ) B_τ X_τᵀ
+        w = jnp.exp(L[:, -1:, :] - L)           # [B,chunk,H]
+        h_new = h * jnp.exp(L[:, -1, :])[:, :, None, None] + \
+            jnp.einsum("bthn,bth,bthp->bhnp", bwc, w, xvc)
+        return h_new, y_intra + y_inter
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (cr, bw, xv, la))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nh, p)
+    return y, h_final
+
+
+def linear_attention_step(c_read, b_write, x_val, log_a, h):
+    """Single decode step. c/b [B,H,n], x [B,H,p], log_a [B,H], h [B,H,n,p]."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    h_new = h.astype(f32) * a + jnp.einsum(
+        "bhn,bhp->bhnp", b_write.astype(f32), x_val.astype(f32))
+    y = jnp.einsum("bhn,bhnp->bhp", c_read.astype(f32), h_new)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba (SSD) block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_model: int
+    expand: int = 2
+    head_dim: int = 64
+    d_state: int = 16
+    d_conv: int = 4
+    chunk: int = 256
+    dtype: jnp.dtype = jnp.bfloat16
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init(key, cfg: MambaCfg):
+    ks = jax.random.split(key, 8)
+    h, di, n, nh = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        "wx": common.truncated_normal_init(ks[0], (h, di), 1.0, cfg.dtype),
+        "wz": common.truncated_normal_init(ks[1], (h, di), 1.0, cfg.dtype),
+        "wb": common.truncated_normal_init(ks[2], (h, n), 1.0, cfg.dtype),
+        "wc": common.truncated_normal_init(ks[3], (h, n), 1.0, cfg.dtype),
+        "wdt": common.truncated_normal_init(ks[4], (h, nh), 1.0, cfg.dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.zeros((nh,), jnp.float32),   # A = exp(a_log) > 0
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "conv_w": common.truncated_normal_init(ks[5], (cfg.d_conv, di), 3.0,
+                                               cfg.dtype),
+        "conv_b": jnp.zeros((di,), cfg.dtype),
+        "wo": common.truncated_normal_init(ks[6], (di, h), 1.0, cfg.dtype),
+    }
+
+
+def axes(cfg: MambaCfg):
+    return {
+        "wx": ("embed_w", "mlp"), "wz": ("embed_w", "mlp"),
+        "wb": ("embed_w", "state"), "wc": ("embed_w", "state"),
+        "wdt": ("embed_w", "heads_ssm"), "dt_bias": ("heads_ssm",),
+        "a_log": ("heads_ssm",), "d_skip": ("heads_ssm",),
+        "conv_w": ("conv", "mlp"), "conv_b": ("mlp",),
+        "wo": ("mlp", "embed_w"),
+    }
+
+
+def _depthwise_conv(x, w, b, state=None):
+    """Causal depthwise conv over seq. x [B,S,di], w [K,di] -> [B,S,di].
+
+    If ``state`` [B,K-1,di] is given it is the left context (decode path
+    passes S=1); returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # [B, S+K-1, di]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def _gates(params, cfg: MambaCfg, xin):
+    """Shared projections. xin [B,S,H] -> conv-x, z, B, C, dt, log_a."""
+    x = jnp.einsum("bsh,hd->bsd", xin, params["wx"])
+    x = shd(x, "batch", "seq", "mlp")
+    z = jnp.einsum("bsh,hd->bsd", xin, params["wz"])
+    bmat = jnp.einsum("bsh,hn->bsn", xin, params["wb"]).astype(jnp.float32)
+    cmat = jnp.einsum("bsh,hn->bsn", xin, params["wc"]).astype(jnp.float32)
+    dt_raw = jnp.einsum("bsh,hn->bsn", xin, params["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])   # [B,S,nh] > 0
+    log_a = -dt * jnp.exp(params["a_log"])             # [B,S,nh] <= 0
+    return x, z, bmat, cmat, dt, log_a
+
+
+def apply(params, cfg: MambaCfg, xin, *, make_cache: bool = False):
+    """Mamba block over a full sequence. xin [B,S,H] -> (y, cache | None)."""
+    bsz, s, _ = xin.shape
+    nh, hd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    x, z, bmat, cmat, dt, log_a = _gates(params, cfg, xin)
+    x, conv_state = _depthwise_conv(x, params["conv_w"], params["conv_b"])
+    x = jax.nn.silu(x)
+
+    xh = x.reshape(bsz, s, nh, hd).astype(jnp.float32)
+    xv = xh * dt[..., None]                            # fold dt into X
+    cread = jnp.broadcast_to(cmat[:, :, None, :], (bsz, s, nh, n))
+    bwrite = jnp.broadcast_to(bmat[:, :, None, :], (bsz, s, nh, n))
+    chunk = min(cfg.chunk, s)
+    while s % chunk:
+        chunk -= 1
+    y, h_final = chunked_linear_attention(cread, bwrite, xv, log_a,
+                                          chunk=chunk)
+    y = y + xh * params["d_skip"][:, None]             # D skip per head
+    y = y.reshape(bsz, s, cfg.d_inner).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,dh->bsh", y, params["wo"])
+    out = shd(out, "batch", "act_seq", "embed")
+    cache = None
+    if make_cache:
+        cache = {"conv": conv_state,
+                 "state": h_final.astype(jnp.float32)}
+    return out, cache
+
+
+def apply_decode(params, cfg: MambaCfg, xin, cache):
+    """Single-token decode. xin [B,1,H] -> (y [B,1,H], new cache)."""
+    bsz = xin.shape[0]
+    nh, hd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    x, z, bmat, cmat, dt, log_a = _gates(params, cfg, xin)
+    x, conv_state = _depthwise_conv(x, params["conv_w"], params["conv_b"],
+                                    state=cache["conv"])
+    x = jax.nn.silu(x)
+    xh = x.reshape(bsz, nh, hd).astype(jnp.float32)
+    xv = xh * dt[:, 0, :, None]
+    cread = jnp.broadcast_to(cmat[:, 0, None, :], (bsz, nh, n))
+    bwrite = jnp.broadcast_to(bmat[:, 0, None, :], (bsz, nh, n))
+    y, h_new = linear_attention_step(cread, bwrite, xv, log_a[:, 0],
+                                     cache["state"])
+    y = y + xh * params["d_skip"][:, None]
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,dh->bsh", y, params["wo"])
+    return out, {"conv": conv_state, "state": h_new}

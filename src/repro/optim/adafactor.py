@@ -1,0 +1,122 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moment, no momentum.
+
+Optimizer state for an [*, a, b] weight is a row vector [*, a] plus a column
+vector [*, b] instead of a full second moment: ~0 bytes/param vs AdamW's
+4-8. This is what makes 314-398B training states fit 256 x 16 GB chips
+(EXPERIMENTS.md §Dry-run memory table); PaLM/T5 shipped on it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay: float = 0.8            # beta2 annealed: 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0   # update RMS clipping
+    weight_decay: float = 0.0
+    min_dim_factored: int = 128   # don't factor tiny trailing dims
+
+
+def _factored(p, cfg) -> bool:
+    return (p.ndim >= 2 and p.shape[-1] >= cfg.min_dim_factored
+            and p.shape[-2] >= cfg.min_dim_factored)
+
+
+def adafactor_init(params, cfg: AdafactorConfig):
+    def leaf(p):
+        if _factored(p, cfg):
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"slots": jax.tree.map(leaf, params), "step": jnp.zeros((),
+                                                                   jnp.int32)}
+
+
+def adafactor_axes(param_axes, param_sds, cfg: AdafactorConfig):
+    """Logical axes for the state tree (mirrors the params' axes)."""
+    def leaf(ax, p):
+        ax = tuple(ax)
+        if _factored(p, cfg):
+            return {"r": ax[:-1], "c": ax[:-2] + ax[-1:]}
+        return {"v": ax}
+
+    slots = jax.tree.map(leaf, param_axes, param_sds,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return {"slots": slots, "step": ()}
+
+
+def adafactor_update(params, grads, state, cfg: AdafactorConfig,
+                     lr_scale=1.0):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+    lr = cfg.lr * lr_scale
+
+    def upd(slot, p, g):
+        g32 = g.astype(jnp.float32)
+        sq = jnp.square(g32) + cfg.eps
+        if "r" in slot:
+            r = beta2 * slot["r"] + (1 - beta2) * sq.mean(axis=-1)
+            c = beta2 * slot["c"] + (1 - beta2) * sq.mean(axis=-2)
+            # vhat ≈ r cᵀ / mean(r)
+            denom = jnp.maximum(r.mean(axis=-1, keepdims=True), cfg.eps)
+            vhat = (r / denom)[..., None] * c[..., None, :]
+            new_slot = {"r": r, "c": c}
+        else:
+            vhat = beta2 * slot["v"] + (1 - beta2) * sq
+            new_slot = {"v": vhat}
+        u = g32 * jax.lax.rsqrt(vhat + cfg.eps)
+        # clip by update RMS
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (u + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), new_slot
+
+    def upd_maybe_chunked(slot, p, g):
+        # Layer-stacked giants update slice-by-slice, in place: only one
+        # layer's fp32 intermediates (g32/vhat/u/p32) are live at a time.
+        # The optimization_barrier pins the slice so XLA cannot hoist a
+        # whole-leaf fp32 convert out of the loop.
+        if not (p.size > (1 << 24) and p.ndim >= 3 and p.shape[0] > 1
+                and "r" in slot):
+            return upd(slot, p, g)
+
+        def body(i, carry):
+            pp, rr, cc = carry
+            gi = jax.lax.optimization_barrier(
+                jax.lax.dynamic_index_in_dim(g, i, 0, keepdims=False))
+            pi = jax.lax.dynamic_index_in_dim(pp, i, 0, keepdims=False)
+            si = {"r": jax.lax.dynamic_index_in_dim(rr, i, 0,
+                                                    keepdims=False),
+                  "c": jax.lax.dynamic_index_in_dim(cc, i, 0,
+                                                    keepdims=False)}
+            npi, nsi = upd(si, pi, gi)
+            put = lambda t, u: jax.lax.dynamic_update_index_in_dim(t, u, i,
+                                                                   0)
+            return (put(pp, npi), put(rr, nsi["r"]), put(cc, nsi["c"]))
+
+        pp, rr, cc = jax.lax.fori_loop(
+            0, p.shape[0], body, (p, slot["r"], slot["c"]))
+        return pp, {"r": rr, "c": cc}
+
+    is_slot = lambda x: isinstance(x, dict) and ("v" in x or "r" in x)
+    # traverse slots first (is_leaf stops at slot dicts); params/grads are
+    # leaf-aligned followers.
+    out = jax.tree.map(upd_maybe_chunked, state["slots"], params, grads,
+                       is_leaf=is_slot)
+    is_pair = lambda t: isinstance(t, tuple) and len(t) == 2 \
+        and not isinstance(t[0], tuple)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_slots = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return new_params, {"slots": new_slots, "step": step}, gn

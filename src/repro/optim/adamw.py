@@ -1,0 +1,137 @@
+"""AdamW in pure JAX: fp32 master weights optional, bf16 moments optional.
+
+Memory layout matters at 314-398B scale (see EXPERIMENTS.md §Dry-run):
+params bf16 + fp32 m/v = 10 bytes/param; with ``moment_dtype=bfloat16`` it is
+6 bytes/param, which is what lets grok-1/nemotron/jamba train states fit
+256 x 16 GB chips. Moments inherit the params' sharding (TP); DP-axis (ZeRO-1
+style) sharding of the states is applied by the launch layer through the
+axes tree, not here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32   # bf16 halves optimizer memory
+
+
+def _divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (1 if n is prime > cap)."""
+    best = 1
+    for d in range(1, cap + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _sqsum(x) -> jax.Array:
+    """Sum of squares in fp32 without materializing an fp32 copy of large
+    leaves — a fixed 32-chunk loop over the flattened array (not one slice
+    per leading index: a [vocab, d] leaf would loop 131k times)."""
+    # Chunk along dim 0 ONLY (slicing other layouts or flattening would
+    # re-shard — a flatten of a 2-D-sharded 100B-param leaf all-gathers it).
+    n_blk = _divisor_leq(x.shape[0], 32) if x.ndim >= 2 else 1
+    if x.size > (1 << 27) and n_blk > 1:
+        rows = x.shape[0] // n_blk
+
+        def body(i, acc):
+            # barrier pins the slice: XLA must not hoist a whole-leaf fp32
+            # convert out of the loop (2x leaf bytes at 314B scale).
+            sl = jax.lax.optimization_barrier(
+                jax.lax.dynamic_slice_in_dim(x, i * rows, rows, 0))
+            return acc + jnp.sum(jnp.square(sl.astype(jnp.float32)))
+
+        return jax.lax.fori_loop(0, n_blk, body,
+                                 jnp.zeros((), jnp.float32))
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(_sqsum(l) for l in jax.tree.leaves(tree)))
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr_scale: jax.Array | float = 1.0):
+    """One AdamW step with global-norm clipping. Returns (params, state, gn).
+
+    All math in fp32; params are cast back to their storage dtype.
+    """
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd_leaf(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * p32)
+        return (p32.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                v32.astype(cfg.moment_dtype))
+
+    def upd(p, g, m, v):
+        # Very large (layer-stacked) leaves update in place, a block of
+        # leading rows at a time (fori_loop + dynamic_update_slice aliases
+        # the donated buffers) — the whole-leaf form keeps ~6 fp32 copies
+        # alive (1.6 GB/copy at 314B scale). Block count is a divisor of
+        # the leading dim capped at 64 so the loop never degenerates to
+        # one-row-per-step.
+        n_blk = _divisor_leq(p.shape[0], 64) if p.ndim >= 2 else 1
+        if p.size > (1 << 27) and n_blk > 1:
+            rows = p.shape[0] // n_blk
+
+            def body(i, carry):
+                pp, mm, vv = carry
+                idx = lambda t: jax.lax.dynamic_slice_in_dim(
+                    t, i * rows, rows, 0)
+                npi, nmi, nvi = upd_leaf(idx(pp), idx(g), idx(mm), idx(vv))
+                put = lambda t, u: jax.lax.dynamic_update_slice_in_dim(
+                    t, u, i * rows, 0)
+                return (put(pp, npi), put(mm, nmi), put(vv, nvi))
+
+            return jax.lax.fori_loop(0, n_blk, body, (p, m, v))
+        return upd_leaf(p, g, m, v)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gn
+
+
+def opt_axes(param_axes):
+    """Axes tree for the optimizer state (moments mirror the params)."""
+    return {"m": param_axes, "v": param_axes, "step": ()}

@@ -1,0 +1,109 @@
+"""Gradient compression with error feedback — for the cross-pod reduction.
+
+Intra-pod gradients reduce over fast ICI; the pod axis crosses DCN where
+bandwidth is the bottleneck at 1000+ node scale. Two standard compressors:
+
+  * int8 block quantization (32x128-block absmax scales) — 4x traffic cut;
+  * top-k magnitude sparsification — k/N traffic.
+
+Both keep a local error-feedback residual so the compression bias vanishes
+over steps (Karimireddy et al., 2019). Used by the train loop when
+``compress_pod_grads`` is on; unit tests check exact-ish convergence of the
+EF loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionCfg:
+    kind: str = "int8"          # int8 | topk | none
+    block: int = 256            # int8 scale-block length
+    topk_ratio: float = 0.05
+
+
+def _int8_compress(x, block):
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_decompress(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for d in shape:
+        size *= d
+    return flat[:size].reshape(shape)
+
+
+def _topk_compress(x, ratio):
+    flat = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    del vals
+    return flat[idx], idx
+
+
+def _topk_decompress(vals, idx, shape):
+    size = 1
+    for d in shape:
+        size *= d
+    return jnp.zeros((size,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+def compress_leaf(g, ef, cfg: CompressionCfg):
+    """Error-feedback compression of one gradient leaf.
+
+    Returns (decompressed gradient to feed the reducer, new residual).
+    The *decompressed* value is what every participant reduces — identical
+    on all of them — so reduce(compress(g)) stays a valid collective.
+    """
+    g32 = g.astype(jnp.float32) + (ef if ef is not None else 0.0)
+    if cfg.kind == "int8":
+        q, scale = _int8_compress(g32, cfg.block)
+        ghat = _int8_decompress(q, scale, g32.shape)
+    elif cfg.kind == "topk":
+        vals, idx = _topk_compress(g32, cfg.topk_ratio)
+        ghat = _topk_decompress(vals, idx, g32.shape)
+    else:
+        return g32.astype(g.dtype), jnp.zeros_like(g32)
+    resid = g32 - ghat
+    return ghat.astype(g.dtype), resid
+
+
+def compress_tree(grads, ef_state, cfg: CompressionCfg):
+    """Apply EF compression leaf-wise. ef_state None -> zeros."""
+    if ef_state is None:
+        ef_state = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    pairs = jax.tree.map(lambda g, e: compress_leaf(g, e, cfg), grads,
+                         ef_state)
+    is_pair = lambda t: isinstance(t, tuple) and len(t) == 2
+    ghat = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    ef = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return ghat, ef
+
+
+def compressed_bytes(grads, cfg: CompressionCfg) -> int:
+    """Wire bytes after compression (for the collective roofline term)."""
+    total = 0
+    for leaf in jax.tree.leaves(grads):
+        n = leaf.size
+        if cfg.kind == "int8":
+            total += n + 4 * (n // cfg.block + 1)
+        elif cfg.kind == "topk":
+            k = max(1, int(n * cfg.topk_ratio))
+            total += 8 * k
+        else:
+            total += 4 * n
+    return total

@@ -1,0 +1,17 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 200, total: int = 10000,
+                  min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio. Returns a scale in
+    (0, 1] multiplying the base LR."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(1.0, warmup)
+    progress = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup),
+                        0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,3 @@
+from repro.runtime.train_loop import TrainLoopCfg, train_loop
+
+__all__ = ["TrainLoopCfg", "train_loop"]

@@ -1,0 +1,3 @@
+from repro.serving.engine import EngineCfg, ServingEngine
+
+__all__ = ["EngineCfg", "ServingEngine"]

@@ -1,0 +1,141 @@
+"""Batched serving engine with continuous batching (slot-based).
+
+The engine owns a fixed pool of ``max_batch`` sequence slots over a shared
+KV cache (the LM's cache pytree, batch dim = slots). Requests are admitted
+into free slots as others finish — continuous batching — so decode steps
+always run at full tensor shapes (static compile). STAR sparse decode is
+whatever the model config says (cfg.star): the engine is sparsity-agnostic.
+
+Single-step flow:
+  admit()  — fill free slots from the queue: per-slot prefill, cache splice
+  step()   — one fused decode for all active slots
+  reap()   — emit finished sequences (EOS or max_tokens), free slots
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [T] int32
+    max_tokens: int = 32
+    out: Optional[list] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCfg:
+    max_batch: int = 8
+    max_len: int = 512
+    eos_id: int = 1
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class ServingEngine:
+    def __init__(self, model_cfg, params, ecfg: EngineCfg,
+                 rng: Optional[jax.Array] = None):
+        self.cfg = model_cfg
+        self.ecfg = ecfg
+        self.params = params
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}      # slot -> request
+        self.budget: dict[int, int] = {}          # slot -> remaining tokens
+        b, L = ecfg.max_batch, ecfg.max_len
+
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(p, model_cfg, t, c))
+        self._prefill_one = jax.jit(
+            lambda p, batch: lm.prefill(p, model_cfg, batch, cache_len=L))
+
+        # slot-pool cache: prefill a dummy batch once to get the structure
+        dummy = {"tokens": jnp.zeros((b, 8), jnp.int32)} \
+            if not model_cfg.embeds_input else \
+            {"embeds": jnp.zeros((b, 8, model_cfg.d_model), jnp.bfloat16)}
+        _, cache = self._prefill_one(params, dummy)
+        self.cache = cache
+        self.cache["lengths"] = jnp.zeros((b,), jnp.int32)
+        self.last_token = jnp.zeros((b, 1), jnp.int32)
+        self.free = list(range(b))
+
+    # -- queueing -----------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _splice_slot(self, slot: int, cache_one, length: int, token: int):
+        """Write a single prefilled sequence into the pool at ``slot``."""
+        def put(pool, one):
+            return pool.at[:, slot].set(one[:, 0]) if pool.ndim >= 2 else pool
+
+        self.cache["layers"] = jax.tree.map(
+            put, self.cache["layers"], cache_one["layers"])
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(length)
+        self.last_token = self.last_token.at[slot, 0].set(token)
+
+    def admit(self):
+        while self.free and self.queue:
+            req = self.queue.pop(0)
+            slot = self.free.pop(0)
+            t = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+            logits, cache_one = self._prefill_one(self.params, batch)
+            tok = int(jnp.argmax(logits[0, :self.cfg.vocab]))
+            req.out.append(tok)
+            self._splice_slot(slot, cache_one, t, tok)
+            self.active[slot] = req
+            self.budget[slot] = req.max_tokens - 1
+
+    # -- decode -------------------------------------------------------------
+
+    def step(self):
+        if not self.active:
+            return
+        logits, self.cache = self._decode(self.params, self.last_token,
+                                          self.cache)
+        logits = logits[:, :self.cfg.vocab]
+        if self.ecfg.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            self.rng, sub = jax.random.split(self.rng)
+            nxt = jax.random.categorical(
+                sub, logits / self.ecfg.temperature, axis=-1)
+        self.last_token = nxt[:, None].astype(jnp.int32)
+        nxt_host = np.asarray(nxt)
+        for slot, req in list(self.active.items()):
+            tok = int(nxt_host[slot])
+            req.out.append(tok)
+            self.budget[slot] -= 1
+            done = tok == self.ecfg.eos_id or self.budget[slot] <= 0 or \
+                int(self.cache["lengths"][slot]) >= self.ecfg.max_len - 1
+            if done:
+                del self.active[slot]
+                del self.budget[slot]
+                self.free.append(slot)
+                yield req
+
+    # -- driver -------------------------------------------------------------
+
+    def run(self, requests: list[Request], max_steps: int = 10_000):
+        """Serve a request list to completion; returns {rid: tokens}."""
+        for r in requests:
+            self.submit(r)
+        done: dict[int, list] = {}
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.admit()
+            for fin in self.step() or ():
+                done[fin.rid] = fin.out
+            steps += 1
+        return done

@@ -1,0 +1,123 @@
+"""Unit + property tests for DLZS (log-domain sparsity prediction)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dlzs
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_pow2_exact_on_powers_of_two():
+    x = jnp.array([1.0, 2.0, 0.5, -4.0, 0.0, -0.25])
+    q = dlzs.pow2_quantize(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
+
+
+def test_pow2_ratio_bounds():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4096,)) * 10.0
+    q = dlzs.pow2_quantize(x)
+    ratio = np.asarray(q / x)
+    assert np.all(ratio > 0.5 - 1e-6) and np.all(ratio <= 1.0 + 1e-6)
+    assert np.all(np.sign(np.asarray(q)) == np.sign(np.asarray(x)))
+
+
+@hypothesis.given(hnp.arrays(np.float32, (64,),
+                             elements=st.floats(-1e4, 1e4, width=32,
+                                                allow_nan=False)))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_pow2_never_overshoots(x):
+    q = np.asarray(dlzs.pow2_quantize(jnp.asarray(x)))
+    assert np.all(np.abs(q) <= np.abs(x) + 1e-6)
+    nz = x != 0
+    assert np.all(np.abs(q[nz]) >= np.abs(x[nz]) / 2 - 1e-6)
+
+
+def test_lz_pack_roundtrip():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (512,), jnp.float32)
+    code = dlzs.lz_pack(x)
+    assert code.dtype == jnp.int8
+    decoded = dlzs.lz_unpack(code, jnp.float32)
+    expected = dlzs.pow2_quantize(x)
+    np.testing.assert_allclose(np.asarray(decoded), np.asarray(expected),
+                               rtol=1e-6)
+
+
+def test_lz_pack_zero_and_extremes():
+    x = jnp.array([0.0, 1e-30, -1e30, 1.0], jnp.float32)
+    decoded = dlzs.lz_unpack(dlzs.lz_pack(x), jnp.float32)
+    assert decoded[0] == 0.0
+    assert np.isfinite(np.asarray(decoded)).all()
+
+
+def test_dlzs_beats_slzs_score_error():
+    """Differential (one-sided) quantization must be more accurate than
+    symmetric (both-sided) — the paper's accuracy claim (Fig. 8b)."""
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (64, 64))
+    k = jax.random.normal(jax.random.PRNGKey(3), (256, 64))
+    exact = q @ k.T
+    d_err = jnp.abs(dlzs.dlzs_scores(q, dlzs.pow2_quantize(k)) - exact).mean()
+    s_err = jnp.abs(dlzs.slzs_scores(q, k) - exact).mean()
+    assert float(d_err) < float(s_err)
+
+
+def test_dlzs_topk_hit_rate():
+    """Predicted top-20% should overlap heavily with the true top-20% on
+    peaked (attention-like) score rows."""
+    key = jax.random.PRNGKey(4)
+    d, s = 64, 512
+    q = jax.random.normal(key, (16, d))
+    k = jax.random.normal(jax.random.PRNGKey(5), (s, d))
+    # Make some keys dominant (Type I/II rows from the paper's Fig. 9).
+    k = k.at[:32].mul(4.0)
+    exact = q @ k.T
+    approx = dlzs.dlzs_scores(q, dlzs.pow2_quantize(k))
+    kk = int(0.2 * s)
+    hit = 0.0
+    for r in range(16):
+        ti = set(np.argsort(np.asarray(exact[r]))[-kk:].tolist())
+        pi = set(np.argsort(np.asarray(approx[r]))[-kk:].tolist())
+        hit += len(ti & pi) / kk
+    assert hit / 16 > 0.75
+
+
+def test_predict_khat_matches_manual():
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (32, 48))
+    wk = jax.random.normal(jax.random.PRNGKey(7), (48, 16))
+    khat = dlzs.predict_khat(x, dlzs.pow2_quantize(wk))
+    np.testing.assert_allclose(np.asarray(khat),
+                               np.asarray(x @ dlzs.pow2_quantize(wk)),
+                               rtol=1e-5)
+
+
+def test_int_domain_consistency():
+    """Int-domain sign·2^(W−1−LZ) equals the float pow2 path after scaling."""
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (256,))
+    xi, scale = dlzs.int_quantize(x, w=8)
+    recon = dlzs.int_dlzs_value(xi, w=8) * scale
+    # Reconstruction ratio vs the quantized int value in (1/2, 1].
+    nz = np.asarray(xi) != 0
+    ratio = np.asarray(recon)[nz] / (np.asarray(xi)[nz] * float(scale))
+    assert np.all(ratio > 0.5 - 1e-5) and np.all(ratio <= 1.0 + 1e-5)
+    lz = dlzs.int_lz(xi, w=8)
+    assert int(lz.min()) >= 1 and int(lz.max()) <= 8
+
+
+def test_bf16_inputs_supported():
+    x = jax.random.normal(jax.random.PRNGKey(9), (128,)).astype(jnp.bfloat16)
+    q = dlzs.pow2_quantize(x)
+    assert q.dtype == jnp.bfloat16
+    ratio = np.asarray((q.astype(jnp.float32) /
+                        jnp.where(x == 0, 1, x).astype(jnp.float32)))
+    nz = np.asarray(x != 0)
+    assert np.all(ratio[nz] > 0.49) and np.all(ratio[nz] <= 1.01)

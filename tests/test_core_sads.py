@@ -1,0 +1,120 @@
+"""Unit + property tests for SADS (distributed segmented top-k + sphere)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sads
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_select_indices_are_segment_local_topk():
+    key = jax.random.PRNGKey(0)
+    scores = jax.random.normal(key, (512,))
+    sel = sads.sads_select(scores, k_total=64, n_segments=4, radius=100.0)
+    npscores = np.asarray(scores)
+    for seg in range(4):
+        seg_idx = np.asarray(sel.indices[seg * 16:(seg + 1) * 16])
+        assert np.all((seg_idx >= seg * 128) & (seg_idx < (seg + 1) * 128))
+        true_top = np.sort(np.argsort(npscores[seg * 128:(seg + 1) * 128])
+                           [-16:] + seg * 128)
+        assert set(true_top.tolist()) == set(seg_idx.tolist())
+
+
+def test_sphere_radius_prunes_distant_elements():
+    scores = jnp.full((128,), -20.0).at[5].set(10.0).at[70].set(9.0)
+    sel = sads.sads_select(scores, k_total=8, n_segments=2, radius=5.0)
+    vals = np.asarray(sel.values)
+    valid = np.asarray(sel.valid)
+    # Only the two spikes survive; everything >r below a segment max is cut.
+    assert valid.sum() == 2
+    assert set(np.asarray(sel.indices)[valid].tolist()) == {5, 70}
+    assert np.all(vals[valid] >= 8.9)
+
+
+def test_radius_justification_softmax_mass():
+    """Paper Eq. 5: softmax of an element r below the max is < e^-r."""
+    r = 5.0
+    x = jnp.array([0.0, -r])
+    p = jax.nn.softmax(x)
+    assert float(p[1]) < float(jnp.exp(-r))
+    assert float(p[1]) < 0.0067  # the paper's quoted bound at r=5
+
+
+@hypothesis.given(st.integers(1, 8).map(lambda n: 2 ** n))
+@hypothesis.settings(deadline=None, max_examples=8)
+def test_select_valid_never_out_of_range(n_segments):
+    s = 1024
+    scores = jax.random.normal(jax.random.PRNGKey(n_segments), (s,))
+    k = max(n_segments, 128)
+    sel = sads.sads_select(scores, k_total=k, n_segments=n_segments,
+                           radius=5.0)
+    idx = np.asarray(sel.indices)
+    assert np.all((idx >= 0) & (idx < s))
+    # indices unique within each row
+    assert len(np.unique(idx)) == k
+
+
+def test_block_selection_descending_order():
+    key = jax.random.PRNGKey(1)
+    scores = jax.random.normal(key, (256, 1024))
+    sel = sads.sads_select_blocks(scores, block_q=64, block_kv=128, keep=4)
+    bmax = np.asarray(sel.block_max)
+    assert np.all(np.diff(bmax, axis=-1) <= 1e-6), "not descending"
+    # top-1 block must contain the global row max of each q tile
+    full = np.asarray(scores).reshape(4, 64, 8, 128)
+    gmax = full.max(axis=(1, 3))
+    np.testing.assert_allclose(bmax[:, 0], gmax.max(axis=-1), rtol=1e-6)
+
+
+def test_block_selection_causal_masks_future_tiles():
+    scores = jnp.ones((256, 256)) * 5.0
+    sel = sads.sads_select_blocks(scores, block_q=64, block_kv=64, keep=4,
+                                  causal=True)
+    idx = np.asarray(sel.block_idx)
+    valid = np.asarray(sel.block_valid)
+    for qt in range(4):
+        visible = idx[qt][valid[qt]]
+        assert np.all(visible <= qt), f"future tile selected for qtile {qt}"
+
+
+def test_block_selection_keep_larger_than_tiles_clamps():
+    scores = jnp.ones((128, 256))
+    sel = sads.sads_select_blocks(scores, block_q=64, block_kv=64, keep=32)
+    assert sel.block_idx.shape[-1] == 4  # clamped to n_kt
+
+
+def test_gather_blocks_shapes_and_content():
+    kv = jnp.arange(8 * 4 * 2, dtype=jnp.float32).reshape(32, 2)
+    blk = jnp.array([[3, 0], [1, 2]])
+    g = sads.gather_blocks(kv, blk, block_kv=8)
+    assert g.shape == (2, 2, 8, 2)
+    np.testing.assert_array_equal(np.asarray(g[0, 0]), np.asarray(kv[24:32]))
+    np.testing.assert_array_equal(np.asarray(g[1, 1]), np.asarray(kv[16:24]))
+
+
+def test_gather_selected():
+    kv = jnp.arange(20, dtype=jnp.float32).reshape(10, 2)
+    out = sads.gather_selected(kv, jnp.array([9, 0, 3]))
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), [18.0, 0.0, 6.0])
+
+
+def test_sphere_stats_bounds():
+    scores = jax.random.normal(jax.random.PRNGKey(2), (64, 1024))
+    rho = float(sads.sphere_stats(scores, n_segments=8, radius=5.0))
+    assert 0.0 < rho <= 1.0
+    rho_tight = float(sads.sphere_stats(scores, n_segments=8, radius=0.5))
+    assert rho_tight < rho
+
+
+def test_batched_leading_dims():
+    scores = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 512))
+    sel = sads.sads_select(scores, 64, 4, 5.0)
+    assert sel.indices.shape == (2, 3, 64)
+    selb = sads.sads_select_blocks(scores.reshape(6, 512, 1).repeat(128, -1)
+                                   .transpose(0, 2, 1)[:, :256],
+                                   block_q=128, block_kv=128, keep=2)
+    assert selb.block_idx.shape[0] == 6

@@ -1,0 +1,145 @@
+"""End-to-end STAR pipeline tests (DLZS -> SADS -> SU-FA) + decode path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dlzs
+from repro.core.star_attention import (STARConfig, dense_attention,
+                                       star_attention,
+                                       star_attention_batched, star_decode)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _qkv(t, s, d, seed=0, peaked=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (t, d), jnp.float32)
+    k = jax.random.normal(ks[1], (s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (s, d), jnp.float32)
+    if peaked:
+        k = k.at[: s // 16].mul(3.0)
+    return q, k, v
+
+
+def test_full_ratio_equals_dense_noncausal():
+    q, k, v = _qkv(256, 512, 64, peaked=False)
+    cfg = STARConfig(top_k_ratio=1.0, block_q=64, block_kv=64, radius=1e9)
+    out = star_attention(q, k, v, cfg, causal=False)
+    ref = dense_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_full_ratio_equals_dense_causal():
+    q, k, v = _qkv(512, 512, 64, peaked=False)
+    cfg = STARConfig(top_k_ratio=1.0, block_q=64, block_kv=64, radius=1e9)
+    out = star_attention(q, k, v, cfg, causal=True)
+    ref = dense_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_causal_first_tile_not_nan():
+    """Row 0 sees exactly one key; sparse selection must keep it finite."""
+    q, k, v = _qkv(256, 256, 32, seed=1)
+    cfg = STARConfig(top_k_ratio=0.25, block_q=64, block_kv=64)
+    out = star_attention(q, k, v, cfg, causal=True)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("ratio", [0.125, 0.25, 0.5])
+def test_sparse_output_close_on_peaked_data(ratio):
+    """On attention-like (strongly peaked, Type I) data, STAR ~ dense."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1024, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1024, 64), jnp.float32)
+    k = k.at[:64].mul(6.0)  # Type I: a few highly dominant tokens
+    cfg = STARConfig(top_k_ratio=ratio, block_q=64, block_kv=64, radius=1e9)
+    out = star_attention(q, k, v, cfg, causal=False)
+    ref = dense_attention(q, k, v, causal=False)
+    err = np.linalg.norm(np.asarray(out) - np.asarray(ref)) / \
+        np.linalg.norm(np.asarray(ref))
+    assert err < 0.35, f"relative error {err} at ratio {ratio}"
+
+
+def test_more_budget_monotonically_closer():
+    q, k, v = _qkv(256, 1024, 64, seed=3)
+    ref = np.asarray(dense_attention(q, k, v, causal=False))
+    errs = []
+    for ratio in (0.125, 0.5, 1.0):
+        cfg = STARConfig(top_k_ratio=ratio, block_q=64, block_kv=64,
+                         radius=1e9)
+        out = np.asarray(star_attention(q, k, v, cfg, causal=False))
+        errs.append(np.linalg.norm(out - ref))
+    assert errs[0] >= errs[1] >= errs[2] - 1e-6
+
+
+def test_scan_and_gathered_paths_agree():
+    q, k, v = _qkv(256, 512, 64, seed=4)
+    cfg_g = STARConfig(top_k_ratio=0.25, block_q=64, block_kv=64,
+                       use_scan=False)
+    cfg_s = STARConfig(top_k_ratio=0.25, block_q=64, block_kv=64,
+                       use_scan=True, strict=True)
+    a = star_attention(q, k, v, cfg_g, causal=True)
+    b = star_attention(q, k, v, cfg_s, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_elementwise_sphere_tightens():
+    q, k, v = _qkv(256, 512, 64, seed=5)
+    cfg = STARConfig(top_k_ratio=0.5, block_q=64, block_kv=64, radius=2.0,
+                     elementwise=True)
+    out = star_attention(q, k, v, cfg, causal=False)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_batched_wrapper():
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 4, 128, 32))
+    k = jax.random.normal(ks[1], (2, 4, 256, 32))
+    v = jax.random.normal(ks[2], (2, 4, 256, 32))
+    cfg = STARConfig(top_k_ratio=0.5, block_q=64, block_kv=64)
+    out = star_attention_batched(q, k, v, cfg, causal=False)
+    assert out.shape == (2, 4, 128, 32)
+    ref = star_attention(q[1, 2], k[1, 2], v[1, 2], cfg, causal=False)
+    np.testing.assert_allclose(np.asarray(out[1, 2]), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_full_budget_matches_dense():
+    _, k, v = _qkv(1, 512, 64, seed=7)
+    q = jax.random.normal(jax.random.PRNGKey(8), (64,))
+    cfg = STARConfig(top_k_ratio=1.0, block_kv=64, radius=1e9)
+    out = star_decode(q, k, v, cfg, length=512)
+    ref = dense_attention(q[None], k, v, causal=False)[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_decode_respects_length():
+    """Keys beyond `length` must not influence the output."""
+    _, k, v = _qkv(1, 512, 64, seed=9)
+    q = jax.random.normal(jax.random.PRNGKey(10), (64,))
+    cfg = STARConfig(top_k_ratio=0.5, block_kv=64)
+    out_a = star_decode(q, k, v, cfg, length=256)
+    k2 = k.at[256:].set(99.0)
+    v2 = v.at[256:].set(-99.0)
+    out_b = star_decode(q, k2, v2, cfg, length=256)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                               rtol=1e-6)
+
+
+def test_decode_with_lz_cache():
+    """Prediction from the int8 LZ cache must agree with on-the-fly pow2."""
+    _, k, v = _qkv(1, 512, 64, seed=11)
+    q = jax.random.normal(jax.random.PRNGKey(12), (64,))
+    cfg = STARConfig(top_k_ratio=0.25, block_kv=64)
+    k_lz = dlzs.lz_pack(k)
+    out_a = star_decode(q, k, v, cfg, length=512, k_lz=k_lz)
+    out_b = star_decode(q, k, v, cfg, length=512)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,129 @@
+"""SU-FA tests: strict scan == oracle, fast path bounded, gathered == oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sads, sufa
+from repro.core.star_attention import STARConfig, dense_attention
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _setup(t=256, s=512, d=64, seed=0, peaked=True):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(keys[0], (t, d), jnp.float32)
+    k = jax.random.normal(keys[1], (s, d), jnp.float32)
+    v = jax.random.normal(keys[2], (s, d), jnp.float32)
+    if peaked:  # attention-like: a few dominant keys (paper Type I/II)
+        k = k.at[: s // 16].mul(3.0)
+    return q, k, v
+
+
+@pytest.mark.parametrize("keep", [1, 2, 4])
+def test_strict_scan_matches_masked_oracle(keep):
+    q, k, v = _setup()
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = (q @ k.T) * scale
+    sel = sads.sads_select_blocks(scores, 64, 64, keep=keep, radius=1e9)
+    out = sufa.sufa_scan(q, k, v, sel, scale=scale, block_q=64, block_kv=64,
+                         strict=True)
+    mask = sufa.selection_to_mask(sel, q.shape[0], k.shape[0], 64, 64)
+    ref = sufa.masked_attention_ref(q, k, v, mask, scale=scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gathered_matches_masked_oracle():
+    q, k, v = _setup(seed=1)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = (q @ k.T) * scale
+    sel = sads.sads_select_blocks(scores, 64, 64, keep=3, radius=1e9)
+    out = sufa.sufa_gathered(q, k, v, sel, scale=scale, block_q=64,
+                             block_kv=64)
+    mask = sufa.selection_to_mask(sel, q.shape[0], k.shape[0], 64, 64)
+    ref = sufa.masked_attention_ref(q, k, v, mask, scale=scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fast_path_close_when_sorted():
+    """Descend updating (no rescale) must track strict closely when selection
+    order is correct — the first-visited tile holds the true max."""
+    q, k, v = _setup(seed=2)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = (q @ k.T) * scale  # exact prediction -> perfectly sorted tiles
+    sel = sads.sads_select_blocks(scores, 64, 64, keep=4, radius=1e9)
+    strict = sufa.sufa_scan(q, k, v, sel, scale=scale, block_q=64,
+                            block_kv=64, strict=True)
+    fast = sufa.sufa_scan(q, k, v, sel, scale=scale, block_q=64,
+                          block_kv=64, strict=False)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(strict),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fast_path_bounded_under_misprediction():
+    """With noisy (DLZS-like) prediction the frozen max can be wrong by the
+    prediction error; the output must stay within a small relative error."""
+    from repro.core import dlzs
+    q, k, v = _setup(seed=3)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s_hat = dlzs.dlzs_scores(q, dlzs.pow2_quantize(k), scale)
+    sel = sads.sads_select_blocks(s_hat, 64, 64, keep=4, radius=1e9)
+    strict = sufa.sufa_scan(q, k, v, sel, scale=scale, block_q=64,
+                            block_kv=64, strict=True)
+    fast = sufa.sufa_scan(q, k, v, sel, scale=scale, block_q=64,
+                          block_kv=64, strict=False)
+    err = np.abs(np.asarray(fast) - np.asarray(strict)).max()
+    ref_mag = np.abs(np.asarray(strict)).max()
+    assert err / ref_mag < 0.15, f"descend-updating error too large: {err}"
+
+
+def test_full_selection_equals_dense():
+    """keep = all tiles + infinite radius must reproduce dense attention."""
+    q, k, v = _setup(seed=4, peaked=False)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = (q @ k.T) * scale
+    n_kt = k.shape[0] // 64
+    sel = sads.sads_select_blocks(scores, 64, 64, keep=n_kt, radius=1e9)
+    out = sufa.sufa_scan(q, k, v, sel, scale=scale, block_q=64, block_kv=64,
+                         strict=True)
+    ref = dense_attention(q, k, v, causal=False, scale=scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_invalid_blocks_are_ignored():
+    q, k, v = _setup(seed=5)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = (q @ k.T) * scale
+    sel = sads.sads_select_blocks(scores, 64, 64, keep=4, radius=1e9)
+    # Invalidate the last two slots; result must equal a 2-block selection.
+    sel2 = sads.BlockSelection(sel.block_idx,
+                               sel.block_valid.at[:, 2:].set(False),
+                               sel.block_max)
+    out = sufa.sufa_scan(q, k, v, sel2, scale=scale, block_q=64, block_kv=64,
+                         strict=True)
+    sel_ref = sads.sads_select_blocks(scores, 64, 64, keep=2, radius=1e9)
+    ref = sufa.sufa_scan(q, k, v, sel_ref, scale=scale, block_q=64,
+                         block_kv=64, strict=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_elem_mask_scan_vs_gathered():
+    q, k, v = _setup(seed=6)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = (q @ k.T) * scale
+    sel = sads.sads_select_blocks(scores, 64, 64, keep=4, radius=1e9)
+    emask = jax.random.bernoulli(jax.random.PRNGKey(7), 0.8,
+                                 (4, 4, 64, 64))
+    # guarantee every row keeps at least one element in its best block
+    emask = emask.at[:, 0, :, 0].set(True)
+    a = sufa.sufa_scan(q, k, v, sel, scale=scale, block_q=64, block_kv=64,
+                       strict=True, elem_mask=emask)
+    b = sufa.sufa_gathered(q, k, v, sel, scale=scale, block_q=64,
+                           block_kv=64, elem_mask=emask)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)

@@ -1,0 +1,73 @@
+"""Validate the HLO cost model against analytically known programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_exact():
+    m, k, n = 64, 128, 32
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    txt = _compile_text(lambda a, b: a @ b, a, b)
+    costs = analyze_hlo(txt, 1)
+    assert costs.flops == 2 * m * k * n
+    # bytes: at least the three tensors once
+    assert costs.bytes >= 4 * (m * k + k * n + m * n)
+
+
+def test_scan_multiplies_by_trip_count():
+    """THE critical property: a matmul inside lax.scan counts trip x."""
+    m = 32
+    a = jnp.zeros((m, m), jnp.float32)
+    trips = 17
+
+    def f(a):
+        def body(c, _):
+            return c @ c, None
+        c, _ = jax.lax.scan(body, a, None, length=trips)
+        return c
+
+    txt = _compile_text(f, a)
+    costs = analyze_hlo(txt, 1)
+    assert costs.flops == trips * 2 * m ** 3, \
+        f"{costs.flops} != {trips * 2 * m**3}"
+    assert costs.n_while >= 1
+
+
+def test_nested_scan_multiplies():
+    m, outer, inner = 16, 5, 7
+    a = jnp.zeros((m, m), jnp.float32)
+
+    def f(a):
+        def ibody(c, _):
+            return c @ c, None
+
+        def obody(c, _):
+            c, _ = jax.lax.scan(ibody, c, None, length=inner)
+            return c, None
+
+        c, _ = jax.lax.scan(obody, a, None, length=outer)
+        return c
+
+    txt = _compile_text(f, a)
+    costs = analyze_hlo(txt, 1)
+    assert costs.flops == outer * inner * 2 * m ** 3
+
+
+def test_dot_general_batched_contracting():
+    b, m, k, n = 4, 8, 32, 16
+    x = jnp.zeros((b, m, k), jnp.float32)
+    y = jnp.zeros((b, k, n), jnp.float32)
+    txt = _compile_text(lambda x, y: jnp.einsum("bmk,bkn->bmn", x, y), x, y)
+    costs = analyze_hlo(txt, 1)
+    assert costs.flops == 2 * b * m * k * n

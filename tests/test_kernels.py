@@ -1,0 +1,186 @@
+"""Pallas kernel validation (interpret=True) vs pure-jnp oracles.
+
+Per spec: sweep shapes/dtypes per kernel and assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dlzs as core_dlzs
+from repro.core.star_attention import STARConfig, star_attention
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _qkv(bh, t, s, d, dtype=jnp.float32, seed=0, peaked=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (bh, t, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (bh, s, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (bh, s, d)).astype(dtype)
+    if peaked:
+        k = k.at[:, : s // 16].mul(3.0)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash (FA-2 baseline)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(2, 128, 128, 64), (1, 256, 256, 32),
+                                   (3, 128, 384, 128), (2, 256, 512, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel_shapes(shape, causal):
+    bh, t, s, d = shape
+    q, k, v = _qkv(bh, t, s, d)
+    out = ops.flash(q, k, v, causal=causal, block_q=64, block_kv=64)
+    want = ref.flash_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_dtypes(dtype):
+    q, k, v = _qkv(2, 128, 256, 64, dtype=dtype)
+    out = ops.flash(q, k, v, causal=True, block_q=64, block_kv=64)
+    want = ref.flash_ref(q, k, v, causal=True)
+    assert out.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_block_shape_sweep():
+    q, k, v = _qkv(1, 256, 256, 64, seed=3)
+    want = ref.flash_ref(q, k, v, causal=True)
+    for bq, bkv in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        out = ops.flash(q, k, v, causal=True, block_q=bq, block_kv=bkv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"block {bq}x{bkv}")
+
+
+# ---------------------------------------------------------------------------
+# dlzs block-max (fused predict + tile reduce)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(2, 128, 256, 64), (1, 256, 512, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_dlzs_blockmax_matches_ref(shape, causal):
+    bh, t, s, d = shape
+    q, k, _ = _qkv(bh, t, s, d, seed=1)
+    out = ops.dlzs_blockmax(q, k, causal=causal, block_q=64, block_kv=64)
+    want = ref.dlzs_block_ref(q, k, causal=causal, block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bitwise_pow2_equals_float_pow2():
+    """The kernel's mantissa-mask quantizer == core.dlzs.pow2_quantize."""
+    from repro.kernels.dlzs import _pow2_bitwise
+    x = jax.random.normal(jax.random.PRNGKey(2), (4096,)) * 100
+    np.testing.assert_allclose(
+        np.asarray(_pow2_bitwise(x)),
+        np.asarray(core_dlzs.pow2_quantize(x)), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# sufa (sorted-updating block-sparse flash)
+# ---------------------------------------------------------------------------
+
+def _gathered(q, k, v, keep, block=64, causal=False):
+    """Build (kg, vg, mask) via the ops pipeline pieces for testing."""
+    bh, t, d = q.shape
+    s = k.shape[1]
+    n_qt, n_kt = t // block, s // block
+    bmax = ref.dlzs_block_ref(q, k, causal=causal, block_q=block,
+                              block_kv=block)
+    vals, idx = jax.lax.top_k(bmax, keep)
+    valid = vals > -1e29
+    kt = k.reshape(bh, n_kt, block, d)
+    vt = v.reshape(bh, n_kt, block, d)
+    take = lambda tiles: jnp.take_along_axis(
+        tiles[:, None], idx[..., None, None], axis=2)
+    mask = jnp.broadcast_to(valid[..., None, None],
+                            (bh, n_qt, keep, block, block))
+    if causal:
+        q_pos = (jnp.arange(t) + (s - t)).reshape(n_qt, block)
+        kv_pos = idx[..., None] * block + jnp.arange(block)
+        mask = mask & (kv_pos[:, :, :, None, :]
+                       <= q_pos[None, :, None, :, None])
+    return take(kt), take(vt), mask
+
+
+@pytest.mark.parametrize("keep", [1, 2, 4])
+def test_sufa_strict_matches_ref(keep):
+    q, k, v = _qkv(2, 128, 256, 64, seed=4)
+    kg, vg, mask = _gathered(q, k, v, keep)
+    out = ops.sufa(q, kg, vg, mask, strict=True)
+    want = ref.sufa_ref(q, kg, vg, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sufa_fast_path_close_when_sorted():
+    """Descend updating == strict when tiles truly arrive max-first."""
+    q, k, v = _qkv(2, 128, 512, 64, seed=5)
+    # exact prediction -> perfectly sorted tile order
+    bmax = ref.flash_ref  # silence lint; we build from exact scores below
+    scale = 1.0 / np.sqrt(64)
+    sc = jnp.einsum("btd,bsd->bts", q, k) * scale
+    n_kt = 512 // 64
+    bm = sc.reshape(2, 2, 64, n_kt, 64).max(axis=(2, 4))
+    vals, idx = jax.lax.top_k(bm, 4)
+    kt = k.reshape(2, n_kt, 64, 64)
+    vt = v.reshape(2, n_kt, 64, 64)
+    take = lambda tiles: jnp.take_along_axis(
+        tiles[:, None], idx[..., None, None], axis=2)
+    mask = jnp.ones((2, 2, 4, 64, 64), bool)
+    kg, vg = take(kt), take(vt)
+    strict = ops.sufa(q, kg, vg, mask, strict=True)
+    fast = ops.sufa(q, kg, vg, mask, strict=False)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(strict),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sufa_dtype_sweep(dtype):
+    q, k, v = _qkv(1, 128, 256, 32, dtype=dtype, seed=6)
+    kg, vg, mask = _gathered(q, k, v, keep=2)
+    out = ops.sufa(q, kg, vg, mask, strict=True)
+    want = ref.sufa_ref(q, kg, vg, mask)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol,
+                               atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# fused STAR pipeline (kernel-side) vs core (XLA-side)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_fused_star_matches_core_pipeline(causal):
+    q, k, v = _qkv(1, 256, 256, 64, seed=7)
+    keep = 2
+    out = ops.star_attention_fused(q, k, v, keep=keep, causal=causal,
+                                   block_q=64, block_kv=64, radius=1e9,
+                                   strict=True)
+    cfg = STARConfig(top_k_ratio=keep / 4, block_q=64, block_kv=64,
+                     radius=1e9)
+    want = star_attention(q[0], k[0], v[0], cfg, causal=causal)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fused_star_full_keep_equals_flash():
+    q, k, v = _qkv(1, 128, 128, 64, seed=8, peaked=False)
+    out = ops.star_attention_fused(q, k, v, keep=2, causal=True,
+                                   block_q=64, block_kv=64, radius=1e9,
+                                   strict=True)
+    want = ref.flash_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

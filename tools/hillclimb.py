@@ -1,0 +1,52 @@
+"""§Perf hillclimb driver: run named variants of a dry-run cell and print
+the roofline-term deltas vs the recorded baseline.
+
+Usage:
+  PYTHONPATH=src python tools/hillclimb.py <arch> <shape> <variant> \
+      [key=value ...]        # ModelCfg dataclass overrides
+Values are eval'd (so rule_overrides=(("embed_w",None),) works).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS)
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def show(tag, rl):
+    print(f"{tag:34s} compute={rl['compute_s']:.3e}s "
+          f"memory={rl['memory_s']:.3e}s coll={rl['collective_s']:.3e}s "
+          f"useful={rl['useful_ratio']:.2f} -> {rl['bottleneck']}")
+
+
+def main():
+    arch, shape, variant = sys.argv[1:4]
+    overrides = {}
+    for kv in sys.argv[4:]:
+        k, v = kv.split("=", 1)
+        overrides[k] = eval(v)  # noqa: S307 — operator tool
+
+    base_path = RESULTS / f"{arch}__{shape}__pod1.json"
+    base = json.loads(base_path.read_text()) if base_path.exists() else None
+    rec = run_cell(arch, shape, "pod1", variant=variant, force=True,
+                   overrides=overrides or None, star_long=True)
+    if base and base["status"] == "ok":
+        show("baseline", base["roofline"])
+    if rec["status"] == "ok":
+        show(f"variant:{variant}", rec["roofline"])
+        if base and base["status"] == "ok":
+            b, n = base["roofline"], rec["roofline"]
+            for term in ("compute_s", "memory_s", "collective_s"):
+                if b[term] > 0:
+                    print(f"  {term}: {n[term] / b[term] - 1:+.1%}")
+    else:
+        print("variant failed/skipped:", rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json. Run after ``python -m repro.launch.dryrun --all``."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 1e9:.2f}"
+
+
+def load():
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | status | lower+compile (s) | "
+          "args (GB/dev) | temp (GB/dev) | HLO flops/dev | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        cell = f"| {r['arch']} | {r['shape']}"
+        cell += f"{'+' + r['variant'] if r.get('variant') else ''} "
+        cell += f"| {r['mesh']} "
+        if r["status"] == "skip":
+            reason = "full-attention: sub-quadratic required"
+            print(cell + f"| SKIP ({reason}) | - | - | - | - | - |")
+            continue
+        mem = r["memory"]
+        coll = r["collectives"]["by_op"]
+        coll_s = " ".join(f"{k}:{int(v[0])}" for k, v in coll.items())
+        print(cell +
+              f"| OK | {r['lower_s'] + r['compile_s']:.0f} "
+              f"| {fmt_bytes(mem['argument_size_in_bytes'])} "
+              f"| {fmt_bytes(mem['temp_size_in_bytes'])} "
+              f"| {r['roofline']['flops_per_device']:.2e} "
+              f"| {coll_s} |")
+
+
+def roofline_table(recs, mesh="pod1"):
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "bottleneck | MODEL_FLOPS | HLO_FLOPS | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom if dom else 0.0
+        name = r["arch"] + ("+" + r["variant"] if r.get("variant") else "")
+        print(f"| {name} | {r['shape']} "
+              f"| {rl['compute_s']:.2e} | {rl['memory_s']:.2e} "
+              f"| {rl['collective_s']:.2e} | {rl['bottleneck']} "
+              f"| {rl['model_flops']:.2e} | {rl['hlo_total_flops']:.2e} "
+              f"| {rl['useful_ratio']:.2f} | {frac:.2f} |")
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("### Dry-run matrix\n")
+    dryrun_table(recs)
+    print("\n### Roofline (single-pod 16x16)\n")
+    roofline_table(recs, "pod1")
+    print("\n### Roofline (multi-pod 2x16x16)\n")
+    roofline_table(recs, "pod2")
