@@ -6,6 +6,8 @@
 #   Fig. 19/20/22a -> throughput        (dense vs STAR wall clock + traffic)
 #   Fig. 23/24 -> spatial               (DRAttention/MRCA mesh simulation)
 #   Table III -> roofline_table         (per-cell roofline from the dry-run)
+#   (beyond-paper) -> serving           (paged KV cache vs dense slot cache:
+#                                        TTFT, tok/s, KV footprint ratio)
 
 from __future__ import annotations
 
@@ -15,11 +17,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import (complexity_reduction, fa_overhead,
-                            roofline_table, spatial, throughput, topk_hit)
+                            roofline_table, serving, spatial, throughput,
+                            topk_hit)
 
     print("name,us_per_call,derived")
     modules = [fa_overhead, complexity_reduction, topk_hit, throughput,
-               spatial, roofline_table]
+               spatial, roofline_table, serving]
     failed = []
     for mod in modules:
         try:

@@ -1,5 +1,8 @@
-"""Serve a small LM with batched requests through the continuous-batching
-engine, with STAR sparse decode against the int8 LZ prediction cache.
+"""Serve a small LM through the paged continuous-batching engine. Decode
+sparsity is page-granular: DLZS scores over the int8 LZ prediction cache
+decide which KV pages each step gathers (attention is exact within them),
+and identical prompt prefixes share pages copy-on-write. STAR's
+tile-granular pipeline still runs at prefill.
 
 Run:  PYTHONPATH=src python examples/serve_star.py
 """
@@ -11,20 +14,26 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import lm
-from repro.serving import EngineCfg, ServingEngine
-from repro.serving.engine import Request
+from repro.serving import PagedEngineCfg, PagedServingEngine, Request
 
 
 def main():
     cfg = get_smoke_config("star_paper")   # STAR sparse decode enabled
     params = lm.init(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params,
-                        EngineCfg(max_batch=4, max_len=192, eos_id=-1))
+    # page_size == star.block_q so full prefix pages never split a prefill
+    # tile (keeps prefix sharing exact); hot_pages*page_size = 256-token
+    # decode working set regardless of how long a request grows.
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=cfg.star.block_q, n_pages=32, hot_pages=4,
+        recent_pages=2, eos_id=-1))
 
     rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab, size=cfg.star.block_q,
+                          dtype=np.int32)  # shared "system prompt" page
     reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab, size=24,
-                                        dtype=np.int32),
+                    prompt=np.concatenate(
+                        [system, rng.integers(0, cfg.vocab, size=8 + 4 * i,
+                                              dtype=np.int32)]),
                     max_tokens=16)
             for i in range(10)]
 
@@ -32,9 +41,17 @@ def main():
     done = eng.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in done.values())
+    st = eng.stats()
+    pool = st["pool"]
     print(f"served {len(done)} requests / {n_tok} tokens through "
-          f"{eng.ecfg.max_batch} continuous-batching slots in {dt:.1f}s "
+          f"{eng.pcfg.max_batch} continuous-batching slots in {dt:.1f}s "
           f"({n_tok / dt:.1f} tok/s on CPU)")
+    print(f"pool: peak {pool.peak_live}/{pool.capacity} pages live, "
+          f"{pool.shared_hits} prefix-share hits, "
+          f"{pool.evictions} DLZS evictions; working set "
+          f"{st['working_set_bytes'] / 2**20:.1f} MiB "
+          f"({st['bytes_per_page'] / 2**20:.2f} MiB/page), "
+          f"decode compiled {st['decode_compiles']}x")
     for rid in sorted(done)[:3]:
         print(f"  req {rid}: {done[rid][:8]}...")
     assert len(done) == len(reqs)

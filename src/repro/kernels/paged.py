@@ -1,0 +1,112 @@
+"""Paged KV-cache decode attention — Pallas TPU kernel.
+
+One decode query (R grouped heads per KV head) attends to a sequence whose
+KV rows live in non-contiguous pool pages. The block table is a
+scalar-prefetch operand: the kernel's BlockSpec index maps read the physical
+page id for grid step (b, g, w) *before* the body runs, so each page is
+DMA'd straight from its pool slab into VMEM — the gather never materializes
+a contiguous copy of the sequence in HBM.
+
+Grid (batch, kv_head, hot_page); the page dim is innermost (sequential on
+TPU), so the (m, l, o) accumulators live in revisited output blocks across
+page steps — the same online-softmax pattern as kernels/flash.py, minus the
+causal tile logic (a decode row sees every valid cached position).
+
+Validated in interpret mode against the jnp gather reference
+(repro.kvcache.paged_attention.paged_gather_decode); on a real TPU the same
+code lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(phys_ref, logical_ref, kvlen_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, *, scale: float, page: int):
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [R, d]
+    k = k_ref[0, 0].astype(jnp.float32)              # [page, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    lg = logical_ref[b, w]                           # logical page index
+    row_pos = lg * page + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    valid = (lg >= 0) & (row_pos < kvlen_ref[b])
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]                             # [R]
+    l_prev = l_ref[0, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_prev * alpha + p.sum(axis=-1)
+    o_ref[0, 0] = o_ref[0, 0] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, phys: jax.Array,
+                           logical: jax.Array, kv_len: jax.Array, *,
+                           scale: float, interpret: bool = True) -> jax.Array:
+    """q [B,G,R,d]; k/v pages [G,P,page,d]; phys/logical [B,W]; kv_len [B].
+
+    Returns [B, G, R, d] (fp32 accumulate, cast back to q.dtype). ``phys``
+    must be pre-clipped to valid page ids; rows are masked via ``logical``
+    (-1 = padded slot) and ``kv_len``.
+    """
+    bsz, g, r, d = q.shape
+    page = k_pages.shape[2]
+    w = phys.shape[1]
+    grid = (bsz, g, w)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, page=page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, r, d),
+                         lambda b, h, w, phys, lg, kl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d),
+                         lambda b, h, w, phys, lg, kl: (h, phys[b, w], 0, 0)),
+            pl.BlockSpec((1, 1, page, d),
+                         lambda b, h, w, phys, lg, kl: (h, phys[b, w], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, r, d),
+                         lambda b, h, w, phys, lg, kl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, r), lambda b, h, w, phys, lg, kl: (b, h, 0)),
+            pl.BlockSpec((1, 1, r), lambda b, h, w, phys, lg, kl: (b, h, 0)),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, g, r, d), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, g, r), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, g, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(phys, logical, kv_len, q, k_pages, v_pages)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

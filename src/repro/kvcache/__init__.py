@@ -1,0 +1,58 @@
+"""Paged KV-cache subsystem: DLZS-guided page retention for serving.
+
+Design note
+===========
+
+The dense slot engine reserves one ``[max_batch, max_len]`` KV slab — worst
+case memory for every request, a hard engine-wide length cap, and zero reuse
+between requests. This package replaces that slab with a global pool of
+fixed-size *pages* plus per-sequence block tables, and lets the paper's
+DLZS prediction stage (§IV-A) decide which pages stay hot:
+
+* ``pool``       — host-side page pool: ref-counted pages, a token-prefix
+                   index for copy-on-write prefix sharing (identical prompt
+                   prefixes are stored once), and a cached tier of ref-0
+                   pages retained for future reuse.
+* ``allocator``  — policy layer: admission (share-then-allocate), eviction
+                   (cached pages die lowest-DLZS-score-first) and hot-page
+                   retention (``select_hot``) for sparse decode.
+* ``paged_attention`` — gather-based decode over block tables, as an XLA
+                   ``jnp.take`` fallback and a Pallas scalar-prefetch kernel
+                   (kernels/paged.py).
+* ``bucketing``  — prompt-length buckets so variable-length admission costs
+                   O(log max_len) prefill compilations, not one per length.
+* ``metrics``    — device-side page scoring + cache-bytes accounting.
+
+Page size choice
+----------------
+
+Pages are rows of ``[page_size, n_kv, head_dim]`` per layer. ``page_size``
+should (a) divide the STAR prefill tile ``block_kv`` or vice versa so bucket
+padding stays tile-aligned, and (b) be small enough that the partial tail
+page wastes little (expected waste = page_size/2 rows/seq) but large enough
+that block tables and gathers stay cheap. The serving default is 16 rows —
+at olmo-1b scale (16 layers x 16 KV heads x 128 dims, bf16+int8-LZ) one page
+is ~2.6 MB across the stack, i.e. sub-percent waste per sequence while a
+4096-token context still fits a 256-entry block table.
+
+DLZS score -> retention mapping
+-------------------------------
+
+``metrics.page_scores`` reduces the int8 LZ-code slab (the *same* compressed
+prediction operand ``star_decode`` streams) to ``max |code|`` per page:
+``|code| = |floor(log2 |k|)| + 64``, so the score is a query-agnostic upper
+bound on the log-magnitude any key in the page contributes to a DLZS score
+estimate Q·K̂. ``allocator.select_hot`` always keeps the newest
+``recent_pages`` pages (the local window plus the page being written) and
+fills the remaining ``hot_pages - recent`` gather slots with the
+highest-scored cold pages; eviction under admission pressure reclaims
+cached prefix pages lowest-score-first. Cross-stage tiling, cache edition:
+prediction metadata produced for the compute stage doubles as the memory
+manager's utility signal.
+"""
+
+from repro.kvcache.allocator import PagedAllocator
+from repro.kvcache.pool import SCRATCH, PagePool, PoolExhausted, PoolStats
+
+__all__ = ["PagePool", "PagedAllocator", "PoolExhausted", "PoolStats",
+           "SCRATCH"]

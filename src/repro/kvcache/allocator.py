@@ -1,0 +1,154 @@
+"""DLZS-guided admission, eviction and hot-page retention policies.
+
+The policy layer between the host-side ``PagePool`` and the engine:
+
+* ``admit``   — map a prompt onto page ids, sharing full-page prefixes via
+  the pool's prefix index and allocating the rest (evicting cold cached
+  pages when the free list runs dry).
+* ``extend``  — grow a sequence by one decode page.
+* ``select_hot`` — pick the ``W`` pages a sparse decode step actually
+  gathers: the most recent ``recent`` pages are always hot (local window +
+  the page being written), the remaining slots go to the highest
+  DLZS-scored cold pages. Scores are the per-page max |int8 LZ code| of the
+  cached keys (kvcache.metrics) — the paper's §IV-A prediction signal
+  repurposed at page granularity: a page whose keys all have small log
+  magnitude cannot produce a large Q·K̂ estimate for any query, so it is
+  the safest page to leave cold. This is the cross-stage tie-in: the same
+  LZ codes the decode predictor streams also drive cache retention.
+* eviction — cached (ref-0) prefix pages are evicted lowest-score-first,
+  so admission pressure reclaims the least attention-relevant memory.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.kvcache.pool import PagePool, PoolExhausted
+
+
+class PagedAllocator:
+    def __init__(self, pool: PagePool, *, recent_pages: int = 2):
+        self.pool = pool
+        self.recent = max(1, recent_pages)
+
+    # -- admission / growth -------------------------------------------------
+
+    def _alloc_or_evict(self, scores: Optional[np.ndarray]) -> int:
+        """Allocate a page, evicting the lowest-scored cached page if
+        needed."""
+        if self.pool.free_pages() == 0:
+            cached = self.pool.evictable()
+            if not cached:
+                raise PoolExhausted("no free and no cached pages")
+            if scores is None:
+                victim = cached[0]
+            else:
+                victim = min(cached, key=lambda p: float(scores[p]))
+            self.pool.evict(victim)
+        return self.pool.alloc()
+
+    def admit(self, prompt: Sequence[int],
+              scores: Optional[np.ndarray] = None
+              ) -> tuple[list[int], list[int], int]:
+        """Map a prompt to pages. Returns (pages, fresh_pages, n_shared).
+
+        Full prompt pages are prefix-shared when an identical token prefix
+        is already pooled; ``fresh_pages`` lists the pages the caller must
+        write (and may register). On PoolExhausted every page taken so far
+        is rolled back, so a deferred request retries cleanly later.
+        """
+        page = self.pool.page_size
+        t = len(prompt)
+        n_pages = -(-t // page)
+        toks = tuple(int(x) for x in prompt)
+        pages: list[int] = []
+        fresh: list[int] = []
+        n_shared = 0
+        sharing = True
+        try:
+            for i in range(n_pages):
+                end = (i + 1) * page
+                if sharing and end <= t:       # full page: try the index
+                    hit = self.pool.lookup(toks[:end])
+                    if hit is not None:
+                        pages.append(hit)
+                        n_shared += 1
+                        continue
+                    sharing = False            # deeper pages cannot match
+                pid = self._alloc_or_evict(scores)
+                pages.append(pid)
+                fresh.append(pid)
+        except PoolExhausted:
+            for pid in pages:
+                self.pool.decref(pid)
+            raise
+        return pages, fresh, n_shared
+
+    def register_prompt_pages(self, prompt: Sequence[int],
+                              pages: Sequence[int],
+                              fresh: Sequence[int]) -> None:
+        """Index freshly-written FULL prompt pages for future sharing."""
+        page = self.pool.page_size
+        toks = tuple(int(x) for x in prompt)
+        fresh_set = set(fresh)
+        for i, pid in enumerate(pages):
+            end = (i + 1) * page
+            if end <= len(toks) and pid in fresh_set:
+                self.pool.register(toks[:end], pid)
+
+    def extend(self, scores: Optional[np.ndarray] = None) -> int:
+        """One fresh decode page (never shared, never indexed)."""
+        return self._alloc_or_evict(scores)
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop a finished sequence's references; indexed pages stay
+        cached."""
+        for pid in pages:
+            self.pool.decref(pid)
+
+    def ensure_owned(self, pages: list[int], idx: int
+                     ) -> Optional[tuple[int, int]]:
+        """COW guard before writing ``pages[idx]``: if shared, detach onto a
+        fresh page and return ``(src, dst)`` — the caller must copy device
+        content src -> dst. None when the page was already private."""
+        pid = pages[idx]
+        if self.pool.ref(pid) < 2:
+            return None
+        new = self.pool.cow(pid)
+        pages[idx] = new
+        return pid, new
+
+    # -- retention ----------------------------------------------------------
+
+    def select_hot(self, pages: Sequence[int], width: int,
+                   scores: Optional[np.ndarray] = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Choose <= ``width`` pages for the decode gather.
+
+        Returns (phys, logical) int32 arrays of length ``width``, padded
+        with -1. Logical order is preserved (ascending positions) so the
+        gathered rows stay position-sorted.
+        """
+        phys = np.full((width,), -1, np.int32)
+        logical = np.full((width,), -1, np.int32)
+        n = len(pages)
+        if n <= width:
+            phys[:n] = pages
+            logical[:n] = np.arange(n)
+            return phys, logical
+        recent = min(self.recent, width)
+        n_cold = width - recent
+        cold_logical = np.arange(n - recent)
+        if scores is None:                     # no signal: keep newest pages
+            keep_cold = cold_logical[len(cold_logical) - n_cold:]
+        else:
+            s = np.asarray([float(scores[pages[j]]) for j in cold_logical])
+            # stable top-k by DLZS page score, ties to the newest pages
+            order = np.argsort(-s, kind="stable")[:n_cold]
+            keep_cold = np.sort(cold_logical[order])
+        keep = np.concatenate([keep_cold, np.arange(n - recent, n)])
+        phys[:len(keep)] = [pages[j] for j in keep]
+        logical[:len(keep)] = keep
+        return phys, logical

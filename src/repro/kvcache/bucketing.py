@@ -1,0 +1,43 @@
+"""Prompt-length bucketing for recompile-free variable-length admission.
+
+Prefill compiles per input shape. Admitting raw prompt lengths would compile
+once per distinct length; padding every prompt to one engine-wide maximum
+wastes prefill FLOPs quadratically. The middle ground: round the prompt up
+to a whole number of KV pages, then (optionally) to a power-of-two page
+count, so the number of distinct prefill shapes is O(log max_len) and every
+K/V row that matters lands page-aligned for the pool scatter.
+
+Padding is safe for causal models: K/V rows at positions < T depend only on
+tokens <= their position, so the junk tail changes nothing that is kept.
+(For tile-granular STAR prefill the selection of a boundary q-tile can see
+junk rows — a selection-noise effect the engine documents; exactness holds
+whenever T is already bucket-aligned.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def bucket_pages(n_tokens: int, page_size: int, *, pow2: bool = True) -> int:
+    """Number of pages the padded prompt occupies."""
+    pages = -(-max(n_tokens, 1) // page_size)
+    if pow2:
+        p = 1
+        while p < pages:
+            p *= 2
+        pages = p
+    return pages
+
+
+def bucket_len(n_tokens: int, page_size: int, *, pow2: bool = True) -> int:
+    return bucket_pages(n_tokens, page_size, pow2=pow2) * page_size
+
+
+def pad_tokens(tokens: np.ndarray, padded_len: int) -> np.ndarray:
+    """Right-pad a [T] int token array to ``padded_len`` with zeros."""
+    t = len(tokens)
+    assert t <= padded_len, (t, padded_len)
+    out = np.zeros((padded_len,), dtype=np.int32)
+    out[:t] = tokens
+    return out

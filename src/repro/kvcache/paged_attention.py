@@ -1,0 +1,109 @@
+"""Gather-based paged decode attention: block tables in, attention out.
+
+Two backends behind one signature (mirroring how kernels/flash.py pairs a
+Pallas kernel with kernels/ref.py):
+
+* ``paged_gather_decode`` — pure-XLA fallback: ``jnp.take`` the hot pages
+  out of the pool slab into a [B, W·page] working set, then one grouped-GQA
+  masked softmax. Runs anywhere (the CPU test/serving path) and is the
+  numerics oracle for the kernel.
+* ``kernels.paged.paged_decode_attention`` — Pallas kernel whose BlockSpec
+  index maps read the block table via scalar prefetch, DMA-ing pages
+  directly from the pool (no contiguous HBM copy at all).
+
+Both only touch the ``W`` hot pages the DLZS retention policy selected
+(kvcache.allocator.select_hot), so decode compute AND memory traffic scale
+with the retained working set, not the sequence length — the engine admits
+any prompt length against one compiled decode shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# Backend the model decode path uses. 'xla' everywhere a TPU isn't
+# guaranteed; flip to 'pallas' AND DEFAULT_INTERPRET to False on real TPU
+# deployments so the kernel lowers to Mosaic (same numerics — tests assert
+# kernel/fallback parity in interpret mode).
+DEFAULT_BACKEND = "xla"
+DEFAULT_INTERPRET = True
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """q [B, nh, d] -> [B, G, R, d] grouped per KV head."""
+    b, nh, d = q.shape
+    return q.reshape(b, n_kv, nh // n_kv, d)
+
+
+def paged_gather_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        phys: jax.Array, logical: jax.Array,
+                        kv_len: jax.Array, *, n_kv: int,
+                        scale: Optional[float] = None) -> jax.Array:
+    """XLA paged decode. q [B,nh,d]; k/v pages [P,page,nkv,d];
+    phys/logical [B,W]; kv_len [B] -> [B,nh,d].
+
+    ``phys`` entries < 0 are padded slots (gather is clipped to page 0, the
+    scratch page, and masked out via ``logical``).
+    """
+    b, nh, d = q.shape
+    page = k_pages.shape[1]
+    scale = scale or (1.0 / math.sqrt(d))
+
+    safe = jnp.maximum(phys, 0)
+    kg = jnp.take(k_pages, safe, axis=0)          # [B, W, page, nkv, d]
+    vg = jnp.take(v_pages, safe, axis=0)
+    w = phys.shape[1]
+    s_hot = w * page
+    kg = kg.reshape(b, s_hot, n_kv, d)
+    vg = vg.reshape(b, s_hot, n_kv, d)
+
+    row_pos = (logical[:, :, None] * page
+               + jnp.arange(page)[None, None, :]).reshape(b, s_hot)
+    valid = (logical[:, :, None] >= 0).repeat(page, axis=2).reshape(b, s_hot)
+    valid = valid & (row_pos < kv_len[:, None])
+
+    # Grouped-GQA: the gathered pages stay at n_kv width, never repeated.
+    qg = _group(q, n_kv)                           # [B, G, R, d]
+    kc = jnp.moveaxis(kg, 1, 2)                    # [B, G, S_hot, d]
+    vc = jnp.moveaxis(vg, 1, 2)
+    sc = jnp.einsum("bgrd,bgsd->bgrs", qg, kc).astype(jnp.float32) * scale
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bgrs,bgsd->bgrd", (p / l).astype(q.dtype), vc)
+    return o.reshape(b, nh, d)
+
+
+def paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                 phys: jax.Array, logical: jax.Array, kv_len: jax.Array, *,
+                 n_kv: int, scale: Optional[float] = None,
+                 backend: str = "xla",
+                 interpret: bool = True) -> jax.Array:
+    """Backend dispatch. ``backend``: 'xla' (gather fallback, default on
+    hosts without a TPU) or 'pallas' (block-table kernel). ``interpret``
+    only affects the pallas backend: leave True off-TPU, set False to
+    lower to Mosaic on real hardware."""
+    if backend == "xla":
+        return paged_gather_decode(q, k_pages, v_pages, phys, logical,
+                                   kv_len, n_kv=n_kv, scale=scale)
+    if backend != "pallas":
+        raise ValueError(f"unknown paged-attention backend {backend!r}")
+    from repro.kernels import paged as kpaged
+    b, nh, d = q.shape
+    scale = scale or (1.0 / math.sqrt(d))
+    qg = _group(q, n_kv)
+    # pool slab [P, page, nkv, d] -> kernel layout [nkv, P, page, d]
+    kh = jnp.moveaxis(k_pages, 2, 0)
+    vh = jnp.moveaxis(v_pages, 2, 0)
+    o = kpaged.paged_decode_attention(qg, kh, vh, jnp.maximum(phys, 0),
+                                      logical, kv_len, scale=scale,
+                                      interpret=interpret)
+    return o.reshape(b, nh, d).astype(q.dtype)

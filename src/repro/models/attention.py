@@ -260,6 +260,45 @@ def apply_decode(params, cfg: AttentionCfg, x, cache, lengths):
     return shd(y, "batch", "seq", "embed"), new_cache
 
 
+def apply_decode_paged(params, cfg: AttentionCfg, x, cache, lengths,
+                       page_state):
+    """One-token decode against a paged pool. x [B,1,H];
+    cache k/v [P,page,nkv,dh] (this layer's slab); lengths [B].
+
+    ``page_state`` (shared across layers):
+      phys/logical [B,W] — block-table rows of the hot pages (-1 = pad),
+      write_page/write_off [B] — pool coordinates of the new token's row.
+
+    The new K/V row is scattered into the pool at its page coordinates, then
+    attention gathers only the W hot pages (kvcache.paged_attention) — the
+    DLZS retention policy decides W's contents, the engine guarantees the
+    write target is among them.
+    """
+    b = x.shape[0]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k_new, v_new = _project_qkv(params, cfg, x, lengths[:, None])
+
+    wp, woff = page_state["write_page"], page_state["write_off"]
+    new_cache = dict(
+        cache,
+        k=cache["k"].at[wp, woff].set(k_new[:, 0].astype(cache["k"].dtype)),
+        v=cache["v"].at[wp, woff].set(v_new[:, 0].astype(cache["v"].dtype)))
+    if cfg.lz_cache and "k_lz" in cache:
+        new_cache["k_lz"] = cache["k_lz"].at[wp, woff].set(
+            dlzs.lz_pack(k_new)[:, 0])
+
+    from repro.kvcache import paged_attention as kv_paged
+    o = kv_paged.paged_decode(
+        q[:, 0], new_cache["k"], new_cache["v"], page_state["phys"],
+        page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale,
+        backend=kv_paged.DEFAULT_BACKEND,
+        interpret=kv_paged.DEFAULT_INTERPRET)
+    y = jnp.einsum("bnd,ndh->bh",
+                   o.reshape(b, cfg.n_heads, cfg.head_dim),
+                   params["wo"])[:, None, :]
+    return shd(y, "batch", "seq", "embed"), new_cache
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention (encoder-decoder; seamless-m4t)
 # ---------------------------------------------------------------------------

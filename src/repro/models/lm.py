@@ -155,14 +155,19 @@ def _block_axes(cfg: ModelCfg, blk: BlockCfg):
 
 def _block_apply(params, cfg: ModelCfg, blk: BlockCfg, x, positions, *,
                  mode: str, causal: bool = True, cache=None,
-                 enc_cache=None, lengths=None, cache_len=None):
+                 enc_cache=None, lengths=None, cache_len=None,
+                 page_state=None):
     """Returns (y, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = common.norm_apply(cfg.norm, params["norm1"], x)
     acfg = cfg.attn_cfg(mode, causal)
     new_cache = {}
     if blk.kind == "attn":
-        if mode == "decode":
+        if mode == "decode" and page_state is not None:
+            y, new_attn = attention.apply_decode_paged(
+                params["core"], acfg, h, cache["attn"], lengths, page_state)
+            new_cache["attn"] = new_attn
+        elif mode == "decode":
             y, new_attn = attention.apply_decode(params["core"], acfg, h,
                                                  cache["attn"], lengths)
             new_cache["attn"] = new_attn
@@ -245,13 +250,14 @@ def _superblock_axes(cfg: ModelCfg, pattern):
 
 def _superblock_apply(params, cfg: ModelCfg, pattern, x, positions, *,
                       mode, causal=True, caches=None, enc_cache=None,
-                      lengths=None, cache_len=None):
+                      lengths=None, cache_len=None, page_state=None):
     new_caches, aux_total = {}, jnp.zeros((), jnp.float32)
     for i, blk in enumerate(pattern):
         x, nc, aux = _block_apply(
             params[f"b{i}"], cfg, blk, x, positions, mode=mode,
             causal=causal, cache=caches[f"b{i}"] if caches else None,
-            enc_cache=enc_cache, lengths=lengths, cache_len=cache_len)
+            enc_cache=enc_cache, lengths=lengths, cache_len=cache_len,
+            page_state=page_state)
         x = shd(x, "batch", "act_seq", "embed")
         new_caches[f"b{i}"] = nc
         aux_total = aux_total + aux
@@ -330,7 +336,7 @@ def _remat(fn, cfg: ModelCfg):
 
 def _run_stack(blocks, cfg: ModelCfg, pattern, x, positions, *, mode,
                causal=True, caches=None, enc_cache=None, lengths=None,
-               cache_len=None):
+               cache_len=None, page_state=None):
     """Scan the super-block over the repeat dim. Returns (x, caches, aux)."""
 
     def body(carry, layer_in):
@@ -341,7 +347,7 @@ def _run_stack(blocks, cfg: ModelCfg, pattern, x, positions, *, mode,
         y, nc, aux = _superblock_apply(
             lp, cfg, pattern, xc, positions, mode=mode, causal=causal,
             caches=lc, enc_cache=enc_cache, lengths=lengths,
-            cache_len=cache_len)
+            cache_len=cache_len, page_state=page_state)
         y = shd(y, "batch", "act_seq", "embed")
         return (y, aux_acc + aux), nc
 
@@ -421,8 +427,14 @@ def loss_fn(params, cfg: ModelCfg, batch):
     return loss, {"ce": ce, "aux": aux, "zloss": zloss, "tokens": n_tok}
 
 
-def prefill(params, cfg: ModelCfg, batch, *, cache_len: Optional[int] = None):
-    """Process the prompt; build caches. Returns (last_logits, caches)."""
+def prefill(params, cfg: ModelCfg, batch, *, cache_len: Optional[int] = None,
+            last_index: Optional[jax.Array] = None):
+    """Process the prompt; build caches. Returns (last_logits, caches).
+
+    ``last_index`` [B] selects which position's logits to return (default:
+    the final one). Needed by length-bucketed serving, where prompts are
+    right-padded and the real last token is mid-sequence.
+    """
     x = _embed_inputs(params, cfg, batch)
     b, s, _ = x.shape
     positions = jnp.arange(s)
@@ -430,9 +442,15 @@ def prefill(params, cfg: ModelCfg, batch, *, cache_len: Optional[int] = None):
     x, caches, _ = _run_stack(params["blocks"], cfg, cfg.pattern, x,
                               positions, mode="prefill", causal=cfg.causal,
                               enc_cache=enc_cache, cache_len=cache_len)
-    logits = _logits(params, cfg, x[:, -1:, :])
-    return logits[:, 0], {"layers": caches,
-                          "lengths": jnp.full((b,), s, jnp.int32)}
+    if last_index is None:
+        x_last = x[:, -1:, :]
+        lengths = jnp.full((b,), s, jnp.int32)
+    else:
+        x_last = jnp.take_along_axis(
+            x, last_index[:, None, None].astype(jnp.int32), axis=1)
+        lengths = last_index.astype(jnp.int32) + 1
+    logits = _logits(params, cfg, x_last)
+    return logits[:, 0], {"layers": caches, "lengths": lengths}
 
 
 def decode_step(params, cfg: ModelCfg, tokens, cache):
@@ -444,5 +462,26 @@ def decode_step(params, cfg: ModelCfg, tokens, cache):
                                   lengths[:, None], mode="decode",
                                   causal=cfg.causal,
                                   caches=cache["layers"], lengths=lengths)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], {"layers": new_caches, "lengths": lengths + 1}
+
+
+def decode_step_paged(params, cfg: ModelCfg, tokens, cache, page_state):
+    """One decode step against paged KV pools (attention-only patterns).
+
+    ``cache["layers"]`` leaves are page slabs [L, n_pages, page, n_kv, dh];
+    ``page_state`` carries the per-slot block-table rows and write
+    coordinates (see attention.apply_decode_paged). Shapes depend only on
+    (max_batch, hot_pages, pool size) — never on sequence length — so one
+    compilation serves every request mix.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shd(x, "batch", "seq", "embed")
+    lengths = cache["lengths"]
+    x, new_caches, _ = _run_stack(params["blocks"], cfg, cfg.pattern, x,
+                                  lengths[:, None], mode="decode",
+                                  causal=cfg.causal,
+                                  caches=cache["layers"], lengths=lengths,
+                                  page_state=page_state)
     logits = _logits(params, cfg, x)
     return logits[:, 0], {"layers": new_caches, "lengths": lengths + 1}

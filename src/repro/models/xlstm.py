@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.models import common
 from repro.models.ssm import chunked_linear_attention, linear_attention_step
-from repro.shardlib import shd
+from repro.shardlib import pvary, shard_map, shd
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,7 +188,7 @@ def _scan_shardmapped(params, carry, xs):
         # becomes device-varying there, so the recurrent einsum's transpose
         # needs no per-step psum_invariant — the single psum lands at this
         # pvary's transpose, outside the 4096-step loop (§Perf cell C5).
-        rp = jax.tree.map(lambda r: jax.lax.pvary(r, vary_axes), rp)
+        rp = jax.tree.map(lambda r: pvary(r, vary_axes), rp)
         return jax.lax.scan(lambda c, g: _slstm_step(rp, c, g), cr, xs_)
 
     if mesh is None or not vary_axes:
@@ -200,7 +200,7 @@ def _scan_shardmapped(params, carry, xs):
                                    r.shape), rparams)
     state_sp = P(b_ax)
     xs_sp = tuple(P(None, b_ax) for _ in xs)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(rspec, (state_sp,) * 3, xs_sp),
         out_specs=((state_sp,) * 3, P(None, b_ax)))

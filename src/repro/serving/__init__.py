@@ -1,3 +1,5 @@
-from repro.serving.engine import EngineCfg, ServingEngine
+from repro.serving.engine import EngineCfg, Request, ServingEngine
+from repro.serving.paged import PagedEngineCfg, PagedServingEngine
 
-__all__ = ["EngineCfg", "ServingEngine"]
+__all__ = ["EngineCfg", "PagedEngineCfg", "PagedServingEngine", "Request",
+           "ServingEngine"]

@@ -29,6 +29,9 @@ class Request:
     rid: int
     prompt: np.ndarray          # [T] int32
     max_tokens: int = 32
+    max_len: Optional[int] = None   # per-request total-length cap (paged
+    #                                 engine; the dense engine's cap is the
+    #                                 engine-wide EngineCfg.max_len)
     out: Optional[list] = None
 
 

@@ -1,0 +1,331 @@
+"""Continuous-batching engine on the paged KV-cache subsystem.
+
+Replaces the dense slot engine's one ``[max_batch, max_len]`` KV slab with
+the global page pool (repro.kvcache): requests own block tables of
+fixed-size pages, identical prompt prefixes share pages copy-on-write, and
+the DLZS retention policy picks which pages each decode step gathers.
+
+What changes vs. ``ServingEngine``:
+
+* ``max_len`` is a per-request property (``Request.max_len`` /
+  prompt+max_tokens), bounded only by pool capacity — not an engine cap.
+* Admission is length-bucketed (kvcache.bucketing): prefill compiles
+  O(log max_len) shapes; decode compiles ONCE — its shapes depend only on
+  (max_batch, hot_pages, pool size), never on sequence length.
+* Decode gathers at most ``hot_pages`` pages per sequence. When a sequence
+  outgrows that, the newest ``recent_pages`` stay hot and DLZS page scores
+  (max |int8 LZ code| per page — the decode predictor's own operand) rank
+  the cold pages; with ``hot_pages`` sized to the longest request the decode
+  is exact and token-parity with the dense engine holds.
+* Sparsity granularity: for STAR configs the paged engine replaces the
+  dense engine's element-granular ``star_decode`` with page-granular DLZS
+  retention — attention is exact *within* the gathered hot pages. Outputs
+  therefore match the dense engine only for ``star=None`` models (or
+  ``hot_pages`` covering everything); element-level SADS inside gathered
+  pages is a ROADMAP follow-up.
+
+Single-step flow (same driver contract as the dense engine):
+  admit()  — prefix-share + allocate pages, bucketed prefill, pool scatter
+  step()   — ensure tail pages (COW guard), select hot pages, fused decode
+  reap()   — inside step(): emit finished sequences, release their pages
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
+                           bucketing, metrics)
+from repro.models import lm
+from repro.serving.engine import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedEngineCfg:
+    max_batch: int = 8
+    page_size: int = 16
+    n_pages: int = 256           # pool capacity (page 0 is scratch)
+    hot_pages: int = 16          # W: pages gathered per decode step
+    recent_pages: int = 2        # newest pages always hot (incl. write page)
+    eos_id: int = 1
+    greedy: bool = True
+    temperature: float = 1.0
+    bucket_pow2: bool = True     # prompt buckets: pow2 page counts
+    share_prefixes: bool = True
+
+
+class PagedServingEngine:
+    def __init__(self, model_cfg, params, pcfg: PagedEngineCfg,
+                 rng: Optional[jax.Array] = None):
+        if any(blk.kind != "attn" for blk in model_cfg.pattern):
+            raise ValueError("paged engine supports attention-only patterns")
+        if model_cfg.enc_layers or not model_cfg.causal:
+            raise ValueError("paged engine needs a causal decoder-only model")
+        self.cfg = model_cfg
+        self.pcfg = pcfg
+        self.params = params
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+        # Prefix sharing is exact only if a full page never splits a STAR
+        # prefill q-tile (tile selection mixes rows within a tile).
+        self._share = pcfg.share_prefixes and (
+            model_cfg.star is None
+            or pcfg.page_size % model_cfg.star.block_q == 0)
+
+        self.pool = PagePool(pcfg.n_pages, pcfg.page_size)
+        self.alloc = PagedAllocator(self.pool,
+                                    recent_pages=pcfg.recent_pages)
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}       # slot -> request
+        self.budget: dict[int, int] = {}
+        self.tables: dict[int, list[int]] = {}     # slot -> block table
+        self.reserved: dict[int, int] = {}         # slot -> pages still owed
+        self.lengths = np.zeros((pcfg.max_batch,), np.int64)
+        self.free = list(range(pcfg.max_batch))
+
+        self._prefill = jax.jit(functools.partial(self._prefill_fn))
+        # donate the cache/pool slabs: these updates would otherwise keep
+        # two full copies of the page pool live per step (no-op on CPU,
+        # which lacks donation — load-bearing on TPU)
+        self._decode = jax.jit(functools.partial(self._decode_fn),
+                               donate_argnums=(2,))
+        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+        self._copy_page = jax.jit(self._copy_fn, donate_argnums=(0,))
+        self._scores = jax.jit(metrics.page_scores)
+
+        # Build the page pool slabs from a one-page probe prefill: every
+        # prefill cache leaf [L, 1, page, nkv, dh] becomes a pool slab
+        # [L, n_pages, page, nkv, dh].
+        probe = {"tokens": jnp.zeros((1, pcfg.page_size), jnp.int32)}
+        _, cache_one = self._prefill(params, probe,
+                                     jnp.zeros((1,), jnp.int32))
+        def slab(leaf):
+            shape = (leaf.shape[0], pcfg.n_pages) + leaf.shape[2:]
+            return jnp.zeros(shape, leaf.dtype)
+        self.cache = {
+            "layers": jax.tree.map(slab, cache_one["layers"]),
+            "lengths": jnp.zeros((pcfg.max_batch,), jnp.int32),
+        }
+        self.last_token = jnp.zeros((pcfg.max_batch, 1), jnp.int32)
+
+    # -- jitted kernels -----------------------------------------------------
+
+    def _prefill_fn(self, params, batch, last_index):
+        return lm.prefill(params, self.cfg, batch, last_index=last_index)
+
+    def _decode_fn(self, params, tokens, cache, page_state):
+        return lm.decode_step_paged(params, self.cfg, tokens, cache,
+                                    page_state)
+
+    @staticmethod
+    def _scatter_fn(pool_layers, one_layers, phys):
+        """Write a prefilled sequence's rows into pool pages ``phys``."""
+        def put(pool, one):
+            rows = one[:, 0]                       # [L, T_pad, ...]
+            pg = pool.shape[2]
+            rows = rows.reshape(rows.shape[0], -1, pg, *rows.shape[2:])
+            return pool.at[:, phys].set(rows.astype(pool.dtype))
+        return jax.tree.map(put, pool_layers, one_layers)
+
+    @staticmethod
+    def _copy_fn(pool_layers, src, dst):
+        """COW: duplicate physical page ``src`` into ``dst`` (all layers)."""
+        return jax.tree.map(lambda pool: pool.at[:, dst].set(pool[:, src]),
+                            pool_layers)
+
+    # -- queueing -----------------------------------------------------------
+
+    def submit(self, req: Request):
+        if req.max_len is not None and req.max_len <= len(req.prompt):
+            raise ValueError(
+                f"request {req.rid}: max_len {req.max_len} leaves no room "
+                f"after a {len(req.prompt)}-token prompt")
+        total = len(req.prompt) + req.max_tokens
+        if req.max_len is not None:
+            total = min(total, req.max_len)
+        need = -(-total // self.pcfg.page_size)
+        if need > self.pool.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid}: {total} tokens needs {need} pages; "
+                f"pool holds {self.pool.n_pages - 1}")
+        req.out = []
+        self.queue.append(req)
+
+    def _pull_scores(self) -> np.ndarray:
+        return np.asarray(self._scores(self.cache["layers"]))
+
+    def _total_pages(self, req: Request) -> int:
+        total = len(req.prompt) + req.max_tokens
+        if req.max_len is not None:
+            total = min(total, req.max_len)
+        return -(-total // self.pcfg.page_size)
+
+    def _headroom(self) -> int:
+        """Pages obtainable right now minus pages owed to running
+        sequences. Admission reserves a request's worst-case page count up
+        front so decode-time growth (tables extend one page per
+        page_size tokens) can never exhaust the pool mid-sequence."""
+        return (self.pool.free_pages() + len(self.pool.evictable())
+                - sum(self.reserved.values()))
+
+    def admit(self):
+        while self.free and self.queue:
+            req = self.queue[0]
+            prompt = np.asarray(req.prompt, np.int64)
+            t = len(prompt)
+            total_pages = self._total_pages(req)
+            if self._headroom() < total_pages:
+                break                      # retry once sequences finish
+            scores = (self._pull_scores()
+                      if self.pool.free_pages() < total_pages else None)
+            try:
+                if self._share:
+                    pages, fresh, _ = self.alloc.admit(prompt, scores)
+                else:
+                    pages, fresh, _ = self._admit_private(t, scores)
+            except PoolExhausted:          # sharing surprises: defer
+                break
+            self.queue.pop(0)
+            slot = self.free.pop(0)
+
+            n_bucket = bucketing.bucket_pages(t, self.pcfg.page_size,
+                                              pow2=self.pcfg.bucket_pow2)
+            t_pad = n_bucket * self.pcfg.page_size
+            toks = bucketing.pad_tokens(prompt, t_pad)
+            logits, cache_one = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)[None, :]},
+                jnp.asarray([t - 1], jnp.int32))
+            phys = np.full((n_bucket,), SCRATCH, np.int32)
+            phys[:len(pages)] = pages
+            self.cache["layers"] = self._scatter(
+                self.cache["layers"], cache_one["layers"],
+                jnp.asarray(phys))
+            if self._share:
+                self.alloc.register_prompt_pages(prompt, pages, fresh)
+
+            tok = int(jnp.argmax(logits[0, :self.cfg.vocab]))
+            req.out.append(tok)
+            self.tables[slot] = list(pages)
+            self.reserved[slot] = max(0, total_pages - len(pages))
+            self.lengths[slot] = t
+            self.last_token = self.last_token.at[slot, 0].set(tok)
+            self.active[slot] = req
+            self.budget[slot] = req.max_tokens - 1
+
+    def _admit_private(self, t: int, scores):
+        """Admission with prefix sharing disabled: plain allocation."""
+        n = -(-t // self.pcfg.page_size)
+        pages = []
+        try:
+            for _ in range(n):
+                pages.append(self.alloc.extend(scores))
+        except PoolExhausted:
+            for pid in pages:
+                self.pool.decref(pid)
+            raise
+        return pages, list(pages), 0
+
+    # -- decode -------------------------------------------------------------
+
+    def _page_state(self) -> dict:
+        """Assemble block-table rows + write coordinates for this step."""
+        b, w = self.pcfg.max_batch, self.pcfg.hot_pages
+        page = self.pcfg.page_size
+        phys = np.full((b, w), -1, np.int32)
+        logical = np.full((b, w), -1, np.int32)
+        write_page = np.full((b,), SCRATCH, np.int32)
+        write_off = np.zeros((b,), np.int32)
+
+        need_scores = (any(len(self.tables[s]) > w for s in self.active)
+                       or self.pool.free_pages() == 0)
+        scores = self._pull_scores() if need_scores else None
+        for slot in self.active:
+            table = self.tables[slot]
+            length = int(self.lengths[slot])
+            idx = length // page
+            if idx == len(table):          # tail page full: grow
+                table.append(self.alloc.extend(scores))
+                self.reserved[slot] -= 1
+            cow = self.alloc.ensure_owned(table, idx)
+            if cow is not None:            # COW before the write
+                src, dst = cow
+                self.cache["layers"] = self._copy_page(
+                    self.cache["layers"], jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
+            ph, lg = self.alloc.select_hot(table, w, scores)
+            phys[slot] = ph
+            logical[slot] = lg
+            write_page[slot] = table[idx]
+            write_off[slot] = length % page
+        return {"phys": jnp.asarray(phys),
+                "logical": jnp.asarray(logical),
+                "write_page": jnp.asarray(write_page),
+                "write_off": jnp.asarray(write_off)}
+
+    def step(self):
+        if not self.active:
+            return
+        ps = self._page_state()
+        self.cache["lengths"] = jnp.asarray(self.lengths, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.last_token,
+                                          self.cache, ps)
+        logits = logits[:, :self.cfg.vocab]
+        if self.pcfg.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            self.rng, sub = jax.random.split(self.rng)
+            nxt = jax.random.categorical(
+                sub, logits / self.pcfg.temperature, axis=-1)
+        self.last_token = nxt[:, None].astype(jnp.int32)
+        nxt_host = np.asarray(nxt)
+        for slot, req in list(self.active.items()):
+            tok = int(nxt_host[slot])
+            req.out.append(tok)
+            self.lengths[slot] += 1
+            self.budget[slot] -= 1
+            limit = req.max_len
+            done = (tok == self.pcfg.eos_id or self.budget[slot] <= 0
+                    or (limit is not None
+                        and self.lengths[slot] + 1 >= limit))
+            if done:
+                self.alloc.release(self.tables.pop(slot))
+                del self.active[slot]
+                del self.budget[slot]
+                del self.reserved[slot]
+                self.lengths[slot] = 0
+                self.free.append(slot)
+                yield req
+
+    # -- driver -------------------------------------------------------------
+
+    def run(self, requests: list[Request], max_steps: int = 10_000):
+        """Serve a request list to completion; returns {rid: tokens}."""
+        for r in requests:
+            self.submit(r)
+        done: dict[int, list] = {}
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.admit()
+            for fin in self.step() or ():
+                done[fin.rid] = fin.out
+            steps += 1
+        return done
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        pool = self.pool.stats()
+        per_page = metrics.bytes_per_page(self.cache["layers"])
+        return {
+            "pool": pool,
+            "bytes_per_page": per_page,
+            "working_set_bytes": pool.peak_live * per_page,
+            "slab_bytes": metrics.tree_bytes(self.cache["layers"]),
+            "decode_compiles": self._decode._cache_size(),
+        }

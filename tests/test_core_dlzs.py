@@ -1,8 +1,6 @@
 """Unit + property tests for DLZS (log-domain sparsity prediction)."""
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+from _hypothesis_shim import hnp, hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,278 @@
+"""Paged KV-cache subsystem: pool mechanics, paged attention numerics,
+DLZS retention policy, and engine-level token parity with the dense slot
+engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
+                           bucketing, metrics)
+from repro.kvcache import paged_attention as pa
+from repro.models import lm
+from repro.serving import (EngineCfg, PagedEngineCfg, PagedServingEngine,
+                           Request, ServingEngine)
+
+jax.config.update("jax_enable_x64", False)
+
+
+# -- page pool ----------------------------------------------------------------
+
+def test_pool_alloc_free_refcount():
+    pool = PagePool(6, page_size=4)          # 5 usable (page 0 = scratch)
+    a, b = pool.alloc(), pool.alloc()
+    assert a != SCRATCH and b != SCRATCH and a != b
+    assert pool.ref(a) == 1
+    pool.incref(a)
+    assert pool.ref(a) == 2
+    pool.decref(a)
+    assert pool.ref(a) == 1
+    pool.decref(a)                           # unindexed ref-0 page is freed
+    assert pool.ref(a) == 0
+    assert pool.free_pages() == 4
+    for _ in range(4):
+        pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    st = pool.stats()
+    assert st.live == 5 and st.peak_live == 5 and st.free == 0
+
+
+def test_pool_prefix_share_and_cached_eviction():
+    pool = PagePool(5, page_size=4)
+    key = (1, 2, 3, 4)
+    pid = pool.alloc()
+    pool.register(key, pid)
+    # sharing: lookup bumps the refcount of the SAME page — no duplicate
+    assert pool.lookup(key) == pid
+    assert pool.ref(pid) == 2
+    assert pool.stats().shared_hits == 1
+    # releasing all refs caches (not frees) an indexed page
+    pool.decref(pid)
+    pool.decref(pid)
+    assert pool.evictable() == [pid]
+    # a cached page revives through the index
+    assert pool.lookup(key) == pid
+    assert pool.ref(pid) == 1
+    pool.decref(pid)
+    pool.evict(pid)
+    assert pool.lookup(key) is None          # evicted: index entry gone
+    assert pool.stats().evictions == 1
+
+
+def test_pool_cow_detaches_shared_page():
+    pool = PagePool(5, page_size=4)
+    pid = pool.alloc()
+    pool.register((0, 0, 0, 0), pid)
+    pool.lookup((0, 0, 0, 0))                # second reference
+    alloc = PagedAllocator(pool)
+    pages = [pid]
+    src, dst = alloc.ensure_owned(pages, 0)
+    assert src == pid and dst != pid
+    assert pages[0] == dst
+    assert pool.ref(pid) == 1 and pool.ref(dst) == 1
+    assert pool.stats().cow_copies == 1
+    # private pages are left alone
+    assert alloc.ensure_owned(pages, 0) is None
+
+
+def test_allocator_admit_shares_full_pages_only():
+    pool = PagePool(10, page_size=4)
+    alloc = PagedAllocator(pool)
+    p1, fresh1, sh1 = alloc.admit(list(range(10)))       # 2 full + 1 partial
+    assert len(p1) == 3 and sh1 == 0 and fresh1 == p1
+    alloc.register_prompt_pages(list(range(10)), p1, fresh1)
+    # same 8-token prefix, different tail: the 2 full pages are shared
+    prompt2 = list(range(8)) + [99, 98, 97]
+    p2, fresh2, sh2 = alloc.admit(prompt2)
+    assert sh2 == 2
+    assert p2[:2] == p1[:2]                  # NOT duplicated
+    assert p2[2] not in p1
+    assert pool.ref(p1[0]) == 2
+
+
+def test_allocator_select_hot_prefers_dlzs_scores():
+    pool = PagePool(12, page_size=4)
+    alloc = PagedAllocator(pool, recent_pages=1)
+    pages = [pool.alloc() for _ in range(6)]
+    scores = np.zeros(12)
+    scores[pages[1]] = 90.0                  # hottest cold page
+    scores[pages[3]] = 80.0
+    phys, logical = alloc.select_hot(pages, 3, scores)
+    # newest page always kept; two slots left for top-scored cold pages
+    assert list(logical) == [1, 3, 5]
+    assert list(phys) == [pages[1], pages[3], pages[5]]
+    # under capacity: identity mapping, -1 padded
+    phys, logical = alloc.select_hot(pages[:2], 4, scores)
+    assert list(logical) == [0, 1, -1, -1]
+    assert list(phys) == pages[:2] + [-1, -1]
+
+
+def test_allocator_eviction_lowest_score_first():
+    pool = PagePool(4, page_size=4)          # 3 usable
+    alloc = PagedAllocator(pool)
+    pids = [pool.alloc() for _ in range(3)]
+    for i, pid in enumerate(pids):
+        pool.register((i,), pid)
+        pool.decref(pid)                     # all cached
+    scores = np.zeros(4)
+    scores[pids[0]], scores[pids[1]], scores[pids[2]] = 5.0, 1.0, 9.0
+    got = alloc.extend(scores)               # evicts pids[1] (lowest score)
+    assert got == pids[1]
+    assert pool.lookup((1,)) is None
+    assert pool.lookup((0,)) is not None     # higher-scored pages survive
+
+
+def test_bucketing():
+    assert bucketing.bucket_pages(1, 16) == 1
+    assert bucketing.bucket_pages(17, 16) == 2
+    assert bucketing.bucket_pages(33, 16, pow2=True) == 4
+    assert bucketing.bucket_pages(33, 16, pow2=False) == 3
+    padded = bucketing.pad_tokens(np.arange(5), 8)
+    assert list(padded) == [0, 1, 2, 3, 4, 0, 0, 0]
+
+
+# -- paged attention numerics -------------------------------------------------
+
+def _paged_inputs(seed=0, B=2, nh=4, nkv=2, d=8, P=9, page=4, W=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, nh, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, page, nkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, page, nkv, d), jnp.float32)
+    phys = jnp.array([[1, 4, 2], [5, 3, -1]], jnp.int32)
+    logical = jnp.array([[0, 1, 2], [0, 1, -1]], jnp.int32)
+    kv_len = jnp.array([10, 7], jnp.int32)
+    return q, kp, vp, phys, logical, kv_len, nkv, page
+
+
+def test_paged_gather_decode_matches_dense_oracle():
+    q, kp, vp, phys, logical, kv_len, nkv, page = _paged_inputs()
+    out = pa.paged_gather_decode(q, kp, vp, phys, logical, kv_len, n_kv=nkv)
+    B, nh, d = q.shape
+    rep = nh // nkv
+    for b in range(B):
+        rows_k = np.concatenate(
+            [np.asarray(kp[int(p)]) for p, l in zip(phys[b], logical[b])
+             if int(l) >= 0], axis=0)[:int(kv_len[b])]
+        rows_v = np.concatenate(
+            [np.asarray(vp[int(p)]) for p, l in zip(phys[b], logical[b])
+             if int(l) >= 0], axis=0)[:int(kv_len[b])]
+        for h in range(nh):
+            g = h // rep
+            sc = rows_k[:, g] @ np.asarray(q[b, h]) / np.sqrt(d)
+            p_ = np.exp(sc - sc.max())
+            p_ /= p_.sum()
+            np.testing.assert_allclose(np.asarray(out[b, h]),
+                                       p_ @ rows_v[:, g],
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_paged_pallas_kernel_matches_fallback():
+    q, kp, vp, phys, logical, kv_len, nkv, _ = _paged_inputs(seed=3)
+    o_xla = pa.paged_decode(q, kp, vp, phys, logical, kv_len, n_kv=nkv,
+                            backend="xla")
+    o_pl = pa.paged_decode(q, kp, vp, phys, logical, kv_len, n_kv=nkv,
+                           backend="pallas")
+    np.testing.assert_allclose(np.asarray(o_xla), np.asarray(o_pl),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_page_scores_reduce_lz_codes():
+    from repro.core import dlzs
+    k = jnp.zeros((2, 5, 4, 3, 8), jnp.bfloat16)     # [L,P,page,nkv,dh]
+    k = k.at[1, 2, 0, 0, 0].set(64.0)                # exponent 6 in page 2
+    k = k.at[0, 4, 1, 2, 3].set(0.25)                # exponent -2 in page 4
+    tree = {"b0": {"attn": {"k": k, "k_lz": dlzs.lz_pack(k)}}}
+    s = np.asarray(metrics.page_scores(tree))
+    assert s.shape == (5,)
+    assert s[2] == 64 + 6 and s[4] == 64 - 2 and s[0] == 0
+
+
+# -- engine-level ------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+    params = lm.init(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+def _reqs(cfg, lengths, max_tokens=5):
+    return [Request(rid=i, prompt=(np.arange(l, dtype=np.int32) * 7 + i)
+                    % cfg.vocab, max_tokens=max_tokens)
+            for i, l in enumerate(lengths)]
+
+
+def test_paged_engine_token_parity_mixed_lengths(smoke_lm):
+    """Acceptance: paged == dense greedy outputs token-for-token on a
+    mixed-length batch, with exactly one decode compilation."""
+    cfg, params = smoke_lm
+    lengths = (5, 8, 17, 33, 40)
+    dense = ServingEngine(cfg, params,
+                          EngineCfg(max_batch=2, max_len=64, eos_id=-1))
+    want = dense.run(_reqs(cfg, lengths))
+    paged = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=32, hot_pages=4, recent_pages=2,
+        eos_id=-1))
+    got = paged.run(_reqs(cfg, lengths))
+    assert got == want
+    # variable-length admission never recompiled decode
+    assert paged.stats()["decode_compiles"] == 1
+
+
+def test_paged_engine_prefix_sharing_not_duplicated(smoke_lm):
+    cfg, params = smoke_lm
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=32, hot_pages=4, eos_id=-1))
+    shared = np.arange(32, dtype=np.int32)           # 2 full pages
+    reqs = [Request(rid=i, prompt=np.concatenate(
+                [shared, np.full((4 + i,), 100 + i, np.int32)]),
+                    max_tokens=3)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.admit()
+    t0, t1 = eng.tables[0], eng.tables[1]
+    assert t0[:2] == t1[:2], "shared prefix pages were duplicated"
+    assert t0[2] != t1[2]
+    assert eng.pool.ref(t0[0]) == 2
+    assert eng.pool.stats().shared_hits == 2
+    done = eng.run([])
+    assert set(done) == {0, 1}
+    # both sequences produced tokens despite physically shared prefix pages
+    assert all(len(v) == 3 for v in done.values())
+
+
+def test_paged_engine_per_request_max_len(smoke_lm):
+    cfg, params = smoke_lm
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=32, hot_pages=4, eos_id=-1))
+    reqs = [Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                    max_tokens=20, max_len=12),
+            Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                    max_tokens=4)]
+    done = eng.run(reqs)
+    assert len(done[0]) < 20                 # capped by its own max_len
+    assert len(done[1]) == 4
+    # a request that cannot ever fit the pool is rejected at submit
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(rid=2, prompt=np.arange(8, dtype=np.int32),
+                           max_tokens=31 * 16))
+    # max_len <= prompt would break page-reservation accounting: rejected
+    with pytest.raises(ValueError, match="no room"):
+        eng.submit(Request(rid=3, prompt=np.arange(32, dtype=np.int32),
+                           max_tokens=4, max_len=16))
+
+
+def test_paged_engine_pool_backpressure(smoke_lm):
+    """More concurrent demand than pages: admission defers, all finish."""
+    cfg, params = smoke_lm
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=9, hot_pages=4, eos_id=-1))
+    done = eng.run(_reqs(cfg, (20, 24, 28, 30, 22), max_tokens=4))
+    assert set(done) == {0, 1, 2, 3, 4}
+    assert all(len(v) == 4 for v in done.values())

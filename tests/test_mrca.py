@@ -1,7 +1,6 @@
 """MRCA (paper Alg. 1 / Fig. 15) schedule tests."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_shim import hypothesis, st
 import pytest
 
 from repro.core import mrca

@@ -8,7 +8,7 @@ from repro.shardlib import rules as shr
 
 
 def _mesh(shape=(1, 1), names=("data", "model")):
-    return jax.sharding.AbstractMesh(shape, names)
+    return shr.abstract_mesh(shape, names)
 
 
 def _mesh11():
@@ -44,8 +44,10 @@ def test_duplicate_mesh_axis_first_wins():
 
 def test_missing_mesh_axis_dropped():
     # single-pod mesh has no 'pod' axis; batch=('pod','data') degrades
+    # (a single surviving axis is emitted bare, not as a 1-tuple — older
+    # PartitionSpec does not normalize the two forms as equal)
     with shr.axis_rules(_mesh11()):
-        assert shr.logical_spec(("batch",)) == P(("data",))
+        assert shr.logical_spec(("batch",)) == P("data")
     mesh3 = _mesh((1, 1, 1), ("pod", "data", "model"))
     with shr.axis_rules(mesh3):
         assert shr.logical_spec(("batch",)) == P(("pod", "data"))

@@ -1,8 +1,7 @@
 """Chunk-parallel recurrence correctness: chunked form == sequential steps,
 prefill->decode continuity, xLSTM gates."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_shim import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

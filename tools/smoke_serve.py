@@ -1,0 +1,57 @@
+"""30-second serving smoke for CI: paged engine end-to-end on a tiny LM.
+
+Run:  PYTHONPATH=src python tools/smoke_serve.py
+
+Admits a small mixed-length batch through the paged KV-cache engine,
+checks every request completes with valid tokens, that variable-length
+admission compiled decode exactly once, and that prefix sharing kicked in.
+Exits non-zero on any failure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import PagedEngineCfg, PagedServingEngine, Request
+
+
+def main() -> int:
+    t0 = time.time()
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=24, hot_pages=3, eos_id=-1))
+
+    system = np.arange(16, dtype=np.int32)          # one shared full page
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [system, np.arange(2 + 3 * i, dtype=np.int32) + i]),
+                    max_tokens=4)
+            for i in range(5)]
+    done = eng.run(reqs)
+
+    st = eng.stats()
+    ok = (set(done) == {0, 1, 2, 3, 4}
+          and all(len(v) == 4 for v in done.values())
+          and all(0 <= t < cfg.vocab for v in done.values() for t in v)
+          and st["decode_compiles"] == 1
+          and st["pool"].shared_hits >= 4)
+    dt = time.time() - t0
+    print(f"smoke_serve: {len(done)} requests, "
+          f"{sum(len(v) for v in done.values())} tokens, "
+          f"peak {st['pool'].peak_live} pages, "
+          f"{st['pool'].shared_hits} prefix hits, "
+          f"{st['decode_compiles']} decode compile(s), {dt:.1f}s "
+          f"-> {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
