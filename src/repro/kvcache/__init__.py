@@ -11,16 +11,23 @@ DLZS prediction stage (§IV-A) decide which pages stay hot:
 
 * ``pool``       — host-side page pool: ref-counted pages, a token-prefix
                    index for copy-on-write prefix sharing (identical prompt
-                   prefixes are stored once), and a cached tier of ref-0
-                   pages retained for future reuse.
-* ``allocator``  — policy layer: admission (share-then-allocate), eviction
-                   (cached pages die lowest-DLZS-score-first) and hot-page
-                   retention (``select_hot``) for sparse decode.
+                   prefixes are stored once), a cached tier of ref-0 pages
+                   retained for future reuse, and the host-side ``SwapArea``
+                   where preempted sequences park page contents under pool
+                   pressure (serving/scheduler decides who; resume is a
+                   page-in).
+* ``allocator``  — policy layer: admission (share-then-allocate, whole
+                   prompts via ``admit`` or one prefill chunk at a time via
+                   ``admit_chunk``), eviction (cached pages die
+                   lowest-DLZS-score-first) and hot-page retention
+                   (``select_hot``) for sparse decode.
 * ``paged_attention`` — gather-based decode over block tables, as an XLA
                    ``jnp.take`` fallback and a Pallas scalar-prefetch kernel
-                   (kernels/paged.py).
-* ``bucketing``  — prompt-length buckets so variable-length admission costs
-                   O(log max_len) prefill compilations, not one per length.
+                   (kernels/paged.py); backend auto-dispatch picks pallas on
+                   TPU, xla elsewhere (``REPRO_PAGED_BACKEND`` overrides).
+* ``bucketing``  — prompt-length buckets (O(log max_len) prefill
+                   compilations, not one per length) and the page-aligned
+                   chunk math (``chunk_spans``) behind chunked prefill.
 * ``metrics``    — device-side page scoring + cache-bytes accounting.
 
 Page size choice
@@ -52,7 +59,8 @@ manager's utility signal.
 """
 
 from repro.kvcache.allocator import PagedAllocator
-from repro.kvcache.pool import SCRATCH, PagePool, PoolExhausted, PoolStats
+from repro.kvcache.pool import (SCRATCH, PagePool, PoolExhausted, PoolStats,
+                                SwapArea, SwapStats)
 
 __all__ = ["PagePool", "PagedAllocator", "PoolExhausted", "PoolStats",
-           "SCRATCH"]
+           "SCRATCH", "SwapArea", "SwapStats"]

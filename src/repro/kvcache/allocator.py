@@ -49,34 +49,62 @@ class PagedAllocator:
             self.pool.evict(victim)
         return self.pool.alloc()
 
+    @staticmethod
+    def _as_key_tokens(prompt: Sequence[int]) -> tuple:
+        """Prompt as the int tuple the prefix index is keyed by. Callers
+        on a per-chunk hot path pass a prebuilt tuple so the O(T)
+        conversion happens once per prompt, not once per chunk."""
+        return prompt if type(prompt) is tuple \
+            else tuple(int(x) for x in prompt)
+
     def admit(self, prompt: Sequence[int],
               scores: Optional[np.ndarray] = None
               ) -> tuple[list[int], list[int], int]:
-        """Map a prompt to pages. Returns (pages, fresh_pages, n_shared).
+        """Map a whole prompt to pages. Returns (pages, fresh_pages,
+        n_shared) — one ``admit_chunk`` covering every page.
 
         Full prompt pages are prefix-shared when an identical token prefix
         is already pooled; ``fresh_pages`` lists the pages the caller must
         write (and may register). On PoolExhausted every page taken so far
         is rolled back, so a deferred request retries cleanly later.
         """
+        n_pages = -(-len(prompt) // self.pool.page_size)
+        pages, fresh, n_shared, _ = self.admit_chunk(prompt, 0, n_pages,
+                                                     scores)
+        return pages, fresh, n_shared
+
+    def admit_chunk(self, prompt: Sequence[int], start_page: int,
+                    n_pages: int, scores: Optional[np.ndarray] = None, *,
+                    sharing: bool = True
+                    ) -> tuple[list[int], list[int], int, bool]:
+        """Incremental ``admit``: map prompt pages ``[start_page,
+        start_page + n_pages)`` only (one prefill chunk's worth).
+
+        ``sharing`` carries the caller's prefix-share state across chunks —
+        a page can only hit the index if every shallower page did, so once a
+        chunk sees a miss the flag comes back False and later chunks skip
+        the lookup. Returns (pages, fresh_pages, n_shared, sharing).
+        Rolls back this chunk's pages on PoolExhausted, leaving earlier
+        chunks' pages (owned by the caller) untouched.
+        """
         page = self.pool.page_size
         t = len(prompt)
-        n_pages = -(-t // page)
-        toks = tuple(int(x) for x in prompt)
+        # the key tuple is only needed while sharing is live — callers
+        # with sharing disabled skip the O(T) conversion entirely
+        toks = self._as_key_tokens(prompt) if sharing else None
         pages: list[int] = []
         fresh: list[int] = []
         n_shared = 0
-        sharing = True
         try:
-            for i in range(n_pages):
+            for i in range(start_page, start_page + n_pages):
                 end = (i + 1) * page
-                if sharing and end <= t:       # full page: try the index
+                if sharing and end <= t:
                     hit = self.pool.lookup(toks[:end])
                     if hit is not None:
                         pages.append(hit)
                         n_shared += 1
                         continue
-                    sharing = False            # deeper pages cannot match
+                sharing = False
                 pid = self._alloc_or_evict(scores)
                 pages.append(pid)
                 fresh.append(pid)
@@ -84,17 +112,20 @@ class PagedAllocator:
             for pid in pages:
                 self.pool.decref(pid)
             raise
-        return pages, fresh, n_shared
+        return pages, fresh, n_shared, sharing
 
     def register_prompt_pages(self, prompt: Sequence[int],
                               pages: Sequence[int],
-                              fresh: Sequence[int]) -> None:
-        """Index freshly-written FULL prompt pages for future sharing."""
+                              fresh: Sequence[int],
+                              start_page: int = 0) -> None:
+        """Index freshly-written FULL prompt pages for future sharing.
+        ``pages`` covers prompt pages starting at ``start_page`` (nonzero
+        for chunked prefill, where each chunk registers its own pages)."""
         page = self.pool.page_size
-        toks = tuple(int(x) for x in prompt)
+        toks = self._as_key_tokens(prompt)
         fresh_set = set(fresh)
         for i, pid in enumerate(pages):
-            end = (i + 1) * page
+            end = (start_page + i + 1) * page
             if end <= len(toks) and pid in fresh_set:
                 self.pool.register(toks[:end], pid)
 

@@ -1,4 +1,4 @@
-"""Prompt-length bucketing for recompile-free variable-length admission.
+"""Prompt-length bucketing + chunk math for recompile-free admission.
 
 Prefill compiles per input shape. Admitting raw prompt lengths would compile
 once per distinct length; padding every prompt to one engine-wide maximum
@@ -12,9 +12,19 @@ tokens <= their position, so the junk tail changes nothing that is kept.
 (For tile-granular STAR prefill the selection of a boundary q-tile can see
 junk rows — a selection-noise effect the engine documents; exactness holds
 whenever T is already bucket-aligned.)
+
+Chunked prefill (``chunk_spans``) slices a prompt into page-aligned chunks
+of at most ``chunk_pages`` pages so long prompts prefill incrementally,
+interleaved with decode steps. Every non-final chunk is exactly
+``chunk_pages`` pages wide (one compiled shape); the final remainder is
+bucketed like a monolithic prompt, so the set of compiled chunk widths
+stays O(log chunk_pages) and the set of past-page gather widths
+(``bucket_count``) stays O(log max_pages).
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
@@ -41,3 +51,46 @@ def pad_tokens(tokens: np.ndarray, padded_len: int) -> np.ndarray:
     out = np.zeros((padded_len,), dtype=np.int32)
     out[:t] = tokens
     return out
+
+
+def bucket_count(n: int, *, pow2: bool = True, lo: int = 1) -> int:
+    """Round a plain count (e.g. past pages to gather) up to a bucket."""
+    n = max(n, lo)
+    if not pow2:
+        return n
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def chunk_spans(n_tokens: int, page_size: int,
+                chunk_pages: Optional[int], *, pow2: bool = True
+                ) -> list[tuple[int, int, int]]:
+    """Split a prompt into page-aligned prefill chunks.
+
+    Returns ``[(start, end, width), ...]`` in token units: the chunk covers
+    prompt tokens ``[start, end)`` and is computed at padded width
+    ``width`` (a whole number of pages). ``chunk_pages=None`` disables
+    chunking — one span covering the whole prompt at its bucketed width,
+    which is exactly the monolithic prefill the engine always did.
+    Every ``start`` is a page multiple, so chunk K/V rows scatter onto
+    whole pool pages.
+    """
+    if n_tokens <= 0:
+        raise ValueError(f"empty prompt (n_tokens={n_tokens})")
+    if chunk_pages is not None and chunk_pages < 1:
+        raise ValueError(f"chunk_pages must be >= 1 or None, "
+                         f"got {chunk_pages}")
+    if chunk_pages is None or n_tokens <= chunk_pages * page_size:
+        return [(0, n_tokens, bucket_len(n_tokens, page_size, pow2=pow2))]
+    c_tok = chunk_pages * page_size
+    spans = []
+    start = 0
+    while start < n_tokens:
+        end = min(start + c_tok, n_tokens)
+        width = c_tok if end - start == c_tok else \
+            bucket_len(end - start, page_size, pow2=pow2)
+        spans.append((start, end, width))
+        start = end
+    return spans

@@ -20,6 +20,7 @@ any prompt length against one compiled decode shape.
 from __future__ import annotations
 
 import math
+import os
 from typing import Optional
 
 import jax
@@ -27,12 +28,35 @@ import jax.numpy as jnp
 
 NEG_INF = -1e30
 
-# Backend the model decode path uses. 'xla' everywhere a TPU isn't
-# guaranteed; flip to 'pallas' AND DEFAULT_INTERPRET to False on real TPU
-# deployments so the kernel lowers to Mosaic (same numerics — tests assert
-# kernel/fallback parity in interpret mode).
-DEFAULT_BACKEND = "xla"
-DEFAULT_INTERPRET = True
+_BACKENDS = ("xla", "pallas")
+
+
+def default_backend() -> str:
+    """Backend the model decode path uses.
+
+    Auto-selects the Pallas block-table kernel when JAX is actually running
+    on a TPU (the kernel lowers to Mosaic there) and the XLA gather
+    fallback everywhere else. ``REPRO_PAGED_BACKEND=xla|pallas`` overrides
+    — e.g. to A/B the kernel on TPU or to exercise the Pallas interpreter
+    on CPU. Note the engine's decode path reads this inside a jitted
+    function, so the override is captured at FIRST COMPILATION per engine:
+    set the env var before constructing the engine, not between steps.
+    Tests assert kernel/fallback parity in interpret mode, so the numerics
+    are identical either way.
+    """
+    env = os.environ.get("REPRO_PAGED_BACKEND", "").strip().lower()
+    if env:
+        if env not in _BACKENDS:
+            raise ValueError(
+                f"REPRO_PAGED_BACKEND={env!r}: choose from {_BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: False on real TPU (lower to Mosaic), True
+    anywhere else so a forced ``REPRO_PAGED_BACKEND=pallas`` still runs."""
+    return jax.default_backend() != "tpu"
 
 
 def _group(q: jax.Array, n_kv: int) -> jax.Array:
@@ -85,12 +109,17 @@ def paged_gather_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 def paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                  phys: jax.Array, logical: jax.Array, kv_len: jax.Array, *,
                  n_kv: int, scale: Optional[float] = None,
-                 backend: str = "xla",
-                 interpret: bool = True) -> jax.Array:
-    """Backend dispatch. ``backend``: 'xla' (gather fallback, default on
-    hosts without a TPU) or 'pallas' (block-table kernel). ``interpret``
-    only affects the pallas backend: leave True off-TPU, set False to
-    lower to Mosaic on real hardware."""
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Backend dispatch. ``backend``: 'xla' (gather fallback) or 'pallas'
+    (block-table kernel); None resolves via ``default_backend()`` —
+    pallas on TPU, xla elsewhere, ``REPRO_PAGED_BACKEND`` overriding.
+    ``interpret`` only affects the pallas backend: None resolves to False
+    on real TPU (lower to Mosaic) and True anywhere else."""
+    if backend is None:
+        backend = default_backend()
+    if interpret is None:
+        interpret = default_interpret()
     if backend == "xla":
         return paged_gather_decode(q, k_pages, v_pages, phys, logical,
                                    kv_len, n_kv=n_kv, scale=scale)

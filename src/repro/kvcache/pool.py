@@ -20,6 +20,10 @@ pages enter the index: the partial tail page of a sequence is always
 privately owned, so steady-state decode never writes a shared page. The
 ``cow`` path exists for the remaining case (an exactly page-aligned prompt
 whose tail full-page is shared) and for external callers that mutate pages.
+
+``SwapArea`` (bottom of this module) is the pool's host-side counterpart
+for preemption: page contents of swapped-out sequences live there, keyed by
+request id, until the scheduler pages them back in.
 """
 
 from __future__ import annotations
@@ -160,3 +164,65 @@ class PagePool:
             live=self.live_pages(), cached=len(self._cached),
             peak_live=self._peak_live, shared_hits=self._shared_hits,
             cow_copies=self._cow_copies, evictions=self._evictions)
+
+
+# ---------------------------------------------------------------------------
+# Host-side swap area (preemption under pool pressure)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SwapStats:
+    entries: int             # sequences currently parked on the host
+    bytes: int               # host bytes currently held
+    peak_bytes: int
+    swap_outs: int
+    swap_ins: int
+
+
+class SwapArea:
+    """Host-side parking lot for preempted sequences' page contents.
+
+    The pool is device-side and fixed-size; under pressure the scheduler
+    preempts a low-priority sequence and parks its pages *here* (plain host
+    arrays, engine-opaque payloads) instead of rejecting new work. The
+    entry key is the request id; swap-in pops the payload, and the engine
+    re-allocates device pages and uploads the content. ``SwapArea`` is pure
+    bookkeeping — it never touches device memory itself, mirroring how
+    ``PagePool`` never touches the slabs.
+    """
+
+    def __init__(self) -> None:
+        self._entries: dict[int, tuple[object, int]] = {}
+        self._bytes = 0
+        self._peak_bytes = 0
+        self._swap_outs = 0
+        self._swap_ins = 0
+
+    def put(self, rid: int, payload: object, nbytes: int) -> None:
+        assert rid not in self._entries, f"request {rid} already swapped"
+        self._entries[rid] = (payload, nbytes)
+        self._bytes += nbytes
+        self._peak_bytes = max(self._peak_bytes, self._bytes)
+        self._swap_outs += 1
+
+    def peek(self, rid: int) -> object:
+        """Payload without removing it — lets the engine size up a page-in
+        before committing to it."""
+        return self._entries[rid][0]
+
+    def take(self, rid: int) -> object:
+        payload, nbytes = self._entries.pop(rid)
+        self._bytes -= nbytes
+        self._swap_ins += 1
+        return payload
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> SwapStats:
+        return SwapStats(entries=len(self._entries), bytes=self._bytes,
+                         peak_bytes=self._peak_bytes,
+                         swap_outs=self._swap_outs, swap_ins=self._swap_ins)

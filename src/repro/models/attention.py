@@ -260,6 +260,75 @@ def apply_decode(params, cfg: AttentionCfg, x, cache, lengths):
     return shd(y, "batch", "seq", "embed"), new_cache
 
 
+def apply_prefill_chunk(params, cfg: AttentionCfg, x, positions, cache,
+                        past_phys, past_logical, past_len):
+    """Prefill one page-aligned chunk from a nonzero cache offset.
+
+    x [B,C,H] — the chunk's hidden states; positions [B,C] — ABSOLUTE token
+    positions (RoPE is position-exact, so past K rows already in the pool
+    match); cache k/v [P,page,nkv,dh] — this layer's pool slabs, read-only
+    here; past_phys/past_logical [B,Wp] — block-table rows of every page
+    written by earlier chunks (-1 = pad); past_len [B] — tokens already in
+    the cache.
+
+    Attention is exact: each chunk query attends to all past rows plus the
+    causal prefix of its own chunk (no STAR tile selection — chunked
+    prefill trades first-chunk sparsity for admission latency; see
+    docs/serving.md). Returns (y, chunk_cache) where chunk_cache holds the
+    chunk's K/V (+ int8 LZ codes) in prefill layout [B,C,nkv,dh] — the
+    caller scatters it into pool pages.
+    """
+    b, c, _ = x.shape
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    page = cache["k"].shape[1]
+
+    safe = jnp.maximum(past_phys, 0)
+    kg = jnp.take(cache["k"], safe, axis=0)        # [B, Wp, page, nkv, d]
+    vg = jnp.take(cache["v"], safe, axis=0)
+    wp = past_phys.shape[1]
+    sp = wp * page
+    kg = kg.reshape(b, sp, cfg.n_kv, cfg.head_dim).astype(q.dtype)
+    vg = vg.reshape(b, sp, cfg.n_kv, cfg.head_dim).astype(q.dtype)
+
+    past_pos = (past_logical[:, :, None] * page
+                + jnp.arange(page)[None, None, :]).reshape(b, sp)
+    past_ok = (past_logical[:, :, None] >= 0).repeat(page, axis=2)
+    past_ok = past_ok.reshape(b, sp) & (past_pos < past_len[:, None])
+
+    k_all = jnp.concatenate([kg, k], axis=1)        # [B, Sp+C, nkv, d]
+    v_all = jnp.concatenate([vg, v], axis=1)
+    kv_pos = jnp.concatenate([past_pos, positions], axis=1)
+    kv_ok = jnp.concatenate(
+        [past_ok, jnp.ones((b, c), bool)], axis=1)
+
+    # Grouped-GQA masked softmax in one tile: C is a handful of pages, so
+    # the [B,g,r,C,Sp+C] score block stays small; junk rows (chunk padding,
+    # page tails past past_len) are masked and can only feed junk queries.
+    n_rep = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(b, c, cfg.n_kv, n_rep, cfg.head_dim)
+    sc = jnp.einsum("btgrd,bsgd->bgrts", qg, k_all).astype(jnp.float32)
+    sc = sc * scale
+    mask = kv_ok[:, None, None, None, :] & \
+        (kv_pos[:, None, None, None, :] <= positions[:, None, None, :, None])
+    sc = jnp.where(mask, sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bgrts,bsgd->btgrd", (p / l).astype(q.dtype), v_all)
+    y = o.reshape(b, c, cfg.n_heads, cfg.head_dim)
+    out = jnp.einsum("bsnd,ndh->bsh", y, params["wo"])
+    out = shd(out, "batch", "act_seq", "embed")
+
+    chunk_cache = {"k": shd(k, "batch", "kv_seq", "kv_heads", "head_dim"),
+                   "v": shd(v, "batch", "kv_seq", "kv_heads", "head_dim")}
+    if cfg.lz_cache:
+        chunk_cache["k_lz"] = shd(dlzs.lz_pack(k),
+                                  "batch", "kv_seq", "kv_heads", "head_dim")
+    return out, chunk_cache
+
+
 def apply_decode_paged(params, cfg: AttentionCfg, x, cache, lengths,
                        page_state):
     """One-token decode against a paged pool. x [B,1,H];
@@ -290,9 +359,7 @@ def apply_decode_paged(params, cfg: AttentionCfg, x, cache, lengths,
     from repro.kvcache import paged_attention as kv_paged
     o = kv_paged.paged_decode(
         q[:, 0], new_cache["k"], new_cache["v"], page_state["phys"],
-        page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale,
-        backend=kv_paged.DEFAULT_BACKEND,
-        interpret=kv_paged.DEFAULT_INTERPRET)
+        page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale)
     y = jnp.einsum("bnd,ndh->bh",
                    o.reshape(b, cfg.n_heads, cfg.head_dim),
                    params["wo"])[:, None, :]

@@ -163,7 +163,13 @@ def _block_apply(params, cfg: ModelCfg, blk: BlockCfg, x, positions, *,
     acfg = cfg.attn_cfg(mode, causal)
     new_cache = {}
     if blk.kind == "attn":
-        if mode == "decode" and page_state is not None:
+        if mode == "prefill_chunk":
+            y, c = attention.apply_prefill_chunk(
+                params["core"], acfg, h, positions, cache["attn"],
+                page_state["past_phys"], page_state["past_logical"],
+                page_state["past_len"])
+            new_cache["attn"] = c
+        elif mode == "decode" and page_state is not None:
             y, new_attn = attention.apply_decode_paged(
                 params["core"], acfg, h, cache["attn"], lengths, page_state)
             new_cache["attn"] = new_attn
@@ -451,6 +457,38 @@ def prefill(params, cfg: ModelCfg, batch, *, cache_len: Optional[int] = None,
         lengths = last_index.astype(jnp.int32) + 1
     logits = _logits(params, cfg, x_last)
     return logits[:, 0], {"layers": caches, "lengths": lengths}
+
+
+def prefill_chunk_paged(params, cfg: ModelCfg, batch, cache, chunk_state):
+    """Prefill one page-aligned chunk of a prompt from a NONZERO cache
+    offset, attending to pool pages written by earlier chunks.
+
+    batch["tokens"] [B,C] — the chunk (right-padded to a page multiple);
+    ``cache["layers"]`` — pool slabs [L, n_pages, page, nkv, dh], read-only;
+    ``chunk_state``:
+      past_phys/past_logical [B,Wp] — block-table rows of the pages earlier
+        chunks wrote (-1 = pad; Wp is bucketed so compiles stay O(log)),
+      past_len [B] — tokens already cached (the chunk's absolute offset),
+      last_index [B] — within-chunk index whose logits to return (only
+        meaningful on a prompt's final chunk).
+
+    Returns (logits [B, vocab_padded], chunk_caches) where chunk_caches
+    have prefill layout [L, B, C, nkv, dh] — the engine scatters them into
+    this chunk's pool pages, exactly like a monolithic prefill's cache.
+    Shapes depend only on (C, Wp) buckets, never on the raw prompt length.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    b, c, _ = x.shape
+    positions = chunk_state["past_len"][:, None] + jnp.arange(c)[None, :]
+    x, chunk_caches, _ = _run_stack(
+        params["blocks"], cfg, cfg.pattern, x, positions,
+        mode="prefill_chunk", causal=cfg.causal, caches=cache["layers"],
+        page_state=chunk_state)
+    x_last = jnp.take_along_axis(
+        x, chunk_state["last_index"][:, None, None].astype(jnp.int32),
+        axis=1)
+    logits = _logits(params, cfg, x_last)
+    return logits[:, 0], {"layers": chunk_caches}
 
 
 def decode_step(params, cfg: ModelCfg, tokens, cache):

@@ -1,5 +1,6 @@
 from repro.serving.engine import EngineCfg, Request, ServingEngine
 from repro.serving.paged import PagedEngineCfg, PagedServingEngine
+from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
 
-__all__ = ["EngineCfg", "PagedEngineCfg", "PagedServingEngine", "Request",
-           "ServingEngine"]
+__all__ = ["EngineCfg", "NeedPages", "PagedEngineCfg", "PagedServingEngine",
+           "Request", "Scheduler", "SchedulerCfg", "ServingEngine"]

@@ -32,6 +32,9 @@ class Request:
     max_len: Optional[int] = None   # per-request total-length cap (paged
     #                                 engine; the dense engine's cap is the
     #                                 engine-wide EngineCfg.max_len)
+    priority: int = 0           # higher = more important: admitted first,
+    #                             preempted last under pool pressure (paged
+    #                             engine scheduler; ties break by arrival)
     out: Optional[list] = None
 
 
@@ -103,6 +106,16 @@ class ServingEngine:
     # -- decode -------------------------------------------------------------
 
     def step(self):
+        if not self.active:
+            return
+        # a request whose budget was exhausted by the prefill token (e.g.
+        # max_tokens=1) finishes without a decode step
+        for slot, req in list(self.active.items()):
+            if self.budget[slot] <= 0:
+                del self.active[slot]
+                del self.budget[slot]
+                self.free.append(slot)
+                yield req
         if not self.active:
             return
         logits, self.cache = self._decode(self.params, self.last_token,

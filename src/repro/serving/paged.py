@@ -5,29 +5,40 @@ the global page pool (repro.kvcache): requests own block tables of
 fixed-size pages, identical prompt prefixes share pages copy-on-write, and
 the DLZS retention policy picks which pages each decode step gathers.
 
-What changes vs. ``ServingEngine``:
+The engine is a thin EXECUTOR: scheduling policy — who admits, which
+prompt prefills its next chunk, who gets preempted under pool pressure —
+lives in ``repro.serving.scheduler``. The engine owns device state (pool
+slabs, block tables, jitted kernels) and exposes the ``exec_*`` primitives
+the scheduler drives:
 
-* ``max_len`` is a per-request property (``Request.max_len`` /
-  prompt+max_tokens), bounded only by pool capacity — not an engine cap.
-* Admission is length-bucketed (kvcache.bucketing): prefill compiles
-  O(log max_len) shapes; decode compiles ONCE — its shapes depend only on
-  (max_batch, hot_pages, pool size), never on sequence length.
-* Decode gathers at most ``hot_pages`` pages per sequence. When a sequence
-  outgrows that, the newest ``recent_pages`` stay hot and DLZS page scores
-  (max |int8 LZ code| per page — the decode predictor's own operand) rank
-  the cold pages; with ``hot_pages`` sized to the longest request the decode
-  is exact and token-parity with the dense engine holds.
-* Sparsity granularity: for STAR configs the paged engine replaces the
-  dense engine's element-granular ``star_decode`` with page-granular DLZS
-  retention — attention is exact *within* the gathered hot pages. Outputs
-  therefore match the dense engine only for ``star=None`` models (or
-  ``hot_pages`` covering everything); element-level SADS inside gathered
-  pages is a ROADMAP follow-up.
+* Chunked prefill — prompts prefill in page-aligned chunks
+  (``SchedulerCfg.chunk_pages``) that interleave with decode steps, so a
+  long prompt no longer stalls every running sequence and short-request
+  TTFT stays bounded. Chunk 0 reuses the bucketed monolithic prefill;
+  later chunks run ``lm.prefill_chunk_paged`` against the pages earlier
+  chunks wrote. Pages are allocated chunk-by-chunk — admission reserves
+  nothing up front — and chunks fully covered by shared prefix pages skip
+  their compute entirely.
+* Preemption instead of rejection — pool pressure (a chunk allocation or a
+  decode page-grow that cannot be satisfied) preempts the lowest-priority
+  running sequence: its pages are gathered to the host ``SwapArea``
+  (swap mode; resume is a page-in) or dropped and replayed through a
+  chunked prefill of prompt + generated tokens (recompute mode). Requests
+  are only ever refused at ``submit`` when they could never fit the pool.
+* ``max_len`` is a per-request property; admission is length-bucketed so
+  prefill compiles O(log max_len) shapes; decode compiles ONCE — its
+  shapes depend only on (max_batch, hot_pages, pool size).
+* Decode gathers at most ``hot_pages`` pages per sequence, DLZS page
+  scores ranking the cold pages (exact, token-parity with the dense
+  engine, when ``hot_pages`` covers the longest request).
 
-Single-step flow (same driver contract as the dense engine):
-  admit()  — prefix-share + allocate pages, bucketed prefill, pool scatter
-  step()   — ensure tail pages (COW guard), select hot pages, fused decode
-  reap()   — inside step(): emit finished sequences, release their pages
+Single-step flow (``step()`` = one scheduler tick):
+  admit   — swap preempted sequences back in, bind waiting requests to
+            free slots (no page allocation yet)
+  prefill — advance up to ``prefill_per_step`` prompts by one chunk:
+            share/allocate the chunk's pages, compute, scatter into pool
+  decode  — ensure tail pages (COW guard), select hot pages, fused decode;
+            finished sequences are reaped and their pages released
 """
 
 from __future__ import annotations
@@ -41,9 +52,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
-                           bucketing, metrics)
+                           SwapArea, bucketing, metrics)
 from repro.models import lm
 from repro.serving.engine import Request
+from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,8 +72,23 @@ class PagedEngineCfg:
     share_prefixes: bool = True
 
 
+@dataclasses.dataclass
+class _PrefillProgress:
+    """Host-side cursor of a partially prefilled prompt."""
+    prompt: np.ndarray           # effective prompt (original + replayed)
+    toks: Optional[tuple]        # same tokens as int tuple — built once,
+    #                              reused for every chunk's prefix-index
+    #                              key; None when prefix sharing is off
+    spans: list                  # bucketing.chunk_spans output
+    chunk: int                   # next span index to run
+    sharing: bool                # prefix-share state carried across chunks
+    suppress_first: bool         # recompute resume: the final chunk's
+    #                              sampled token was already emitted
+
+
 class PagedServingEngine:
     def __init__(self, model_cfg, params, pcfg: PagedEngineCfg,
+                 scfg: Optional[SchedulerCfg] = None,
                  rng: Optional[jax.Array] = None):
         if any(blk.kind != "attn" for blk in model_cfg.pattern):
             raise ValueError("paged engine supports attention-only patterns")
@@ -71,25 +98,37 @@ class PagedServingEngine:
         self.pcfg = pcfg
         self.params = params
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.sched = Scheduler(scfg or SchedulerCfg())
 
         # Prefix sharing is exact only if a full page never splits a STAR
         # prefill q-tile (tile selection mixes rows within a tile).
         self._share = pcfg.share_prefixes and (
             model_cfg.star is None
             or pcfg.page_size % model_cfg.star.block_q == 0)
+        if (model_cfg.star is not None
+                and self.sched.cfg.chunk_pages is not None
+                and (self.sched.cfg.chunk_pages * pcfg.page_size)
+                % model_cfg.star.block_q != 0):
+            raise ValueError(
+                "chunk_pages * page_size must be a multiple of the STAR "
+                "q-tile (block_q) so chunk boundaries stay tile-aligned")
 
         self.pool = PagePool(pcfg.n_pages, pcfg.page_size)
         self.alloc = PagedAllocator(self.pool,
                                     recent_pages=pcfg.recent_pages)
-        self.queue: list[Request] = []
+        self.swap_area = SwapArea()
         self.active: dict[int, Request] = {}       # slot -> request
-        self.budget: dict[int, int] = {}
+        self.budget: dict[int, int] = {}           # decode tokens left
         self.tables: dict[int, list[int]] = {}     # slot -> block table
-        self.reserved: dict[int, int] = {}         # slot -> pages still owed
+        self._pf: dict[int, _PrefillProgress] = {}  # slots mid-prefill
+        self._prefill_done: list[tuple[int, Request]] = []  # finished at
+        #                              prefill (budget 0): reaped next decode
         self.lengths = np.zeros((pcfg.max_batch,), np.int64)
         self.free = list(range(pcfg.max_batch))
 
         self._prefill = jax.jit(functools.partial(self._prefill_fn))
+        self._prefill_chunk = jax.jit(functools.partial(
+            self._prefill_chunk_fn))
         # donate the cache/pool slabs: these updates would otherwise keep
         # two full copies of the page pool live per step (no-op on CPU,
         # which lacks donation — load-bearing on TPU)
@@ -97,6 +136,8 @@ class PagedServingEngine:
                                donate_argnums=(2,))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
         self._copy_page = jax.jit(self._copy_fn, donate_argnums=(0,))
+        self._gather_pages = jax.jit(self._gather_fn)
+        self._page_in = jax.jit(self._page_in_fn, donate_argnums=(0,))
         self._scores = jax.jit(metrics.page_scores)
 
         # Build the page pool slabs from a one-page probe prefill: every
@@ -119,6 +160,10 @@ class PagedServingEngine:
     def _prefill_fn(self, params, batch, last_index):
         return lm.prefill(params, self.cfg, batch, last_index=last_index)
 
+    def _prefill_chunk_fn(self, params, batch, cache, chunk_state):
+        return lm.prefill_chunk_paged(params, self.cfg, batch, cache,
+                                      chunk_state)
+
     def _decode_fn(self, params, tokens, cache, page_state):
         return lm.decode_step_paged(params, self.cfg, tokens, cache,
                                     page_state)
@@ -139,6 +184,18 @@ class PagedServingEngine:
         return jax.tree.map(lambda pool: pool.at[:, dst].set(pool[:, src]),
                             pool_layers)
 
+    @staticmethod
+    def _gather_fn(pool_layers, phys):
+        """Swap-out: pull pages ``phys`` out of every slab (pad = scratch)."""
+        return jax.tree.map(lambda pool: pool[:, phys], pool_layers)
+
+    @staticmethod
+    def _page_in_fn(pool_layers, rows_layers, phys):
+        """Swap-in: write gathered page rows back at new physical ids."""
+        return jax.tree.map(
+            lambda pool, rows: pool.at[:, phys].set(rows.astype(pool.dtype)),
+            pool_layers, rows_layers)
+
     # -- queueing -----------------------------------------------------------
 
     def submit(self, req: Request):
@@ -155,85 +212,151 @@ class PagedServingEngine:
                 f"request {req.rid}: {total} tokens needs {need} pages; "
                 f"pool holds {self.pool.n_pages - 1}")
         req.out = []
-        self.queue.append(req)
+        self.sched.submit(req)
+
+    @property
+    def queue(self) -> list[Request]:
+        """Waiting work (fresh + preempted), highest priority first."""
+        return self.sched.queued_requests()
 
     def _pull_scores(self) -> np.ndarray:
         return np.asarray(self._scores(self.cache["layers"]))
 
-    def _total_pages(self, req: Request) -> int:
-        total = len(req.prompt) + req.max_tokens
-        if req.max_len is not None:
-            total = min(total, req.max_len)
-        return -(-total // self.pcfg.page_size)
+    # -- executor protocol: admission --------------------------------------
 
-    def _headroom(self) -> int:
-        """Pages obtainable right now minus pages owed to running
-        sequences. Admission reserves a request's worst-case page count up
-        front so decode-time growth (tables extend one page per
-        page_size tokens) can never exhaust the pool mid-sequence."""
-        return (self.pool.free_pages() + len(self.pool.evictable())
-                - sum(self.reserved.values()))
+    def free_slot_available(self) -> bool:
+        return bool(self.free)
 
-    def admit(self):
-        while self.free and self.queue:
-            req = self.queue[0]
+    def exec_admit(self, req: Request) -> int:
+        """Bind a request to a slot. Pages come later, chunk by chunk.
+
+        A request carrying prior output is a recompute-resume: its emitted
+        tokens are appended to the prompt and replayed through prefill
+        (exact under greedy decode), with the final sampled token
+        suppressed — it was already emitted before preemption."""
+        slot = self.free.pop(0)
+        out = req.out or []
+        if out:
+            prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int64),
+                 np.asarray(out[:-1], np.int64)])
+        else:
             prompt = np.asarray(req.prompt, np.int64)
-            t = len(prompt)
-            total_pages = self._total_pages(req)
-            if self._headroom() < total_pages:
-                break                      # retry once sequences finish
-            scores = (self._pull_scores()
-                      if self.pool.free_pages() < total_pages else None)
-            try:
-                if self._share:
-                    pages, fresh, _ = self.alloc.admit(prompt, scores)
-                else:
-                    pages, fresh, _ = self._admit_private(t, scores)
-            except PoolExhausted:          # sharing surprises: defer
-                break
-            self.queue.pop(0)
-            slot = self.free.pop(0)
+        spans = bucketing.chunk_spans(
+            len(prompt), self.pcfg.page_size, self.sched.cfg.chunk_pages,
+            pow2=self.pcfg.bucket_pow2)
+        self._pf[slot] = _PrefillProgress(
+            prompt=prompt,
+            toks=tuple(int(x) for x in prompt) if self._share else None,
+            spans=spans, chunk=0, sharing=self._share,
+            suppress_first=bool(out))
+        self.tables[slot] = []
+        self.active[slot] = req
+        self.lengths[slot] = 0
+        return slot
 
-            n_bucket = bucketing.bucket_pages(t, self.pcfg.page_size,
-                                              pow2=self.pcfg.bucket_pow2)
-            t_pad = n_bucket * self.pcfg.page_size
-            toks = bucketing.pad_tokens(prompt, t_pad)
-            logits, cache_one = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks)[None, :]},
-                jnp.asarray([t - 1], jnp.int32))
-            phys = np.full((n_bucket,), SCRATCH, np.int32)
-            phys[:len(pages)] = pages
+    def prefill_chunks_left(self, slot: int) -> int:
+        pf = self._pf.get(slot)
+        return 0 if pf is None else len(pf.spans) - pf.chunk
+
+    def held_pages(self, slot: int) -> int:
+        """Pages preempting this slot would actually FREE: prefix-shared
+        pages (ref > 1) survive a victim's release, so a slot whose table
+        is all shared hits is as useless a victim as an empty one."""
+        return sum(1 for pid in self.tables.get(slot, ())
+                   if self.pool.ref(pid) == 1)
+
+    # -- executor protocol: chunked prefill ---------------------------------
+
+    def exec_prefill_chunk(self, slot: int) -> bool:
+        """Share/allocate + compute + scatter ONE chunk of ``slot``'s
+        prompt. Returns True once the prompt is complete (slot enters
+        decode). Raises NeedPages when the pool cannot supply the chunk."""
+        pf = self._pf[slot]
+        req = self.active[slot]
+        page = self.pcfg.page_size
+        start, end, width = pf.spans[pf.chunk]
+        start_page = start // page
+        n_need = -(-end // page) - start_page
+        scores = (self._pull_scores()
+                  if self.pool.free_pages() < n_need else None)
+        try:
+            pages, fresh, _, sharing = self.alloc.admit_chunk(
+                pf.toks if pf.toks is not None else pf.prompt,
+                start_page, n_need, scores, sharing=pf.sharing)
+        except PoolExhausted:
+            raise NeedPages(slot) from None
+        pf.sharing = sharing
+        table = self.tables[slot]
+        table.extend(pages)
+        t = len(pf.prompt)
+        last = pf.chunk == len(pf.spans) - 1
+
+        logits = None
+        if fresh or last:          # fully-shared middle chunks skip compute
+            toks = bucketing.pad_tokens(pf.prompt[start:end], width)
+            batch = {"tokens": jnp.asarray(toks)[None, :]}
+            last_idx = (t - 1 if last else end - 1) - start
+            if start == 0:
+                logits, cache_one = self._prefill(
+                    self.params, batch, jnp.asarray([last_idx], jnp.int32))
+            else:
+                wp = bucketing.bucket_count(start_page,
+                                            pow2=self.pcfg.bucket_pow2)
+                past_phys = np.full((1, wp), -1, np.int32)
+                past_phys[0, :start_page] = table[:start_page]
+                past_logical = np.full((1, wp), -1, np.int32)
+                past_logical[0, :start_page] = np.arange(start_page)
+                chunk_state = {
+                    "past_phys": jnp.asarray(past_phys),
+                    "past_logical": jnp.asarray(past_logical),
+                    "past_len": jnp.asarray([start], jnp.int32),
+                    "last_index": jnp.asarray([last_idx], jnp.int32)}
+                logits, cache_one = self._prefill_chunk(
+                    self.params, batch, {"layers": self.cache["layers"]},
+                    chunk_state)
+            # chunk page j -> its fresh pool page; shared pages (content
+            # identical by construction) and bucket padding -> scratch
+            fresh_set = set(fresh)
+            phys = np.full((width // page,), SCRATCH, np.int32)
+            for j, pid in enumerate(pages):
+                if pid in fresh_set:
+                    phys[j] = pid
             self.cache["layers"] = self._scatter(
                 self.cache["layers"], cache_one["layers"],
                 jnp.asarray(phys))
             if self._share:
-                self.alloc.register_prompt_pages(prompt, pages, fresh)
+                self.alloc.register_prompt_pages(pf.toks, pages, fresh,
+                                                 start_page)
+        pf.chunk += 1
+        if not last:
+            return False
 
+        # prompt complete: first token, slot enters decode phase
+        if pf.suppress_first:
+            tok = int(req.out[-1])
+        else:
             tok = int(jnp.argmax(logits[0, :self.cfg.vocab]))
             req.out.append(tok)
-            self.tables[slot] = list(pages)
-            self.reserved[slot] = max(0, total_pages - len(pages))
-            self.lengths[slot] = t
-            self.last_token = self.last_token.at[slot, 0].set(tok)
-            self.active[slot] = req
-            self.budget[slot] = req.max_tokens - 1
+        del self._pf[slot]
+        self.lengths[slot] = t
+        self.last_token = self.last_token.at[slot, 0].set(tok)
+        self.budget[slot] = req.max_tokens - len(req.out)
+        if self.budget[slot] <= 0:     # e.g. max_tokens=1: done at prefill
+            self.alloc.release(self.tables.pop(slot))
+            del self.active[slot]
+            del self.budget[slot]
+            self.lengths[slot] = 0
+            self.free.append(slot)
+            self._prefill_done.append((slot, req))
+        return True
 
-    def _admit_private(self, t: int, scores):
-        """Admission with prefix sharing disabled: plain allocation."""
-        n = -(-t // self.pcfg.page_size)
-        pages = []
-        try:
-            for _ in range(n):
-                pages.append(self.alloc.extend(scores))
-        except PoolExhausted:
-            for pid in pages:
-                self.pool.decref(pid)
-            raise
-        return pages, list(pages), 0
+    # -- executor protocol: decode ------------------------------------------
 
-    # -- decode -------------------------------------------------------------
+    def _decode_slots(self) -> list[int]:
+        return [s for s in self.active if s not in self._pf]
 
-    def _page_state(self) -> dict:
+    def _page_state(self, slots: list[int]) -> dict:
         """Assemble block-table rows + write coordinates for this step."""
         b, w = self.pcfg.max_batch, self.pcfg.hot_pages
         page = self.pcfg.page_size
@@ -242,16 +365,25 @@ class PagedServingEngine:
         write_page = np.full((b,), SCRATCH, np.int32)
         write_off = np.zeros((b,), np.int32)
 
-        need_scores = (any(len(self.tables[s]) > w for s in self.active)
-                       or self.pool.free_pages() == 0)
+        # scores are needed for hot-page selection once any table exceeds
+        # W, and for eviction whenever the free list cannot cover EVERY
+        # sequence growing a page this step (not just when it is empty —
+        # the last grower of the step must still evict lowest-score-first)
+        growers = sum(1 for s in slots
+                      if int(self.lengths[s]) // page
+                      == len(self.tables[s]))
+        need_scores = (any(len(self.tables[s]) > w for s in slots)
+                       or self.pool.free_pages() < growers)
         scores = self._pull_scores() if need_scores else None
-        for slot in self.active:
+        for slot in slots:
             table = self.tables[slot]
             length = int(self.lengths[slot])
             idx = length // page
             if idx == len(table):          # tail page full: grow
-                table.append(self.alloc.extend(scores))
-                self.reserved[slot] -= 1
+                try:
+                    table.append(self.alloc.extend(scores))
+                except PoolExhausted:
+                    raise NeedPages(slot) from None
             cow = self.alloc.ensure_owned(table, idx)
             if cow is not None:            # COW before the write
                 src, dst = cow
@@ -268,10 +400,14 @@ class PagedServingEngine:
                 "write_page": jnp.asarray(write_page),
                 "write_off": jnp.asarray(write_off)}
 
-    def step(self):
-        if not self.active:
-            return
-        ps = self._page_state()
+    def exec_decode(self) -> list[tuple[int, Request]]:
+        slots = self._decode_slots()
+        if not slots:
+            done_early, self._prefill_done = self._prefill_done, []
+            return done_early
+        ps = self._page_state(slots)       # may raise NeedPages — drain
+        # the prefill-finished list only after it cannot raise anymore
+        done_early, self._prefill_done = self._prefill_done, []
         self.cache["lengths"] = jnp.asarray(self.lengths, jnp.int32)
         logits, self.cache = self._decode(self.params, self.last_token,
                                           self.cache, ps)
@@ -284,7 +420,9 @@ class PagedServingEngine:
                 sub, logits / self.pcfg.temperature, axis=-1)
         self.last_token = nxt[:, None].astype(jnp.int32)
         nxt_host = np.asarray(nxt)
-        for slot, req in list(self.active.items()):
+        finished = done_early
+        for slot in slots:
+            req = self.active[slot]
             tok = int(nxt_host[slot])
             req.out.append(tok)
             self.lengths[slot] += 1
@@ -297,12 +435,112 @@ class PagedServingEngine:
                 self.alloc.release(self.tables.pop(slot))
                 del self.active[slot]
                 del self.budget[slot]
-                del self.reserved[slot]
                 self.lengths[slot] = 0
                 self.free.append(slot)
-                yield req
+                finished.append((slot, req))
+        return finished
+
+    # -- executor protocol: preemption / swap -------------------------------
+
+    def _padded_table(self, table: list[int]) -> np.ndarray:
+        n = bucketing.bucket_count(len(table), pow2=self.pcfg.bucket_pow2)
+        phys = np.full((n,), SCRATCH, np.int32)
+        phys[:len(table)] = table
+        return phys
+
+    def exec_preempt(self, slot: int, swap: bool) -> bool:
+        """Evict ``slot``. swap=True parks its page contents in the host
+        SwapArea (resume = page-in); otherwise pages are dropped and the
+        sequence recomputes from prompt + emitted tokens on re-admission."""
+        req = self.active.pop(slot)
+        table = self.tables.pop(slot)
+        pf = self._pf.pop(slot, None)
+        swapped = False
+        if swap and table:
+            # gather BEFORE decref: page content is only guaranteed until
+            # the ids return to the free list. The gather width is
+            # pow2-bucketed for jit-shape stability, but only the real
+            # pages are parked — padding would inflate host swap bytes
+            # (and the reported swap pressure) by up to ~2x.
+            rows = self._gather_pages(self.cache["layers"],
+                                      jnp.asarray(self._padded_table(table)))
+            host = jax.tree.map(lambda r: np.asarray(r)[:, :len(table)],
+                                rows)
+            nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(host))
+            state = {"rows": host, "n_pages": len(table)}
+            if pf is not None:
+                state.update(kind="prefill", prompt=pf.prompt,
+                             toks=pf.toks, spans=pf.spans, chunk=pf.chunk,
+                             sharing=pf.sharing,
+                             suppress_first=pf.suppress_first)
+            else:
+                state.update(kind="decode",
+                             length=int(self.lengths[slot]),
+                             last_token=int(np.asarray(
+                                 self.last_token[slot, 0])),
+                             budget=self.budget[slot])
+            self.swap_area.put(req.rid, state, nbytes)
+            swapped = True
+        self.alloc.release(table)
+        self.budget.pop(slot, None)
+        self.lengths[slot] = 0
+        self.free.append(slot)
+        return swapped
+
+    def exec_swap_in(self, req: Request) -> Optional[int]:
+        """Page a swapped sequence back in, or None if the pool cannot hold
+        its block table right now."""
+        state = self.swap_area.peek(req.rid)
+        n = state["n_pages"]
+        if self.pool.free_pages() + len(self.pool.evictable()) < n:
+            return None
+        scores = (self._pull_scores()
+                  if self.pool.free_pages() < n else None)
+        pages = []
+        try:
+            for _ in range(n):
+                pages.append(self.alloc.extend(scores))
+        except PoolExhausted:      # defensive: roll back, entry stays put
+            for pid in pages:
+                self.pool.decref(pid)
+            return None
+        state = self.swap_area.take(req.rid)   # committed: pages acquired
+        slot = self.free.pop(0)
+        phys = self._padded_table(pages)
+        padded_n = len(phys)
+        # re-pad the parked rows to the jit bucket (pad rows land on the
+        # scratch page)
+        def pad_rows(r):
+            if padded_n == n:
+                return r
+            pad = np.zeros((r.shape[0], padded_n - n) + r.shape[2:],
+                           r.dtype)
+            return np.concatenate([r, pad], axis=1)
+        self.cache["layers"] = self._page_in(
+            self.cache["layers"], jax.tree.map(pad_rows, state["rows"]),
+            jnp.asarray(phys))
+        self.tables[slot] = pages
+        self.active[slot] = req
+        if state["kind"] == "prefill":
+            self._pf[slot] = _PrefillProgress(
+                prompt=state["prompt"], toks=state["toks"],
+                spans=state["spans"], chunk=state["chunk"],
+                sharing=state["sharing"],
+                suppress_first=state["suppress_first"])
+            self.lengths[slot] = 0
+        else:
+            self.lengths[slot] = state["length"]
+            self.last_token = self.last_token.at[slot, 0].set(
+                state["last_token"])
+            self.budget[slot] = state["budget"]
+        return slot
 
     # -- driver -------------------------------------------------------------
+
+    def step(self) -> list[Request]:
+        """One scheduler tick: admit / one-or-more prefill chunks / fused
+        decode. Returns the requests that finished this step."""
+        return self.sched.tick(self)
 
     def run(self, requests: list[Request], max_steps: int = 10_000):
         """Serve a request list to completion; returns {rid: tokens}."""
@@ -310,9 +548,8 @@ class PagedServingEngine:
             self.submit(r)
         done: dict[int, list] = {}
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
-            self.admit()
-            for fin in self.step() or ():
+        while self.sched.has_work() and steps < max_steps:
+            for fin in self.step():
                 done[fin.rid] = fin.out
             steps += 1
         return done
@@ -324,6 +561,8 @@ class PagedServingEngine:
         per_page = metrics.bytes_per_page(self.cache["layers"])
         return {
             "pool": pool,
+            "swap": self.swap_area.stats(),
+            "sched": dataclasses.replace(self.sched.stats),
             "bytes_per_page": per_page,
             "working_set_bytes": pool.peak_live * per_page,
             "slab_bytes": metrics.tree_bytes(self.cache["layers"]),

@@ -1,0 +1,290 @@
+"""Admission / chunked-prefill / preemption policy for the paged engine.
+
+The scheduler decides WHAT happens each engine step; the engine decides HOW
+(device work, page tables, jitted kernels). One ``tick`` interleaves three
+phases against an executor (``PagedServingEngine`` implements the protocol):
+
+  1. resume/admit — swap preempted sequences back in (highest priority
+     first; a blocked swap-in holds the line so large sequences cannot
+     starve), then bind waiting requests to free slots. Admission binds a
+     SLOT only — pages are allocated chunk-by-chunk during prefill, so a
+     long prompt no longer reserves its worst case up front.
+  2. prefill — advance at most ``prefill_per_step`` prefilling sequences by
+     ONE page-aligned chunk each, shortest-remaining-first within a
+     priority level, with aging: a prefill passed over ``starvation_ticks``
+     times jumps the SJF queue, so a long prompt keeps progressing under a
+     sustained short-prompt stream. Decode never waits for a whole prompt:
+     a long prefill is sliced across many ticks and short requests
+     admitted mid-way reach their first token early (chunked prefill is
+     what bounds TTFT).
+  3. decode — one fused decode step over every decode-phase slot.
+
+Pool pressure: when a chunk allocation or decode-time page growth hits
+``PoolExhausted``, the executor raises ``NeedPages`` and the scheduler
+preempts a victim — the lowest-priority page-holding sequence whose
+priority does not exceed the needy one's, newest first, preferring
+sequences not resumed this tick (anti-thrash; a resumed one is still
+evicted when it is the only eligible victim) — then retries. Preemption either
+SWAPS the victim's pages to the host ``SwapArea`` (cfg.swap=True; resumed
+by a page-in) or RELEASES them for recompute-from-prompt (the generated
+tokens are replayed through a chunked prefill on re-admission; greedy
+decode makes the replay exact). Either way the victim re-enters the queue
+ahead of later arrivals, so overload degrades throughput — it never rejects
+requests. A sequence that must grow but is itself the lowest-priority
+runner preempts itself; because ``submit`` caps any single request at pool
+capacity, the highest-priority sequence can always make progress, which is
+the no-deadlock argument the pressure tests pin down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol
+
+from repro.serving.engine import Request
+
+
+class NeedPages(RuntimeError):
+    """Executor signal: ``slot`` needs pool pages it could not obtain.
+
+    Raised instead of ``PoolExhausted`` once a request is running, so the
+    scheduler can pick a preemption victim and retry rather than defer."""
+
+    def __init__(self, slot: int):
+        super().__init__(f"slot {slot} needs pages")
+        self.slot = slot
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerCfg:
+    chunk_pages: Optional[int] = 4   # prefill chunk size in pages
+    #                                  (None = monolithic, the pre-chunking
+    #                                  behavior: one prefill per prompt)
+    prefill_per_step: int = 1        # prefill chunks advanced per tick
+    swap: bool = True                # preempt via host swap (False: drop
+    #                                  pages, recompute from prompt+output)
+    starvation_ticks: int = 8        # a prefill passed over this many
+    #                                  ticks goes first regardless of
+    #                                  remaining length (anti-starvation
+    #                                  aging for long prompts under a
+    #                                  sustained short-prompt stream)
+
+
+@dataclasses.dataclass
+class SchedStats:
+    preemptions: int = 0
+    swap_outs: int = 0
+    recomputes: int = 0
+    resumes: int = 0
+
+
+class Executor(Protocol):
+    """What the scheduler needs from an engine (or a test fake)."""
+
+    def free_slot_available(self) -> bool: ...
+
+    def exec_admit(self, req: Request) -> int:
+        """Bind a request (fresh, or recompute-resume carrying prior
+        output) to a free slot. Allocates NO pages."""
+
+    def exec_prefill_chunk(self, slot: int) -> bool:
+        """Advance one chunk; True when the prompt is fully prefilled and
+        the slot entered decode. May raise NeedPages."""
+
+    def prefill_chunks_left(self, slot: int) -> int: ...
+
+    def held_pages(self, slot: int) -> int:
+        """Pool pages preempting the slot would actually free (the
+        engine counts uniquely-owned pages; shared ones survive)."""
+
+    def exec_decode(self) -> list[tuple[int, "Request"]]:
+        """One fused decode step; returns finished (slot, request) pairs.
+        May raise NeedPages (a sequence's tail page filled up)."""
+
+    def exec_preempt(self, slot: int, swap: bool) -> bool:
+        """Evict a running sequence. True if its state went to the swap
+        area (resume = page-in), False if dropped for recompute."""
+
+    def exec_swap_in(self, req: Request) -> Optional[int]:
+        """Restore a swapped sequence into a free slot; None when the pool
+        cannot hold its pages right now (caller retries next tick)."""
+
+
+@dataclasses.dataclass
+class _Waiting:
+    req: Request
+    seqno: int                  # admission-order tiebreak (stable across
+    #                             preemption, so resumed work keeps rank)
+    swapped: bool = False       # payload parked in the engine's SwapArea
+
+    @property
+    def key(self):
+        return (-self.req.priority, self.seqno)
+
+
+@dataclasses.dataclass
+class _Running:
+    req: Request
+    seqno: int
+    phase: str                  # "prefill" | "decode"
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerCfg = SchedulerCfg()):
+        self.cfg = cfg
+        self.waiting: list[_Waiting] = []
+        self.running: dict[int, _Running] = {}     # slot -> state
+        self.stats = SchedStats()
+        self._seqno = 0
+        self._resumed_tick: set[int] = set()
+        self._pf_wait: dict[int, int] = {}   # prefill slot -> ticks since
+        #                                      its last chunk (aging)
+
+    # -- queue --------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(_Waiting(req, self._seqno))
+        self._seqno += 1
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def queued_requests(self) -> list[Request]:
+        return [w.req for w in sorted(self.waiting, key=lambda w: w.key)]
+
+    # -- one engine step ----------------------------------------------------
+
+    def tick(self, ex: Executor) -> list[Request]:
+        self._resumed_tick.clear()
+        self._admit_phase(ex)
+        self._prefill_phase(ex)
+        return self._decode_phase(ex)
+
+    # Phase 1: swapped sequences outrank fresh arrivals of equal priority
+    # (smaller seqno); a swap-in that does not fit blocks lower-ranked
+    # admissions so big preempted sequences cannot starve behind a stream
+    # of small fresh ones.
+    def _admit_phase(self, ex: Executor) -> None:
+        while self.waiting and ex.free_slot_available():
+            item = min(self.waiting, key=lambda w: w.key)
+            if item.swapped:
+                slot = ex.exec_swap_in(item.req)
+                if slot is None:
+                    return                         # retry next tick
+                # a swapped prefill resumes mid-chunk-sequence
+                phase = self._swapped_phase(ex, slot)
+                self.running[slot] = _Running(item.req, item.seqno, phase)
+                self._resumed_tick.add(slot)
+                self.stats.resumes += 1
+            else:
+                slot = ex.exec_admit(item.req)
+                self.running[slot] = _Running(item.req, item.seqno,
+                                              "prefill")
+            self._pf_wait.pop(slot, None)      # slot reuse: fresh aging
+            self.waiting.remove(item)
+
+    @staticmethod
+    def _swapped_phase(ex: Executor, slot: int) -> str:
+        return "prefill" if ex.prefill_chunks_left(slot) > 0 else "decode"
+
+    # Phase 2: shortest-remaining-prefill-first within a priority level —
+    # the chunk policy that minimizes short-request TTFT under mixed
+    # traffic. SJF alone would starve a long prompt under a sustained
+    # stream of short ones, so a prefill passed over ``starvation_ticks``
+    # times is aged to the front of its priority level (oldest first).
+    def _prefill_phase(self, ex: Executor) -> None:
+        def order(slot):
+            st = self.running[slot]
+            starved = self._pf_wait.get(slot, 0) >= \
+                self.cfg.starvation_ticks
+            return (-st.req.priority, not starved,
+                    st.seqno if starved else ex.prefill_chunks_left(slot),
+                    st.seqno)
+
+        budget = self.cfg.prefill_per_step
+        advanced: set[int] = set()
+        while budget > 0:
+            cands = sorted((s for s, st in self.running.items()
+                            if st.phase == "prefill"), key=order)
+            if not cands:
+                break
+            slot = cands[0]
+            advanced.add(slot)
+            budget -= 1
+            try:
+                if ex.exec_prefill_chunk(slot):
+                    self.running[slot].phase = "decode"
+            except NeedPages:
+                victim = self._pick_victim(ex, needy=slot)
+                if victim is None or victim == slot:
+                    self._preempt(ex, slot)        # self-preempt: requeue
+                else:
+                    self._preempt(ex, victim)
+                    budget += 1                    # retry the same slot
+        # aging bookkeeping: slots passed over this tick accumulate wait
+        for s, st in list(self.running.items()):
+            if st.phase == "prefill":
+                self._pf_wait[s] = 0 if s in advanced \
+                    else self._pf_wait.get(s, 0) + 1
+            else:
+                self._pf_wait.pop(s, None)
+
+    # Phase 3: decode retries after preempting until the batch fits.
+    def _decode_phase(self, ex: Executor) -> list[Request]:
+        if not any(st.phase == "decode" for st in self.running.values()):
+            return []
+        while True:
+            try:
+                finished = ex.exec_decode()
+                break
+            except NeedPages as e:
+                victim = self._pick_victim(ex, needy=e.slot)
+                if victim is None:
+                    victim = e.slot
+                self._preempt(ex, victim)
+                if not any(st.phase == "decode"
+                           for st in self.running.values()):
+                    return []
+        out = []
+        for slot, req in finished:
+            del self.running[slot]
+            out.append(req)
+        return out
+
+    # -- preemption ---------------------------------------------------------
+
+    def _pick_victim(self, ex: Executor, needy: int) -> Optional[int]:
+        """Among slots whose eviction actually FREES pages (preempting a
+        page-less or all-shared-pages slot frees nothing — it only churns
+        admissions) and whose priority does NOT exceed the needy slot's
+        (a low-priority arrival must never evict a higher-priority
+        runner — it defers instead): lowest priority first; within a
+        priority level prefer sequences NOT resumed this tick
+        (anti-thrash — a same-tick swap-in/swap-out round trip wastes the
+        page-in), then the newest. The needy slot itself is a legal
+        victim — self-preemption frees the batch for others. None when no
+        eligible victim exists (the caller self-preempts/defers the needy
+        slot)."""
+        def rank(slot):
+            st = self.running[slot]
+            return (st.req.priority, slot in self._resumed_tick, -st.seqno)
+
+        needy_prio = self.running[needy].req.priority \
+            if needy in self.running else 0
+        cands = [s for s in self.running
+                 if ex.held_pages(s) > 0
+                 and self.running[s].req.priority <= needy_prio]
+        if not cands:
+            return None
+        return min(cands, key=rank)
+
+    def _preempt(self, ex: Executor, slot: int) -> None:
+        st = self.running.pop(slot)
+        self._pf_wait.pop(slot, None)
+        swapped = ex.exec_preempt(slot, self.cfg.swap)
+        self.stats.preemptions += 1
+        if swapped:
+            self.stats.swap_outs += 1
+        else:
+            self.stats.recomputes += 1
+        self.waiting.append(_Waiting(st.req, st.seqno, swapped=swapped))

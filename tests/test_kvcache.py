@@ -15,7 +15,7 @@ from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
 from repro.kvcache import paged_attention as pa
 from repro.models import lm
 from repro.serving import (EngineCfg, PagedEngineCfg, PagedServingEngine,
-                           Request, ServingEngine)
+                           Request, SchedulerCfg, ServingEngine)
 
 jax.config.update("jax_enable_x64", False)
 
@@ -136,6 +136,45 @@ def test_bucketing():
     assert list(padded) == [0, 1, 2, 3, 4, 0, 0, 0]
 
 
+def test_chunk_spans():
+    # monolithic: one span at the bucketed width
+    assert bucketing.chunk_spans(33, 16, None) == [(0, 33, 64)]
+    assert bucketing.chunk_spans(33, 16, None, pow2=False) == [(0, 33, 48)]
+    # short prompt: chunking never pads beyond the monolithic bucket
+    assert bucketing.chunk_spans(8, 16, 4) == [(0, 8, 16)]
+    # long prompt: full chunks then a bucketed remainder, page-aligned
+    spans = bucketing.chunk_spans(100, 16, 2)
+    assert spans == [(0, 32, 32), (32, 64, 32), (64, 96, 32), (96, 100, 16)]
+    assert all(s % 16 == 0 for s, _, _ in spans)
+    with pytest.raises(ValueError):
+        bucketing.chunk_spans(0, 16, 2)
+    with pytest.raises(ValueError, match="chunk_pages"):
+        bucketing.chunk_spans(100, 16, 0)
+
+
+def test_bucket_count():
+    assert bucketing.bucket_count(0) == 1
+    assert bucketing.bucket_count(3) == 4
+    assert bucketing.bucket_count(4) == 4
+    assert bucketing.bucket_count(5, pow2=False) == 5
+
+
+def test_allocator_admit_chunk_incremental_sharing():
+    pool = PagePool(12, page_size=4)
+    alloc = PagedAllocator(pool)
+    prompt = list(range(10))                     # 2 full + 1 partial page
+    p1, f1, _, _ = alloc.admit_chunk(prompt, 0, 2, sharing=True)
+    alloc.register_prompt_pages(prompt, p1, f1, 0)
+    p2, f2, _, _ = alloc.admit_chunk(prompt, 2, 1, sharing=False)
+    alloc.register_prompt_pages(prompt, p2, f2, 2)
+    # a second admission of the same prompt shares chunk-by-chunk
+    q1, fr1, sh1, sharing = alloc.admit_chunk(prompt, 0, 2, sharing=True)
+    assert q1 == p1 and sh1 == 2 and not fr1 and sharing
+    q2, fr2, sh2, sharing = alloc.admit_chunk(prompt, 2, 1, sharing=sharing)
+    assert sh2 == 0 and len(fr2) == 1 and not sharing
+    assert q2[0] not in p1 + p2                  # partial page never shared
+
+
 # -- paged attention numerics -------------------------------------------------
 
 def _paged_inputs(seed=0, B=2, nh=4, nkv=2, d=8, P=9, page=4, W=3):
@@ -231,11 +270,14 @@ def test_paged_engine_prefix_sharing_not_duplicated(smoke_lm):
     shared = np.arange(32, dtype=np.int32)           # 2 full pages
     reqs = [Request(rid=i, prompt=np.concatenate(
                 [shared, np.full((4 + i,), 100 + i, np.int32)]),
-                    max_tokens=3)
+                    max_tokens=6)
             for i in range(2)]
     for r in reqs:
         eng.submit(r)
-    eng.admit()
+    # two ticks: admission binds both slots; prefill advances one prompt
+    # per tick (prefill_per_step=1)
+    eng.step()
+    eng.step()
     t0, t1 = eng.tables[0], eng.tables[1]
     assert t0[:2] == t1[:2], "shared prefix pages were duplicated"
     assert t0[2] != t1[2]
@@ -244,7 +286,7 @@ def test_paged_engine_prefix_sharing_not_duplicated(smoke_lm):
     done = eng.run([])
     assert set(done) == {0, 1}
     # both sequences produced tokens despite physically shared prefix pages
-    assert all(len(v) == 3 for v in done.values())
+    assert all(len(v) == 6 for v in done.values())
 
 
 def test_paged_engine_per_request_max_len(smoke_lm):
@@ -268,6 +310,22 @@ def test_paged_engine_per_request_max_len(smoke_lm):
                            max_tokens=4, max_len=16))
 
 
+def test_engines_respect_max_tokens_one(smoke_lm):
+    """max_tokens=1 means exactly one token (the prefill argmax) — the
+    slot must not take a decode step. Both engines agree."""
+    cfg, params = smoke_lm
+    reqs = lambda: [Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                            max_tokens=1)]
+    dense = ServingEngine(cfg, params,
+                          EngineCfg(max_batch=2, max_len=64, eos_id=-1))
+    d = dense.run(reqs())
+    paged = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=32, hot_pages=4, eos_id=-1))
+    p = paged.run(reqs())
+    assert len(d[0]) == 1 and p == d
+    assert paged.pool.live_pages() == 0          # pages released at prefill
+
+
 def test_paged_engine_pool_backpressure(smoke_lm):
     """More concurrent demand than pages: admission defers, all finish."""
     cfg, params = smoke_lm
@@ -276,3 +334,76 @@ def test_paged_engine_pool_backpressure(smoke_lm):
     done = eng.run(_reqs(cfg, (20, 24, 28, 30, 22), max_tokens=4))
     assert set(done) == {0, 1, 2, 3, 4}
     assert all(len(v) == 4 for v in done.values())
+
+
+def test_paged_engine_chunked_prefill_parity(smoke_lm):
+    """Chunked prefill (1-page chunks, interleaved with decode) emits the
+    exact same greedy tokens as the dense engine, still with one decode
+    compilation."""
+    cfg, params = smoke_lm
+    lengths = (5, 8, 17, 33, 40)
+    dense = ServingEngine(cfg, params,
+                          EngineCfg(max_batch=2, max_len=64, eos_id=-1))
+    want = dense.run(_reqs(cfg, lengths))
+    paged = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=32, hot_pages=4, recent_pages=2,
+        eos_id=-1), SchedulerCfg(chunk_pages=1))
+    got = paged.run(_reqs(cfg, lengths))
+    assert got == want
+    assert paged.stats()["decode_compiles"] == 1
+
+
+def test_paged_engine_preempt_resume_parity(smoke_lm):
+    """Oversubscribed pool (4 slots x 3 pages needed, 8 usable pages):
+    decode-time growth must preempt. Both preemption flavors — host swap
+    with page-in resume, and recompute-from-prompt replay — must (a) not
+    deadlock, (b) finish every admitted request, (c) keep token parity
+    with the dense engine since hot_pages covers every sequence."""
+    cfg, params = smoke_lm
+    lengths = (16, 17, 16, 18)                   # ~1 page each, then growth
+    dense = ServingEngine(cfg, params,
+                          EngineCfg(max_batch=2, max_len=64, eos_id=-1))
+    want = dense.run(_reqs(cfg, lengths, max_tokens=20))
+    for swap in (True, False):
+        eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+            max_batch=4, page_size=16, n_pages=9, hot_pages=4, eos_id=-1),
+            SchedulerCfg(chunk_pages=1, swap=swap))
+        got = eng.run(_reqs(cfg, lengths, max_tokens=20), max_steps=500)
+        st = eng.stats()
+        assert got == want, f"swap={swap} diverged"
+        assert st["sched"].preemptions > 0       # pressure actually hit
+        if swap:
+            assert st["swap"].swap_outs > 0
+            assert st["swap"].swap_ins == st["swap"].swap_outs
+            assert st["swap"].entries == 0       # nothing left behind
+        else:
+            assert st["sched"].recomputes == st["sched"].preemptions
+    # no sequence left running, every page returned
+    assert not eng.active and eng.pool.live_pages() == 0
+
+
+def test_paged_engine_priority_preempts_low_first(smoke_lm):
+    """Under pressure the low-priority request is the victim; the
+    high-priority one is never preempted and still finishes exactly."""
+    cfg, params = smoke_lm
+    reqs = [Request(rid=0, prompt=(np.arange(16, dtype=np.int32) * 7)
+                    % cfg.vocab, max_tokens=20, priority=0),
+            Request(rid=1, prompt=(np.arange(17, dtype=np.int32) * 7 + 1)
+                    % cfg.vocab, max_tokens=20, priority=5),
+            Request(rid=2, prompt=(np.arange(16, dtype=np.int32) * 7 + 2)
+                    % cfg.vocab, max_tokens=20, priority=0),
+            Request(rid=3, prompt=(np.arange(18, dtype=np.int32) * 7 + 3)
+                    % cfg.vocab, max_tokens=20, priority=0)]
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=9, hot_pages=4, eos_id=-1),
+        SchedulerCfg(chunk_pages=1, swap=True))
+    victims = []
+    orig = eng.exec_preempt
+    def spy(slot, swap):
+        victims.append(eng.active[slot].rid)
+        return orig(slot, swap)
+    eng.exec_preempt = spy
+    done = eng.run(reqs, max_steps=500)
+    assert set(done) == {0, 1, 2, 3}
+    assert all(len(v) == 20 for v in done.values())
+    assert victims and 1 not in victims          # high priority never evicted

@@ -1,0 +1,269 @@
+"""Scheduler policy unit tests against a fake executor (no device work),
+plus SwapArea bookkeeping and paged-attention backend dispatch."""
+
+import numpy as np
+import pytest
+
+from repro.kvcache import SwapArea
+from repro.kvcache import paged_attention as pa
+from repro.serving import Request
+from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
+
+
+class FakeEngine:
+    """Host-only executor: a page budget instead of a device pool.
+
+    Each sequence costs pages only while running; prefill takes
+    ``chunks`` steps of one page each, decode grows one page per step
+    until ``decode_steps`` run out. NeedPages fires exactly like the real
+    engine: when the next page would exceed capacity.
+    """
+
+    def __init__(self, capacity: int, slots: int, chunks: dict,
+                 decode_steps: dict):
+        self.capacity = capacity
+        self.free = list(range(slots))
+        self.chunks = chunks                  # rid -> prefill chunk count
+        self.decode_steps = decode_steps      # rid -> decode steps to run
+        self.pages: dict[int, int] = {}       # slot -> pages held
+        self.state: dict[int, dict] = {}      # slot -> progress
+        self.swapped: dict[int, dict] = {}    # rid -> parked progress
+        self.log: list = []
+        self.preempt_held: list[int] = []     # pages each victim held
+
+    def _used(self):
+        return sum(self.pages.values())
+
+    def free_slot_available(self):
+        return bool(self.free)
+
+    def exec_admit(self, req):
+        slot = self.free.pop(0)
+        self.pages[slot] = 0
+        self.state[slot] = {"req": req, "chunk": 0,
+                            "dec": self.decode_steps[req.rid]}
+        self.log.append(("admit", req.rid))
+        return slot
+
+    def prefill_chunks_left(self, slot):
+        st = self.state[slot]
+        return self.chunks[st["req"].rid] - st["chunk"]
+
+    def held_pages(self, slot):
+        return self.pages.get(slot, 0)
+
+    def exec_prefill_chunk(self, slot):
+        if self._used() + 1 > self.capacity:
+            raise NeedPages(slot)
+        st = self.state[slot]
+        self.pages[slot] += 1
+        st["chunk"] += 1
+        self.log.append(("chunk", st["req"].rid))
+        return self.prefill_chunks_left(slot) == 0
+
+    def exec_decode(self):
+        decode = [s for s in self.state
+                  if self.prefill_chunks_left(s) == 0]
+        for slot in decode:                   # grow before the step —
+            st = self.state[slot]             # idempotent across retries,
+            if not st.get("grown"):           # like the real block table
+                if self._used() + 1 > self.capacity:
+                    raise NeedPages(slot)
+                self.pages[slot] += 1
+                st["grown"] = True
+        finished = []
+        for slot in decode:
+            st = self.state[slot]
+            st["grown"] = False
+            st["dec"] -= 1
+            if st["dec"] <= 0:
+                self.pages.pop(slot)
+                self.state.pop(slot)
+                self.free.append(slot)
+                finished.append((slot, st["req"]))
+        self.log.append(("decode", sorted(st["req"].rid for st in
+                                          self.state.values())))
+        return finished
+
+    def exec_preempt(self, slot, swap):
+        st = self.state.pop(slot)
+        held = self.pages.pop(slot)
+        self.free.append(slot)
+        self.preempt_held.append(held)
+        self.log.append(("preempt", st["req"].rid, swap))
+        if swap:
+            self.swapped[st["req"].rid] = {"st": st, "pages": held}
+            return True
+        return False
+
+    def exec_swap_in(self, req):
+        parked = self.swapped[req.rid]
+        if self._used() + parked["pages"] > self.capacity:
+            return None
+        slot = self.free.pop(0)
+        parked = self.swapped.pop(req.rid)
+        self.pages[slot] = parked["pages"]
+        self.state[slot] = parked["st"]
+        self.log.append(("swap_in", req.rid))
+        return slot
+
+
+def _req(rid, priority=0):
+    return Request(rid=rid, prompt=np.arange(4, dtype=np.int32),
+                   priority=priority, out=[])
+
+
+def _drain(sched, ex, max_ticks=200):
+    done = []
+    for _ in range(max_ticks):
+        if not sched.has_work():
+            return done
+        done += sched.tick(ex)
+    raise AssertionError("scheduler did not drain (deadlock?)")
+
+
+def test_scheduler_prefill_interleaves_with_decode():
+    """A long prefill advances one chunk per tick while an admitted short
+    request decodes — decode never waits for the whole prompt."""
+    ex = FakeEngine(capacity=100, slots=2,
+                    chunks={0: 6, 1: 1}, decode_steps={0: 2, 1: 6})
+    sched = Scheduler(SchedulerCfg(prefill_per_step=1))
+    sched.submit(_req(0))                        # long prompt, first in line
+    sched.submit(_req(1))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1}
+    # request 1 (one chunk) decoded while request 0 was still prefilling
+    first_decode = next(i for i, e in enumerate(ex.log)
+                        if e[0] == "decode" and 1 in e[1])
+    later_chunks = [e for e in ex.log[first_decode:] if e == ("chunk", 0)]
+    assert later_chunks, "long prefill should still be running"
+
+
+def test_scheduler_shortest_prefill_first():
+    """Within a priority level the prompt with fewer remaining chunks
+    prefills first (bounds short-request TTFT)."""
+    ex = FakeEngine(capacity=100, slots=2,
+                    chunks={0: 5, 1: 1}, decode_steps={0: 1, 1: 1})
+    sched = Scheduler(SchedulerCfg(prefill_per_step=1))
+    sched.submit(_req(0))
+    sched.submit(_req(1))
+    sched.tick(ex)
+    assert ("chunk", 1) in ex.log                # short one went first
+    assert ("chunk", 0) not in ex.log
+
+
+def test_scheduler_aging_unstarves_long_prefill():
+    """SJF alone would park a long prompt behind a stream of short ones;
+    aging forces a chunk of the long prefill through every
+    ``starvation_ticks`` ticks."""
+    chunks = {0: 6}
+    decode = {0: 1}
+    for rid in range(1, 9):                      # sustained short stream
+        chunks[rid] = 1
+        decode[rid] = 1
+    ex = FakeEngine(capacity=100, slots=3, chunks=chunks,
+                    decode_steps=decode)
+    sched = Scheduler(SchedulerCfg(prefill_per_step=1, starvation_ticks=2))
+    for rid in sorted(chunks):
+        sched.submit(_req(rid))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == set(chunks)
+    # the long prompt's chunks interleave with the short stream instead of
+    # all trailing it: at least one lands before the last short's chunk
+    chunk_rids = [e[1] for e in ex.log if e[0] == "chunk"]
+    last_short = max(i for i, r in enumerate(chunk_rids) if r != 0)
+    assert any(r == 0 for r in chunk_rids[:last_short]), \
+        "long prefill was starved until the short stream drained"
+
+
+def test_scheduler_preempts_lowest_priority_newest():
+    # per-sequence worst case (1 prefill + 3 decode pages) fits capacity —
+    # the invariant the real engine's submit() enforces
+    ex = FakeEngine(capacity=4, slots=3,
+                    chunks={0: 1, 1: 1, 2: 1},
+                    decode_steps={0: 3, 1: 3, 2: 3})
+    sched = Scheduler(SchedulerCfg(swap=True))
+    sched.submit(_req(0, priority=1))
+    sched.submit(_req(1, priority=0))            # victim: low prio...
+    sched.submit(_req(2, priority=0))            # ...and newest
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2}
+    victims = [e[1] for e in ex.log if e[0] == "preempt"]
+    assert victims and 0 not in victims          # high priority never evicted
+    # page-aware victim selection: preempting a page-less slot frees
+    # nothing, so every victim must have held pages
+    assert all(h > 0 for h in ex.preempt_held)
+    assert sched.stats.preemptions == len(victims)
+    assert sched.stats.resumes >= 1              # swapped work came back
+
+
+def test_scheduler_low_priority_arrival_cannot_evict_high():
+    """A low-priority request that cannot get pages defers itself; it
+    must never preempt a strictly higher-priority running sequence."""
+    # rid 0 (priority 5) needs the whole pool; rid 1 (priority 0) arrives
+    # while it runs and cannot fit until it finishes
+    ex = FakeEngine(capacity=4, slots=2, chunks={0: 1, 1: 1},
+                    decode_steps={0: 3, 1: 3})
+    sched = Scheduler(SchedulerCfg(swap=True))
+    sched.submit(_req(0, priority=5))
+    sched.submit(_req(1, priority=0))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1}
+    victims = [e[1] for e in ex.log if e[0] == "preempt"]
+    assert victims and 0 not in victims          # rid 1 defers itself
+
+
+def test_scheduler_recompute_mode_requeues():
+    ex = FakeEngine(capacity=3, slots=2, chunks={0: 1, 1: 1},
+                    decode_steps={0: 2, 1: 2})
+    sched = Scheduler(SchedulerCfg(swap=False))
+    sched.submit(_req(0))
+    sched.submit(_req(1))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1}
+    assert sched.stats.recomputes == sched.stats.preemptions > 0
+    assert sched.stats.swap_outs == 0
+
+
+def test_scheduler_blocked_swap_in_holds_the_line():
+    """A preempted sequence resumes before any later arrival of the same
+    priority is admitted — even across ticks where the swap-in does not
+    fit yet but the fresh request would (no starvation of swapped work)."""
+    ex = FakeEngine(capacity=4, slots=2, chunks={0: 2, 1: 1, 2: 1},
+                    decode_steps={0: 2, 1: 3, 2: 1})
+    sched = Scheduler(SchedulerCfg(swap=True))
+    for rid in (0, 1, 2):
+        sched.submit(_req(rid))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2}
+    assert ("preempt", 1, True) in ex.log        # rid 1 was swapped out...
+    assert ex.log.index(("swap_in", 1)) < ex.log.index(("admit", 2))
+
+
+def test_swap_area_bookkeeping():
+    area = SwapArea()
+    area.put(7, {"x": 1}, 100)
+    area.put(9, {"y": 2}, 50)
+    assert 7 in area and len(area) == 2
+    assert area.peek(7) == {"x": 1}
+    assert area.stats().bytes == 150 and area.stats().peak_bytes == 150
+    assert area.take(7) == {"x": 1}
+    assert 7 not in area and area.stats().bytes == 50
+    assert area.stats().swap_outs == 2 and area.stats().swap_ins == 1
+    with pytest.raises(AssertionError):
+        area.put(9, {}, 1)                       # double-park is a bug
+
+
+def test_paged_backend_dispatch(monkeypatch):
+    monkeypatch.delenv("REPRO_PAGED_BACKEND", raising=False)
+    import jax
+    want = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert pa.default_backend() == want
+    monkeypatch.setenv("REPRO_PAGED_BACKEND", "pallas")
+    assert pa.default_backend() == "pallas"
+    monkeypatch.setenv("REPRO_PAGED_BACKEND", "xla")
+    assert pa.default_backend() == "xla"
+    monkeypatch.setenv("REPRO_PAGED_BACKEND", "mosaic")
+    with pytest.raises(ValueError, match="REPRO_PAGED_BACKEND"):
+        pa.default_backend()
+    assert pa.default_interpret() == (jax.default_backend() != "tpu")

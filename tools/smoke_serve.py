@@ -1,31 +1,41 @@
-"""30-second serving smoke for CI: paged engine end-to-end on a tiny LM.
+"""Serving smoke for CI: paged engine end-to-end on a tiny LM.
 
 Run:  PYTHONPATH=src python tools/smoke_serve.py
 
-Admits a small mixed-length batch through the paged KV-cache engine,
-checks every request completes with valid tokens, that variable-length
-admission compiled decode exactly once, and that prefix sharing kicked in.
+Two scenarios, ~30s each on CPU:
+
+1. Basic: a small mixed-length batch through the paged KV-cache engine —
+   every request completes with valid tokens, variable-length admission
+   compiled decode exactly once, prefix sharing kicked in.
+2. Overload: queued demand ~4x pool capacity (benchmarks.serving.overload)
+   — the chunked-prefill + preemption scheduler must finish every request
+   with ZERO rejections, swapping under pressure. The scenario's metrics
+   refresh the ``overload`` entry of BENCH_serving.json so the trajectory
+   (docs/benchmarks.md) tracks preemption behavior across PRs.
+
 Exits non-zero on any failure.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import sys
 import time
 
 import jax
 import numpy as np
 
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))          # for the benchmarks package
+
 from repro.configs import get_smoke_config
 from repro.models import lm
 from repro.serving import PagedEngineCfg, PagedServingEngine, Request
 
 
-def main() -> int:
+def basic(cfg, params) -> bool:
     t0 = time.time()
-    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
-    params = lm.init(jax.random.PRNGKey(0), cfg)
     eng = PagedServingEngine(cfg, params, PagedEngineCfg(
         max_batch=2, page_size=16, n_pages=24, hot_pages=3, eos_id=-1))
 
@@ -44,12 +54,42 @@ def main() -> int:
           and st["decode_compiles"] == 1
           and st["pool"].shared_hits >= 4)
     dt = time.time() - t0
-    print(f"smoke_serve: {len(done)} requests, "
+    print(f"smoke_serve[basic]: {len(done)} requests, "
           f"{sum(len(v) for v in done.values())} tokens, "
           f"peak {st['pool'].peak_live} pages, "
           f"{st['pool'].shared_hits} prefix hits, "
           f"{st['decode_compiles']} decode compile(s), {dt:.1f}s "
           f"-> {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+def overload(cfg, params) -> bool:
+    from benchmarks import serving as bench_serving
+    t0 = time.time()
+    try:
+        m = bench_serving.overload(cfg, params, oversubscribe=4)
+    except AssertionError as e:
+        print(f"smoke_serve[overload]: FAIL ({e})")
+        return False
+    ok = (m["rejected"] == 0 and m["preemptions"] > 0
+          and m["swap_ins"] == m["swap_outs"])
+    if ok:      # never let a failing run overwrite the committed baseline
+        bench_serving.write_json(str(REPO / "BENCH_serving.json"),
+                                 {"overload": m})
+    dt = time.time() - t0
+    print(f"smoke_serve[overload]: {m['requests']} requests at "
+          f"{m['oversubscription']}x capacity, 0 rejected, "
+          f"{m['preemptions']} preemptions "
+          f"({m['swap_outs']} swap-outs, {m['resumes']} resumes), "
+          f"{dt:.1f}s -> {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+def main() -> int:
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    ok = basic(cfg, params)
+    ok = overload(cfg, params) and ok
     return 0 if ok else 1
 
 
