@@ -1,6 +1,7 @@
-"""Serving benchmark: paged KV cache, chunked prefill, overload behavior.
+"""Serving benchmark: paged KV cache, chunked prefill, overload behavior,
+and the spatial (sequence-sharded) ultra-long-context engine.
 
-Three scenarios (CSV rows to stdout, optionally merged into a
+Scenarios (CSV rows to stdout, optionally merged into a
 ``BENCH_serving.json`` trajectory — see docs/benchmarks.md):
 
 * ``footprint`` — the PR-1 workload: mixed prompt lengths behind a shared
@@ -16,6 +17,16 @@ Three scenarios (CSV rows to stdout, optionally merged into a
 * ``overload`` — queued demand ~4x pool capacity. The scheduler must
   preempt (swap/page-in) rather than reject: asserts zero rejected
   requests, every request finishes, and preemption counters are reported.
+* ``--spatial`` — the spatial-runtime acceptance (runs INSTEAD of the
+  three above): a batch of ultra-long prompts against the sequence-
+  sharded engine at 1/2/4 shards with a FIXED per-shard pool. At 1 shard
+  the workload barely fits one sequence at a time and serves through
+  preempt/swap churn; at 4 shards the striped context fits concurrently,
+  so throughput must scale >= 1.5x going 1 -> 4 — plus a prompt that
+  overflows a single shard's pool outright and only the multi-shard
+  engine can admit. Needs 4 devices: when the process has fewer, the
+  benchmark re-executes itself in a child with
+  ``xla_force_host_platform_device_count`` set (the host-device harness).
 
 Engines are warmed up on shape-covering traffic before timing so the CSV
 compares steady-state serving, not XLA compilation.
@@ -26,6 +37,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import sys
 import time
 
 import jax
@@ -262,6 +275,118 @@ def _overload(cfg, params, results):
     results["overload"] = m
 
 
+SPATIAL_SHARDS = (1, 2, 4)
+SPATIAL_PROMPT = 256           # 16 pages; + gen tail -> 20 pages/request
+SPATIAL_GEN = 64               # decode-heavy: batched decode is where the
+#                                extra shards' aggregate capacity pays
+SPATIAL_REQS = 6
+SPATIAL_PAGES_LOCAL = 32       # 31 usable pages per shard, FIXED: capacity
+#                                scales only through the shard count. One
+#                                request nearly fills a single shard (solo
+#                                decode + swap churn); striped across 4
+#                                shards all six run one batched decode.
+SPATIAL_CHUNK_PAGES = 4
+SPATIAL_LONG_PROMPT = 512      # 32 pages: overflows one shard outright
+# (with 31 usable pages/shard, two 16-page prompts cannot both finish
+# prefill on one shard: decode there is strictly serial + swap churn)
+
+
+def _spatial_hot(n_shards: int) -> int:
+    # per-shard decode working set: striping splits the context, so each
+    # shard's hot window shrinks with the shard count (total gathered
+    # rows stay ~constant across engine sizes)
+    return max(4, 16 // n_shards + 2)
+
+
+def _spatial_prompts(cfg, n, length, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=length, dtype=np.int32)
+            for _ in range(n)]
+
+
+def spatial(cfg, params, *, shard_counts=SPATIAL_SHARDS) -> dict:
+    """Ultra-long-prompt throughput + TTFT vs shard count, one fixed
+    per-shard pool. Shared with tools/smoke_serve.py's spatial smoke."""
+    from repro.spatial import (Orchestrator, SpatialEngineCfg,
+                               SpatialServingEngine)
+
+    out: dict = {}
+    for n in shard_counts:
+        eng = SpatialServingEngine(cfg, params, SpatialEngineCfg(
+            n_shards=n, max_batch=SPATIAL_REQS, page_size=16,
+            n_pages_local=SPATIAL_PAGES_LOCAL,
+            hot_pages_local=_spatial_hot(n),
+            recent_pages=2, eos_id=-1, share_prefixes=False),
+            SchedulerCfg(chunk_pages=SPATIAL_CHUNK_PAGES, swap=True))
+        # warmup compiles every chunk/decode shape on throwaway traffic
+        warm = Orchestrator(eng)
+        warm.submit(_spatial_prompts(cfg, 1, SPATIAL_PROMPT, seed=9)[0],
+                    max_tokens=4)
+        warm.run(max_steps=20_000)
+        orch = Orchestrator(eng)
+        for prompt in _spatial_prompts(cfg, SPATIAL_REQS, SPATIAL_PROMPT):
+            orch.submit(prompt, max_tokens=SPATIAL_GEN)
+        done = orch.run(max_steps=50_000)
+        assert len(done) == SPATIAL_REQS, \
+            f"{n}-shard run finished {len(done)}/{SPATIAL_REQS}"
+        rep = orch.report()
+        st = eng.stats()
+        m = {"tok_s": rep["tok_s"], "wall_s": rep["wall_s"],
+             "ttft_mean_ms": rep["ttft_mean_ms"],
+             "preemptions": st["sched"].preemptions,
+             "swap_outs": st["swap"].swap_outs}
+        out[f"shards_{n}"] = m
+        emit(f"serving_spatial_{n}shard",
+             rep["wall_s"] * 1e6 / max(rep["tokens"], 1),
+             f"tok_s={m['tok_s']};ttft_mean_ms={m['ttft_mean_ms']};"
+             f"preemptions={m['preemptions']};swap_outs={m['swap_outs']}")
+        if n == max(shard_counts):
+            long_eng = eng
+
+    lo, hi = min(shard_counts), max(shard_counts)
+    ratio = out[f"shards_{hi}"]["tok_s"] / out[f"shards_{lo}"]["tok_s"]
+    out["speedup"] = round(ratio, 2)
+    assert ratio >= 1.5, (
+        f"spatial throughput did not scale: {hi} shards only {ratio:.2f}x "
+        f"over {lo}")
+
+    # the capacity claim: a prompt no single shard can hold
+    long_prompt = _spatial_prompts(cfg, 1, SPATIAL_LONG_PROMPT, seed=5)[0]
+    single = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=SPATIAL_PAGES_LOCAL,
+        hot_pages=16, eos_id=-1))
+    rejected = False
+    try:
+        single.submit(Request(rid=0, prompt=long_prompt,
+                              max_tokens=SPATIAL_GEN))
+    except ValueError:
+        rejected = True
+    assert rejected, "single-pool engine admitted the overflow prompt"
+    done = long_eng.run([Request(rid=99, prompt=long_prompt,
+                                 max_tokens=SPATIAL_GEN)],
+                        max_steps=50_000)
+    assert len(done[99]) == SPATIAL_GEN
+    out["ultra_long"] = {
+        "prompt_tokens": SPATIAL_LONG_PROMPT,
+        "single_shard_admits": False,
+        "shards": hi,
+        "tokens_served": len(done[99]),
+    }
+    emit("serving_spatial_ultra_long", 0.0,
+         f"prompt={SPATIAL_LONG_PROMPT};single_shard_admits=0;"
+         f"shards={hi};tokens={len(done[99])}")
+    return out
+
+
+def run_spatial(json_path: str | None = None) -> dict:
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    results = {"spatial": spatial(cfg, params)}
+    if json_path:
+        write_json(json_path, results)
+    return results
+
+
 def write_json(path: str, results: dict) -> None:
     """Merge scenario metrics into the BENCH_serving.json trajectory."""
     try:
@@ -292,6 +417,21 @@ if __name__ == "__main__":
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="merge scenario metrics into this "
                          "BENCH_serving.json trajectory file")
+    ap.add_argument("--spatial", action="store_true",
+                    help="run the sequence-sharded spatial scenario "
+                         "(1/2/4-shard throughput + ultra-long admit) "
+                         "instead of the single-device scenarios; "
+                         "respawns itself with fake host devices if the "
+                         "process has fewer than 4")
     args = ap.parse_args()
+    if args.spatial and len(jax.devices()) < max(SPATIAL_SHARDS):
+        from repro.spatial import respawn_with_devices
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        argv = ["-m", "benchmarks.serving", "--spatial"] + \
+            (["--json", os.path.abspath(args.json)] if args.json else [])
+        sys.exit(respawn_with_devices(max(SPATIAL_SHARDS), argv, cwd=repo))
     print("name,us_per_call,derived")
-    run(json_path=args.json)
+    if args.spatial:
+        run_spatial(json_path=args.json)
+    else:
+        run(json_path=args.json)

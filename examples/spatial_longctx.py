@@ -1,0 +1,89 @@
+"""Serve an ultra-long prompt by sequence-sharding it across a device
+mesh — the spatial deployment story end to end.
+
+A prompt that overflows a single device's KV page pool is striped
+page-by-page over 4 shards (fake host devices here; real accelerators on
+hardware): each shard prefills the chunks against its resident pages with
+the cross-shard causal part merged as partial-softmax states, and every
+decode step broadcasts the query, attends shard-locally, and merges the
+partial (m, l, o) back — DRAttention's combination as a psum tree. Next
+to it, a handful of normal requests with mixed SLA classes show the
+orchestrator's QoS path on the same mesh.
+
+Run:  PYTHONPATH=src python examples/spatial_longctx.py
+(relaunches itself with xla_force_host_platform_device_count=4)
+"""
+
+import sys
+
+N_SHARDS = 4
+
+
+def main():
+    import numpy as np
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.serving import PagedEngineCfg, PagedServingEngine, Request
+    from repro.serving.scheduler import SchedulerCfg
+    from repro.spatial import (Orchestrator, SpatialEngineCfg,
+                               SpatialServingEngine)
+    import dataclasses
+
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    pages_local = 12                        # 11 usable pages per shard
+    long_prompt = rng.integers(0, cfg.vocab, size=500, dtype=np.int32)
+
+    # a single-pool engine with the same per-device budget cannot admit it
+    single = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=pages_local, hot_pages=8,
+        eos_id=-1))
+    try:
+        single.submit(Request(rid=0, prompt=long_prompt, max_tokens=8))
+        raise AssertionError("single pool admitted the long prompt?!")
+    except ValueError as e:
+        print(f"single device: {e}")
+
+    eng = SpatialServingEngine(cfg, params, SpatialEngineCfg(
+        n_shards=N_SHARDS, max_batch=4, page_size=16,
+        n_pages_local=pages_local, hot_pages_local=10, eos_id=-1),
+        SchedulerCfg(chunk_pages=2))
+    orch = Orchestrator(eng)
+    orch.submit(long_prompt, max_tokens=16, sla="interactive")
+    for i in range(3):
+        orch.submit(rng.integers(0, cfg.vocab, size=24, dtype=np.int32),
+                    max_tokens=16, sla=("standard", "batch", "batch")[i])
+    done = orch.run()
+    rep = orch.report()
+
+    st = eng.stats()
+    print(f"\n{N_SHARDS} shards x {pages_local - 1} pages "
+          f"({(pages_local - 1) * 16} tokens/shard) served a "
+          f"{len(long_prompt)}-token prompt + {len(done)-1} mixed-SLA "
+          f"requests:")
+    print(f"  {rep['tokens']} tokens in {rep['wall_s']}s "
+          f"({rep['tok_s']} tok/s), ttft p50 {rep['ttft_p50_ms']} ms")
+    for sla, m in rep["per_sla"].items():
+        print(f"  {sla:12s} ttft {m['ttft_mean_ms']} ms")
+    print(f"  pools: {st['pools']['live']} live / "
+          f"{st['pools']['capacity']} pages aggregate, "
+          f"{st['pools']['shared_hits']} prefix hits; "
+          f"decode compiled {st['decode_compiles']}x")
+    cost = eng.topo.exchange_cost()
+    print(f"  NoC exchange (MRCA vs forced ring): "
+          f"{cost['mrca']['latency_ns']:.0f} vs "
+          f"{cost['naive_ring']['latency_ns']:.0f} ns/rotation")
+    print(f"  long-prompt output head: {done[0][:8]}...")
+    assert len(done[0]) == 16
+
+
+if __name__ == "__main__":
+    import jax
+    if len(jax.devices()) < N_SHARDS:
+        from repro.spatial import respawn_with_devices
+        sys.exit(respawn_with_devices(N_SHARDS, [__file__]))
+    main()

@@ -65,6 +65,27 @@ def _group(q: jax.Array, n_kv: int) -> jax.Array:
     return q.reshape(b, n_kv, nh // n_kv, d)
 
 
+def _gather_hot(k_pages, v_pages, phys, logical, kv_len):
+    """Pull the hot pages into [B, S_hot, nkv, d] rows + validity mask.
+
+    ``phys`` entries < 0 are padded slots (gather is clipped to page 0, the
+    scratch page, and masked out via ``logical``).
+    """
+    page = k_pages.shape[1]
+    b, w = phys.shape
+    safe = jnp.maximum(phys, 0)
+    kg = jnp.take(k_pages, safe, axis=0)          # [B, W, page, nkv, d]
+    vg = jnp.take(v_pages, safe, axis=0)
+    s_hot = w * page
+    kg = kg.reshape(b, s_hot, *k_pages.shape[2:])
+    vg = vg.reshape(b, s_hot, *v_pages.shape[2:])
+    row_pos = (logical[:, :, None] * page
+               + jnp.arange(page)[None, None, :]).reshape(b, s_hot)
+    valid = (logical[:, :, None] >= 0).repeat(page, axis=2).reshape(b, s_hot)
+    valid = valid & (row_pos < kv_len[:, None])
+    return kg, vg, valid
+
+
 def paged_gather_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         phys: jax.Array, logical: jax.Array,
                         kv_len: jax.Array, *, n_kv: int,
@@ -76,21 +97,8 @@ def paged_gather_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     scratch page, and masked out via ``logical``).
     """
     b, nh, d = q.shape
-    page = k_pages.shape[1]
     scale = scale or (1.0 / math.sqrt(d))
-
-    safe = jnp.maximum(phys, 0)
-    kg = jnp.take(k_pages, safe, axis=0)          # [B, W, page, nkv, d]
-    vg = jnp.take(v_pages, safe, axis=0)
-    w = phys.shape[1]
-    s_hot = w * page
-    kg = kg.reshape(b, s_hot, n_kv, d)
-    vg = vg.reshape(b, s_hot, n_kv, d)
-
-    row_pos = (logical[:, :, None] * page
-               + jnp.arange(page)[None, None, :]).reshape(b, s_hot)
-    valid = (logical[:, :, None] >= 0).repeat(page, axis=2).reshape(b, s_hot)
-    valid = valid & (row_pos < kv_len[:, None])
+    kg, vg, valid = _gather_hot(k_pages, v_pages, phys, logical, kv_len)
 
     # Grouped-GQA: the gathered pages stay at n_kv width, never repeated.
     qg = _group(q, n_kv)                           # [B, G, R, d]
@@ -104,6 +112,37 @@ def paged_gather_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
     o = jnp.einsum("bgrs,bgsd->bgrd", (p / l).astype(q.dtype), vc)
     return o.reshape(b, nh, d)
+
+
+def paged_gather_decode_stats(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, phys: jax.Array,
+                              logical: jax.Array, kv_len: jax.Array, *,
+                              n_kv: int, scale: Optional[float] = None
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unnormalized partial-softmax state of a paged decode step.
+
+    Same contract as ``paged_gather_decode`` but returns the flash-style
+    ``(m, l, o)`` triple — m/l [B,G,R] f32, o [B,G,R,d] f32 — instead of the
+    normalized output, so a sequence sharded across several page pools can
+    compute one partial per shard and merge them (DRAttention's m_i/l_i
+    update, ``core.dr_attention``). A shard holding no valid page for a
+    sequence yields m = NEG_INF / l = 0 / o = 0, the neutral element of the
+    merge.
+    """
+    b, nh, d = q.shape
+    scale = scale or (1.0 / math.sqrt(d))
+    kg, vg, valid = _gather_hot(k_pages, v_pages, phys, logical, kv_len)
+    qg = _group(q, n_kv)
+    kc = jnp.moveaxis(kg, 1, 2)
+    vc = jnp.moveaxis(vg, 1, 2)
+    sc = jnp.einsum("bgrd,bgsd->bgrs", qg, kc).astype(jnp.float32) * scale
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = sc.max(axis=-1)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bgrs,bgsd->bgrd", p, vc.astype(jnp.float32))
+    return m, l, o
 
 
 def paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,

@@ -1,54 +1,137 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Drives the continuous-batching engine with STAR sparse decode (per the
-arch's config). Smoke configs serve on CPU; ``--full --mesh`` builds the
-production mesh exactly as the dry-run does.
+Drives one of the three serving engines:
+
+* ``--engine dense``   — the slot-based baseline (STAR sparse decode per
+  the arch's config).
+* ``--engine paged``   — the paged KV-cache engine with chunked prefill
+  and the preemption scheduler.
+* ``--engine spatial`` — the sequence-sharded multi-device runtime
+  (``--shards N``): context length scales with device count. When the
+  process has fewer devices than shards it re-executes itself with
+  ``xla_force_host_platform_device_count`` set, so the fake-device
+  harness works out of the box on a laptop.
+
+Requests carry an SLA class (``--sla-mix`` cycles interactive / standard
+/ batch) that the scheduler maps onto priorities: interactive traffic is
+admitted first and preempted last. Smoke configs serve on CPU; ``--full
+--mesh`` builds the production mesh exactly as the dry-run does.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
-import jax
-import numpy as np
-
-from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.models import lm
-from repro.serving import EngineCfg, ServingEngine
-from repro.serving.engine import Request
+SLA_CYCLE = ("interactive", "standard", "batch")
 
 
-def main():
+def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo_1b", choices=list(ARCHS))
+    ap.add_argument("--arch", default="olmo_1b")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", default="dense",
+                    choices=("dense", "paged", "spatial"))
+    ap.add_argument("--shards", type=int, default=2,
+                    help="sequence shards (spatial engine)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=64,
+                    help="pool pages (paged: total; spatial: per shard)")
+    ap.add_argument("--sla-mix", action="store_true",
+                    help="cycle requests through interactive/standard/"
+                         "batch SLA classes")
+    return ap.parse_args(argv)
 
+
+def main(argv=None):
+    args = _parse_args(argv)
+
+    if args.engine == "spatial":
+        # the XLA device count is fixed at first jax init: grow it in a
+        # child process when this one is too small for the mesh
+        import jax
+        if len(jax.devices()) < args.shards:
+            from repro.spatial import respawn_with_devices
+            sys.exit(respawn_with_devices(
+                args.shards, ["-m", "repro.launch.serve"]
+                + (argv if argv is not None else sys.argv[1:])))
+
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS, get_config, get_smoke_config
+    from repro.models import lm
+    from repro.serving import (EngineCfg, PagedEngineCfg,
+                               PagedServingEngine, SchedulerCfg,
+                               ServingEngine)
+    from repro.serving.engine import Request
+    from repro.spatial import (Orchestrator, SpatialEngineCfg,
+                               SpatialServingEngine)
+
+    if args.arch not in ARCHS:
+        raise SystemExit(f"unknown arch {args.arch}; choose from "
+                         f"{sorted(ARCHS)}")
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     if cfg.enc_layers or cfg.embeds_input:
         raise SystemExit(f"{args.arch}: frontend-stub archs serve via "
                          "examples/ drivers")
+    import dataclasses
+    if args.engine == "spatial" and cfg.star is not None:
+        cfg = dataclasses.replace(cfg, star=None)
     params = lm.init(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params, EngineCfg(
-        max_batch=args.slots, max_len=args.max_len, eos_id=-1))
+
+    if args.engine == "dense":
+        eng = ServingEngine(cfg, params, EngineCfg(
+            max_batch=args.slots, max_len=args.max_len, eos_id=-1))
+    elif args.engine == "paged":
+        eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+            max_batch=args.slots, page_size=args.page_size,
+            n_pages=args.pages, hot_pages=args.max_len // args.page_size,
+            eos_id=-1), SchedulerCfg())
+    else:
+        eng = SpatialServingEngine(cfg, params, SpatialEngineCfg(
+            n_shards=args.shards, max_batch=args.slots,
+            page_size=args.page_size, n_pages_local=args.pages,
+            hot_pages_local=args.max_len // args.page_size,
+            eos_id=-1), SchedulerCfg())
 
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(
-        0, cfg.vocab, size=args.prompt_len, dtype=np.int32),
-        max_tokens=args.max_tokens) for i in range(args.requests)]
     t0 = time.time()
-    done = eng.run(reqs)
+    if args.engine == "dense":
+        reqs = [Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab, size=args.prompt_len, dtype=np.int32),
+            max_tokens=args.max_tokens) for i in range(args.requests)]
+        done = eng.run(reqs)
+        n_tok = sum(len(v) for v in done.values())
+        extra = ""
+    else:
+        orch = Orchestrator(eng)
+        for i in range(args.requests):
+            orch.submit(rng.integers(0, cfg.vocab, size=args.prompt_len,
+                                     dtype=np.int32),
+                        max_tokens=args.max_tokens,
+                        sla=SLA_CYCLE[i % len(SLA_CYCLE)]
+                        if args.sla_mix else None)
+        done = orch.run()
+        rep = orch.report()
+        n_tok = rep["tokens"]
+        extra = f", ttft_p50={rep['ttft_p50_ms']}ms"
+        if args.sla_mix:
+            extra += "".join(
+                f", {k}={v['ttft_mean_ms']}ms"
+                for k, v in rep["per_sla"].items())
     dt = time.time() - t0
-    n_tok = sum(len(v) for v in done.values())
-    print(f"[serve] {args.arch} ({'full' if args.full else 'smoke'}): "
-          f"{len(done)} requests, {n_tok} tokens, {n_tok / dt:.1f} tok/s, "
-          f"star={'on' if cfg.star else 'off'}")
+    shards = f", {args.shards} shards" if args.engine == "spatial" else ""
+    print(f"[serve] {args.arch} ({'full' if args.full else 'smoke'}, "
+          f"{args.engine}{shards}): {len(done)} requests, {n_tok} tokens, "
+          f"{n_tok / dt:.1f} tok/s, star={'on' if cfg.star else 'off'}"
+          f"{extra}")
 
 
 if __name__ == "__main__":

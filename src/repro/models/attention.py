@@ -40,6 +40,8 @@ class AttentionCfg:
     causal: bool = True
     q_chunk: int = 1024          # query tile for chunked dense softmax
     star: Optional[STARConfig] = None   # sparse mode (None = dense)
+    chunk_sparse: bool = False   # DLZS page selection over gathered past
+    #                              pages in later prefill chunks (needs star)
     lz_cache: bool = True        # keep int8 LZ codes of K in the KV cache
     dtype: jnp.dtype = jnp.bfloat16
 
@@ -311,6 +313,33 @@ def apply_prefill_chunk(params, cfg: AttentionCfg, x, positions, cache,
     sc = sc * scale
     mask = kv_ok[:, None, None, None, :] & \
         (kv_pos[:, None, None, None, :] <= positions[:, None, None, :, None])
+
+    if cfg.star is not None and cfg.chunk_sparse and wp > 0:
+        # STAR inside later chunks: DLZS-predict the chunk's scores against
+        # the gathered PAST pages (streaming the int8 LZ slab when present)
+        # and drop whole pages outside the SADS sphere — a page whose best
+        # predicted score sits more than ``radius`` below the per-sequence
+        # max contributes < e^-radius relative softmax mass. The chunk's
+        # own causal block always stays dense, so the approximation touches
+        # only the long-context tail.
+        if "k_lz" in cache:
+            khat = dlzs.lz_unpack(jnp.take(cache["k_lz"], safe, axis=0),
+                                  q.dtype)
+            khat = khat.reshape(b, sp, cfg.n_kv, cfg.head_dim)
+        else:
+            khat = dlzs.pow2_quantize(kg)
+        s_hat = jnp.einsum("btgrd,bsgd->bgrts", qg, khat
+                           ).astype(jnp.float32) * scale
+        s_hat = jnp.where(mask[..., :sp], s_hat, NEG_INF)
+        page_max = s_hat.reshape(b, cfg.n_kv, n_rep, c, wp, page
+                                 ).max(axis=(1, 2, 3, 5))        # [B, Wp]
+        row_max = page_max.max(axis=-1, keepdims=True)
+        keep = page_max >= row_max - cfg.star.radius             # sphere
+        keep_rows = keep[:, :, None].repeat(page, axis=2).reshape(b, sp)
+        keep_all = jnp.concatenate(
+            [keep_rows, jnp.ones((b, c), bool)], axis=1)
+        mask = mask & keep_all[:, None, None, None, :]
+
     sc = jnp.where(mask, sc, NEG_INF)
     m = sc.max(axis=-1, keepdims=True)
     p = jnp.exp(sc - m)
@@ -364,6 +393,152 @@ def apply_decode_paged(params, cfg: AttentionCfg, x, cache, lengths,
                    o.reshape(b, cfg.n_heads, cfg.head_dim),
                    params["wo"])[:, None, :]
     return shd(y, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Spatial (sequence-sharded) attention: partial (m, l, o) per shard, merged
+# over a mesh axis. Runs inside shard_map — repro.spatial drives these.
+# ---------------------------------------------------------------------------
+
+def _merge_two_stats(m_a, l_a, o_a, m_b, l_b, o_b):
+    """Pairwise flash-state merge, broadcast over any leading dims
+    (the [T]-shaped version lives in core.dr_attention)."""
+    m = jnp.maximum(m_a, m_b)
+    ea = jnp.where(m_a <= NEG_INF / 2, 0.0, jnp.exp(m_a - m))
+    eb = jnp.where(m_b <= NEG_INF / 2, 0.0, jnp.exp(m_b - m))
+    return m, l_a * ea + l_b * eb, o_a * ea[..., None] + o_b * eb[..., None]
+
+
+def _psum_merge_stats(m, l, o, axis: str):
+    """Merge per-shard partial softmax states across mesh axis ``axis``.
+
+    DRAttention's (m_i, l_i) update executed as pmax + two psums — the
+    tree form of the ring reduction, optimal for the tiny decode state.
+    Empty shards (m == NEG_INF) contribute nothing.
+    """
+    m_g = jax.lax.pmax(m, axis)
+    w = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - m_g))
+    l_g = jax.lax.psum(l * w, axis)
+    o_g = jax.lax.psum(o * w[..., None], axis)
+    return m_g, l_g, o_g
+
+
+def apply_decode_spatial(params, cfg: AttentionCfg, x, cache, lengths,
+                         page_state, axis: str):
+    """One-token decode against a sequence-sharded paged pool (one shard's
+    view; call inside shard_map over mesh axis ``axis``).
+
+    The query is replicated (every shard computes the same projections —
+    the broadcast-query decode of Star Attention); ``cache`` k/v are THIS
+    shard's slabs [P_local, page, nkv, dh]. ``page_state`` carries the
+    shard-local block-table rows (``logical`` holds GLOBAL page indices so
+    positions stay exact) and the write coordinates — SCRATCH on every
+    shard except the new token's owner. Each shard produces a partial
+    (m, l, o) over its local hot pages; the states merge across the axis
+    (exact — DRAttention's combination), so the result equals one-pool
+    paged decode whenever the hot sets cover every page.
+    """
+    b = x.shape[0]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k_new, v_new = _project_qkv(params, cfg, x, lengths[:, None])
+
+    wp, woff = page_state["write_page"], page_state["write_off"]
+    new_cache = dict(
+        cache,
+        k=cache["k"].at[wp, woff].set(k_new[:, 0].astype(cache["k"].dtype)),
+        v=cache["v"].at[wp, woff].set(v_new[:, 0].astype(cache["v"].dtype)))
+    if cfg.lz_cache and "k_lz" in cache:
+        new_cache["k_lz"] = cache["k_lz"].at[wp, woff].set(
+            dlzs.lz_pack(k_new)[:, 0])
+
+    from repro.kvcache import paged_attention as kv_paged
+    m, l, o = kv_paged.paged_gather_decode_stats(
+        q[:, 0], new_cache["k"], new_cache["v"], page_state["phys"],
+        page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale)
+    m, l, o = _psum_merge_stats(m, l, o, axis)
+    o = o / jnp.maximum(l, 1e-30)[..., None]       # [B, G, R, d]
+    y = jnp.einsum("bnd,ndh->bh",
+                   o.reshape(b, cfg.n_heads, cfg.head_dim).astype(x.dtype),
+                   params["wo"])[:, None, :]
+    return shd(y, "batch", "seq", "embed"), new_cache
+
+
+def apply_prefill_chunk_spatial(params, cfg: AttentionCfg, x, positions,
+                                cache, page_state, axis: str):
+    """Prefill one page-aligned chunk of a sequence-sharded prompt (one
+    shard's view; call inside shard_map over mesh axis ``axis``).
+
+    The chunk's hidden states are replicated; each shard computes a
+    partial (m, l, o) of the chunk queries against ITS local past pages,
+    the partials merge across the axis (pmax/psum — the T>1 form of the
+    decode merge), and the chunk's causal self-attention block is added
+    locally (identical on every shard, merged exactly once). The chunk's
+    fresh K/V rows scatter into the pages this shard owns
+    (``page_state["chunk_phys"]`` — SCRATCH for pages owned elsewhere), so
+    the whole chunk update stays inside one SPMD dispatch.
+    """
+    b, c, _ = x.shape
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    page = cache["k"].shape[1]
+    n_rep = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(b, c, cfg.n_kv, n_rep, cfg.head_dim)
+
+    # partial stats vs this shard's past pages
+    past_phys, past_logical = page_state["past_phys"], \
+        page_state["past_logical"]
+    safe = jnp.maximum(past_phys, 0)
+    kg = jnp.take(cache["k"], safe, axis=0)        # [B, Wp, page, nkv, d]
+    vg = jnp.take(cache["v"], safe, axis=0)
+    wp = past_phys.shape[1]
+    sp = wp * page
+    kg = kg.reshape(b, sp, cfg.n_kv, cfg.head_dim).astype(q.dtype)
+    vg = vg.reshape(b, sp, cfg.n_kv, cfg.head_dim).astype(q.dtype)
+    past_pos = (past_logical[:, :, None] * page
+                + jnp.arange(page)[None, None, :]).reshape(b, sp)
+    past_ok = (past_logical[:, :, None] >= 0).repeat(page, axis=2)
+    past_ok = past_ok.reshape(b, sp) \
+        & (past_pos < page_state["past_len"][:, None])
+    sc_p = jnp.einsum("btgrd,bsgd->bgrts", qg, kg).astype(jnp.float32)
+    sc_p = sc_p * scale
+    mask_p = past_ok[:, None, None, None, :] & \
+        (past_pos[:, None, None, None, :]
+         <= positions[:, None, None, :, None])
+    sc_p = jnp.where(mask_p, sc_p, NEG_INF)
+    m1 = sc_p.max(axis=-1)                          # [B, G, R, C]
+    p1 = jnp.exp(sc_p - m1[..., None])
+    p1 = jnp.where(sc_p <= NEG_INF / 2, 0.0, p1)
+    l1 = p1.sum(axis=-1)
+    o1 = jnp.einsum("bgrts,bsgd->bgrtd", p1, vg.astype(jnp.float32))
+    m1, l1, o1 = _psum_merge_stats(m1, l1, o1, axis)
+
+    # chunk's causal self-attention block (replicated compute)
+    sc_c = jnp.einsum("btgrd,bsgd->bgrts", qg, k).astype(jnp.float32)
+    sc_c = sc_c * scale
+    mask_c = positions[:, None, None, None, :] \
+        <= positions[:, None, None, :, None]
+    sc_c = jnp.where(mask_c, sc_c, NEG_INF)
+    m2 = sc_c.max(axis=-1)
+    p2 = jnp.exp(sc_c - m2[..., None])
+    p2 = jnp.where(sc_c <= NEG_INF / 2, 0.0, p2)
+    l2 = p2.sum(axis=-1)
+    o2 = jnp.einsum("bgrts,bsgd->bgrtd", p2, v.astype(jnp.float32))
+
+    m, l, o = _merge_two_stats(m1, l1, o1, m2, l2, o2)
+    o = o / jnp.maximum(l, 1e-30)[..., None]        # [B, G, R, C, d]
+    y = jnp.moveaxis(o, 3, 1).reshape(b, c, cfg.n_heads, cfg.head_dim)
+    out = jnp.einsum("bsnd,ndh->bsh", y.astype(x.dtype), params["wo"])
+    out = shd(out, "batch", "act_seq", "embed")
+
+    # scatter the chunk's K/V rows into the pages this shard owns
+    chunk_phys = page_state["chunk_phys"]           # [B, C // page]
+    def put(pool, rows):
+        rows = rows.reshape(b, c // page, page, *rows.shape[2:])
+        return pool.at[chunk_phys].set(rows.astype(pool.dtype))
+    new_cache = dict(cache, k=put(cache["k"], k), v=put(cache["v"], v))
+    if cfg.lz_cache and "k_lz" in cache:
+        new_cache["k_lz"] = put(cache["k_lz"], dlzs.lz_pack(k))
+    return out, new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,9 @@ class ModelCfg:
     embeds_input: bool = False     # modality frontend stub feeds embeddings
     star: Optional[STARConfig] = None   # serving-time sparse attention
     star_train: bool = False
+    star_chunk_sparse: bool = False     # DLZS page selection inside later
+    #                                     prefill chunks (approximate; the
+    #                                     chunk's causal block stays dense)
     causal: bool = True
     q_chunk: int = 1024
     seq_loss_chunk: int = 1024
@@ -93,7 +96,8 @@ class ModelCfg:
             head_dim=self.dh, rope_fraction=self.rope_fraction,
             rope_theta=self.rope_theta, qkv_bias=self.qkv_bias,
             causal=self.causal if causal is None else causal,
-            q_chunk=self.q_chunk, star=use_star, dtype=self.dtype)
+            q_chunk=self.q_chunk, star=use_star,
+            chunk_sparse=self.star_chunk_sparse, dtype=self.dtype)
 
     def mlp_cfg(self) -> mlp.MLPCfg:
         return mlp.MLPCfg(self.d_model, self.d_ff, self.mlp_act,
@@ -156,19 +160,29 @@ def _block_axes(cfg: ModelCfg, blk: BlockCfg):
 def _block_apply(params, cfg: ModelCfg, blk: BlockCfg, x, positions, *,
                  mode: str, causal: bool = True, cache=None,
                  enc_cache=None, lengths=None, cache_len=None,
-                 page_state=None):
+                 page_state=None, spatial_axis=None):
     """Returns (y, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = common.norm_apply(cfg.norm, params["norm1"], x)
     acfg = cfg.attn_cfg(mode, causal)
     new_cache = {}
     if blk.kind == "attn":
-        if mode == "prefill_chunk":
+        if mode == "prefill_chunk" and spatial_axis is not None:
+            y, c = attention.apply_prefill_chunk_spatial(
+                params["core"], acfg, h, positions, cache["attn"],
+                page_state, spatial_axis)
+            new_cache["attn"] = c
+        elif mode == "prefill_chunk":
             y, c = attention.apply_prefill_chunk(
                 params["core"], acfg, h, positions, cache["attn"],
                 page_state["past_phys"], page_state["past_logical"],
                 page_state["past_len"])
             new_cache["attn"] = c
+        elif mode == "decode" and spatial_axis is not None:
+            y, new_attn = attention.apply_decode_spatial(
+                params["core"], acfg, h, cache["attn"], lengths,
+                page_state, spatial_axis)
+            new_cache["attn"] = new_attn
         elif mode == "decode" and page_state is not None:
             y, new_attn = attention.apply_decode_paged(
                 params["core"], acfg, h, cache["attn"], lengths, page_state)
@@ -256,14 +270,15 @@ def _superblock_axes(cfg: ModelCfg, pattern):
 
 def _superblock_apply(params, cfg: ModelCfg, pattern, x, positions, *,
                       mode, causal=True, caches=None, enc_cache=None,
-                      lengths=None, cache_len=None, page_state=None):
+                      lengths=None, cache_len=None, page_state=None,
+                      spatial_axis=None):
     new_caches, aux_total = {}, jnp.zeros((), jnp.float32)
     for i, blk in enumerate(pattern):
         x, nc, aux = _block_apply(
             params[f"b{i}"], cfg, blk, x, positions, mode=mode,
             causal=causal, cache=caches[f"b{i}"] if caches else None,
             enc_cache=enc_cache, lengths=lengths, cache_len=cache_len,
-            page_state=page_state)
+            page_state=page_state, spatial_axis=spatial_axis)
         x = shd(x, "batch", "act_seq", "embed")
         new_caches[f"b{i}"] = nc
         aux_total = aux_total + aux
@@ -342,7 +357,7 @@ def _remat(fn, cfg: ModelCfg):
 
 def _run_stack(blocks, cfg: ModelCfg, pattern, x, positions, *, mode,
                causal=True, caches=None, enc_cache=None, lengths=None,
-               cache_len=None, page_state=None):
+               cache_len=None, page_state=None, spatial_axis=None):
     """Scan the super-block over the repeat dim. Returns (x, caches, aux)."""
 
     def body(carry, layer_in):
@@ -353,7 +368,8 @@ def _run_stack(blocks, cfg: ModelCfg, pattern, x, positions, *, mode,
         y, nc, aux = _superblock_apply(
             lp, cfg, pattern, xc, positions, mode=mode, causal=causal,
             caches=lc, enc_cache=enc_cache, lengths=lengths,
-            cache_len=cache_len, page_state=page_state)
+            cache_len=cache_len, page_state=page_state,
+            spatial_axis=spatial_axis)
         y = shd(y, "batch", "act_seq", "embed")
         return (y, aux_acc + aux), nc
 
@@ -502,6 +518,109 @@ def decode_step(params, cfg: ModelCfg, tokens, cache):
                                   caches=cache["layers"], lengths=lengths)
     logits = _logits(params, cfg, x)
     return logits[:, 0], {"layers": new_caches, "lengths": lengths + 1}
+
+
+def _spatial_specs(mesh, axis: str):
+    from jax.sharding import PartitionSpec as P
+    return P(axis), P()
+
+
+def prefill_chunk_spatial(params, cfg: ModelCfg, batch, cache, chunk_state,
+                          *, mesh, axis: str = "shards"):
+    """Prefill one chunk of a sequence-sharded prompt across a device mesh.
+
+    One SPMD dispatch (shard_map over mesh axis ``axis``): every shard runs
+    the replicated block stack, computes a partial (m, l, o) of the chunk
+    queries against ITS local past pages, merges the partials with
+    pmax/psum (exact — DRAttention's combination executed as a tree), and
+    scatters the chunk's fresh K/V rows into the pages it owns.
+
+    ``cache["layers"]`` leaves are stacked per-shard slabs
+    [n_shards, L, P_local, page, nkv, dh], sharded on axis 0; chunk_state:
+      past_phys/past_logical [n_shards, B, Wp] — shard-LOCAL physical ids /
+        GLOBAL logical page indices of pages earlier chunks wrote,
+      chunk_phys [n_shards, B, C // page] — local scatter targets for this
+        chunk's pages (SCRATCH where another shard owns the page),
+      past_len / last_index [B] — replicated, as in prefill_chunk_paged.
+
+    Returns (logits [B, vocab_padded], {"layers": updated stacked slabs}).
+    """
+    from repro.shardlib import shard_map
+
+    shard_spec, rep_spec = _spatial_specs(mesh, axis)
+    sharded = {"past_phys", "past_logical", "chunk_phys"}
+    cs_specs = {k: shard_spec if k in sharded else rep_spec
+                for k in chunk_state}
+
+    def local_fn(p, toks, layers, cs):
+        layers = jax.tree.map(lambda leaf: leaf[0], layers)
+        cs = {k: (v[0] if k in sharded else v) for k, v in cs.items()}
+        x = _embed_inputs(p, cfg, {"tokens": toks})
+        b, c, _ = x.shape
+        positions = cs["past_len"][:, None] + jnp.arange(c)[None, :]
+        x, new_layers, _ = _run_stack(
+            p["blocks"], cfg, cfg.pattern, x, positions,
+            mode="prefill_chunk", causal=cfg.causal, caches=layers,
+            page_state=cs, spatial_axis=axis)
+        x_last = jnp.take_along_axis(
+            x, cs["last_index"][:, None, None].astype(jnp.int32), axis=1)
+        logits = _logits(p, cfg, x_last)[:, 0]
+        return logits, jax.tree.map(lambda leaf: leaf[None], new_layers)
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: rep_spec, params), rep_spec,
+                  jax.tree.map(lambda _: shard_spec, cache["layers"]),
+                  cs_specs),
+        out_specs=(rep_spec,
+                   jax.tree.map(lambda _: shard_spec, cache["layers"])))
+    logits, new_layers = fn(params, batch["tokens"], cache["layers"],
+                            chunk_state)
+    return logits, {"layers": new_layers}
+
+
+def decode_step_spatial(params, cfg: ModelCfg, tokens, cache, page_state,
+                        *, mesh, axis: str = "shards"):
+    """One decode step against sequence-sharded paged pools.
+
+    The query token is broadcast (replicated forward on every shard), each
+    shard attends over its local hot pages via the paged gather, and the
+    partial (m, l, o) states merge across the mesh axis — the spatial
+    deployment's decode dataflow. Shapes depend only on (max_batch,
+    hot_pages_local, pool size), so decode compiles ONCE regardless of the
+    request mix, exactly like the single-pool engine.
+
+    ``page_state`` leaves are stacked per-shard: phys/logical
+    [n_shards, B, W] (logical = GLOBAL page index), write_page/write_off
+    [n_shards, B] (SCRATCH off the owner shard).
+    """
+    from repro.shardlib import shard_map
+
+    shard_spec, rep_spec = _spatial_specs(mesh, axis)
+
+    def local_fn(p, toks, layers, lengths, ps):
+        layers = jax.tree.map(lambda leaf: leaf[0], layers)
+        ps = jax.tree.map(lambda leaf: leaf[0], ps)
+        x = jnp.take(p["embed"], toks, axis=0)
+        x, new_layers, _ = _run_stack(
+            p["blocks"], cfg, cfg.pattern, x, lengths[:, None],
+            mode="decode", causal=cfg.causal, caches=layers,
+            lengths=lengths, page_state=ps, spatial_axis=axis)
+        logits = _logits(p, cfg, x)[:, 0]
+        return logits, jax.tree.map(lambda leaf: leaf[None], new_layers)
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: rep_spec, params), rep_spec,
+                  jax.tree.map(lambda _: shard_spec, cache["layers"]),
+                  rep_spec,
+                  jax.tree.map(lambda _: shard_spec, page_state)),
+        out_specs=(rep_spec,
+                   jax.tree.map(lambda _: shard_spec, cache["layers"])))
+    logits, new_layers = fn(params, tokens, cache["layers"],
+                            cache["lengths"], page_state)
+    return logits, {"layers": new_layers,
+                    "lengths": cache["lengths"] + 1}
 
 
 def decode_step_paged(params, cfg: ModelCfg, tokens, cache, page_state):

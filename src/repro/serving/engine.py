@@ -35,6 +35,9 @@ class Request:
     priority: int = 0           # higher = more important: admitted first,
     #                             preempted last under pool pressure (paged
     #                             engine scheduler; ties break by arrival)
+    sla: Optional[str] = None   # QoS class ("interactive" | "standard" |
+    #                             "batch"); when set the scheduler maps it
+    #                             onto ``priority`` at submit
     out: Optional[list] = None
 
 

@@ -259,10 +259,11 @@ class PagedServingEngine:
         pf = self._pf.get(slot)
         return 0 if pf is None else len(pf.spans) - pf.chunk
 
-    def held_pages(self, slot: int) -> int:
+    def held_pages(self, slot: int, shard=None) -> int:
         """Pages preempting this slot would actually FREE: prefix-shared
         pages (ref > 1) survive a victim's release, so a slot whose table
-        is all shared hits is as useless a victim as an empty one."""
+        is all shared hits is as useless a victim as an empty one.
+        ``shard`` is ignored — this engine runs one pool."""
         return sum(1 for pid in self.tables.get(slot, ())
                    if self.pool.ref(pid) == 1)
 
@@ -442,32 +443,52 @@ class PagedServingEngine:
 
     # -- executor protocol: preemption / swap -------------------------------
 
-    def _padded_table(self, table: list[int]) -> np.ndarray:
-        n = bucketing.bucket_count(len(table), pow2=self.pcfg.bucket_pow2)
-        phys = np.full((n,), SCRATCH, np.int32)
-        phys[:len(table)] = table
-        return phys
-
     def exec_preempt(self, slot: int, swap: bool) -> bool:
         """Evict ``slot``. swap=True parks its page contents in the host
         SwapArea (resume = page-in); otherwise pages are dropped and the
-        sequence recomputes from prompt + emitted tokens on re-admission."""
+        sequence recomputes from prompt + emitted tokens on re-admission.
+
+        Shared-prefix-aware parking: only uniquely-owned (ref-1) pages are
+        gathered to the host. A page some other sequence also references
+        keeps OUR reference while swapped — its content cannot be freed or
+        rewritten underneath us, so resume reuses the same physical page
+        with zero upload. Repeated preempt/resume of same-prefix traffic
+        therefore no longer duplicates the shared prefix (neither in host
+        swap bytes nor, after page-in, in pool pages)."""
         req = self.active.pop(slot)
         table = self.tables.pop(slot)
         pf = self._pf.pop(slot, None)
         swapped = False
         if swap and table:
-            # gather BEFORE decref: page content is only guaranteed until
-            # the ids return to the free list. The gather width is
-            # pow2-bucketed for jit-shape stability, but only the real
-            # pages are parked — padding would inflate host swap bytes
-            # (and the reported swap pressure) by up to ~2x.
-            rows = self._gather_pages(self.cache["layers"],
-                                      jnp.asarray(self._padded_table(table)))
-            host = jax.tree.map(lambda r: np.asarray(r)[:, :len(table)],
-                                rows)
-            nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(host))
-            state = {"rows": host, "n_pages": len(table)}
+            kept = [(j, pid) for j, pid in enumerate(table)
+                    if self.pool.ref(pid) > 1]
+            park = [j for j, pid in enumerate(table)
+                    if self.pool.ref(pid) == 1]
+            host = None
+            if park:
+                # gather BEFORE decref: page content is only guaranteed
+                # until the ids return to the free list. The gather width
+                # is pow2-bucketed for jit-shape stability, but only the
+                # real pages are parked — padding would inflate host swap
+                # bytes (and the reported swap pressure).
+                phys = np.full(
+                    (bucketing.bucket_count(len(park),
+                                            pow2=self.pcfg.bucket_pow2),),
+                    SCRATCH, np.int32)
+                phys[:len(park)] = [table[j] for j in park]
+                rows = self._gather_pages(self.cache["layers"],
+                                          jnp.asarray(phys))
+                host = jax.tree.map(lambda r: np.asarray(r)[:, :len(park)],
+                                    rows)
+            nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(host)) \
+                if host is not None else 0
+            # key tokens for the prefix re-lookup at page-in: the effective
+            # prompt mid-prefill; in decode, conservatively the original
+            # prompt (its pages are the ones same-prefix traffic shares)
+            toks = pf.toks if pf is not None else (
+                tuple(int(x) for x in req.prompt) if self._share else None)
+            state = {"rows": host, "park": park, "kept": kept,
+                     "n_pages": len(table), "lookup_toks": toks}
             if pf is not None:
                 state.update(kind="prefill", prompt=pf.prompt,
                              toks=pf.toks, spans=pf.spans, chunk=pf.chunk,
@@ -480,8 +501,12 @@ class PagedServingEngine:
                                  self.last_token[slot, 0])),
                              budget=self.budget[slot])
             self.swap_area.put(req.rid, state, nbytes)
+            # release ONLY the parked pages; kept (shared) pages retain
+            # this sequence's reference until it resumes
+            self.alloc.release([table[j] for j in park])
             swapped = True
-        self.alloc.release(table)
+        else:
+            self.alloc.release(table)
         self.budget.pop(slot, None)
         self.lengths[slot] = 0
         self.free.append(slot)
@@ -489,36 +514,58 @@ class PagedServingEngine:
 
     def exec_swap_in(self, req: Request) -> Optional[int]:
         """Page a swapped sequence back in, or None if the pool cannot hold
-        its block table right now."""
+        its block table right now.
+
+        Pages kept live at swap-out (shared at the time) are reused as-is.
+        Parked full-prompt pages first retry the prefix index — if an
+        identical prefix is pooled (often our own parked copy, cached at
+        release), the page revives with no upload; only genuine misses
+        allocate a fresh page and upload the parked rows."""
         state = self.swap_area.peek(req.rid)
-        n = state["n_pages"]
-        if self.pool.free_pages() + len(self.pool.evictable()) < n:
+        park = state["park"]
+        # conservative: lookups below can only reduce the real need
+        if self.pool.free_pages() + len(self.pool.evictable()) < len(park):
             return None
         scores = (self._pull_scores()
-                  if self.pool.free_pages() < n else None)
-        pages = []
+                  if self.pool.free_pages() < len(park) else None)
+        toks = state["lookup_toks"]
+        page = self.pcfg.page_size
+        filled: dict[int, int] = {}       # table idx -> phys
+        upload: list[tuple[int, int]] = []  # (park position, phys)
+        taken: list[int] = []
         try:
-            for _ in range(n):
-                pages.append(self.alloc.extend(scores))
+            for pos, j in enumerate(park):
+                hit = None
+                end = (j + 1) * page
+                if toks is not None and end <= len(toks):
+                    hit = self.pool.lookup(toks[:end])
+                if hit is None:
+                    hit = self.alloc.extend(scores)
+                    upload.append((pos, hit))
+                filled[j] = hit
+                taken.append(hit)
         except PoolExhausted:      # defensive: roll back, entry stays put
-            for pid in pages:
+            for pid in taken:
                 self.pool.decref(pid)
             return None
         state = self.swap_area.take(req.rid)   # committed: pages acquired
         slot = self.free.pop(0)
-        phys = self._padded_table(pages)
-        padded_n = len(phys)
-        # re-pad the parked rows to the jit bucket (pad rows land on the
-        # scratch page)
-        def pad_rows(r):
-            if padded_n == n:
-                return r
-            pad = np.zeros((r.shape[0], padded_n - n) + r.shape[2:],
-                           r.dtype)
-            return np.concatenate([r, pad], axis=1)
-        self.cache["layers"] = self._page_in(
-            self.cache["layers"], jax.tree.map(pad_rows, state["rows"]),
-            jnp.asarray(phys))
+        for j, pid in state["kept"]:
+            filled[j] = pid
+        pages = [filled[j] for j in range(state["n_pages"])]
+        if upload:
+            w = bucketing.bucket_count(len(upload),
+                                       pow2=self.pcfg.bucket_pow2)
+            phys = np.full((w,), SCRATCH, np.int32)
+            phys[:len(upload)] = [pid for _, pid in upload]
+            pos = [p for p, _ in upload]
+            def sub_rows(r):
+                out = np.zeros((r.shape[0], w) + r.shape[2:], r.dtype)
+                out[:, :len(pos)] = r[:, pos]
+                return out
+            self.cache["layers"] = self._page_in(
+                self.cache["layers"],
+                jax.tree.map(sub_rows, state["rows"]), jnp.asarray(phys))
         self.tables[slot] = pages
         self.active[slot] = req
         if state["kind"] == "prefill":

@@ -48,11 +48,31 @@ class NeedPages(RuntimeError):
     """Executor signal: ``slot`` needs pool pages it could not obtain.
 
     Raised instead of ``PoolExhausted`` once a request is running, so the
-    scheduler can pick a preemption victim and retry rather than defer."""
+    scheduler can pick a preemption victim and retry rather than defer.
+    ``shard`` (optional) names the starved pool for engines that run one
+    pool per device shard — victim selection then requires a victim that
+    actually frees pages THERE, not just somewhere."""
 
-    def __init__(self, slot: int):
-        super().__init__(f"slot {slot} needs pages")
+    def __init__(self, slot: int, shard: Optional[int] = None):
+        where = "" if shard is None else f" on shard {shard}"
+        super().__init__(f"slot {slot} needs pages{where}")
         self.slot = slot
+        self.shard = shard
+
+
+# SLA classes: the external QoS input mapped onto Request.priority.
+# Higher priority = admitted first, preempted last; the numeric gaps leave
+# room for finer-grained levels without renumbering.
+SLA_PRIORITY = {"batch": -10, "standard": 0, "interactive": 10}
+
+
+def sla_priority(sla: str) -> int:
+    try:
+        return SLA_PRIORITY[sla]
+    except KeyError:
+        raise ValueError(
+            f"unknown SLA class {sla!r}: choose from "
+            f"{sorted(SLA_PRIORITY)}") from None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,9 +113,11 @@ class Executor(Protocol):
 
     def prefill_chunks_left(self, slot: int) -> int: ...
 
-    def held_pages(self, slot: int) -> int:
+    def held_pages(self, slot: int, shard: Optional[int] = None) -> int:
         """Pool pages preempting the slot would actually free (the
-        engine counts uniquely-owned pages; shared ones survive)."""
+        engine counts uniquely-owned pages; shared ones survive).
+        ``shard`` restricts the count to one pool shard — single-pool
+        engines ignore it."""
 
     def exec_decode(self) -> list[tuple[int, "Request"]]:
         """One fused decode step; returns finished (slot, request) pairs.
@@ -143,6 +165,10 @@ class Scheduler:
     # -- queue --------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        # the QoS input: an SLA class maps onto the priority every policy
+        # below ranks by — unless the caller pinned an explicit priority
+        if getattr(req, "sla", None) is not None and req.priority == 0:
+            req.priority = sla_priority(req.sla)
         self.waiting.append(_Waiting(req, self._seqno))
         self._seqno += 1
 
@@ -214,8 +240,8 @@ class Scheduler:
             try:
                 if ex.exec_prefill_chunk(slot):
                     self.running[slot].phase = "decode"
-            except NeedPages:
-                victim = self._pick_victim(ex, needy=slot)
+            except NeedPages as e:
+                victim = self._pick_victim(ex, needy=slot, shard=e.shard)
                 if victim is None or victim == slot:
                     self._preempt(ex, slot)        # self-preempt: requeue
                 else:
@@ -238,7 +264,7 @@ class Scheduler:
                 finished = ex.exec_decode()
                 break
             except NeedPages as e:
-                victim = self._pick_victim(ex, needy=e.slot)
+                victim = self._pick_victim(ex, needy=e.slot, shard=e.shard)
                 if victim is None:
                     victim = e.slot
                 self._preempt(ex, victim)
@@ -253,18 +279,20 @@ class Scheduler:
 
     # -- preemption ---------------------------------------------------------
 
-    def _pick_victim(self, ex: Executor, needy: int) -> Optional[int]:
+    def _pick_victim(self, ex: Executor, needy: int,
+                     shard: Optional[int] = None) -> Optional[int]:
         """Among slots whose eviction actually FREES pages (preempting a
         page-less or all-shared-pages slot frees nothing — it only churns
-        admissions) and whose priority does NOT exceed the needy slot's
-        (a low-priority arrival must never evict a higher-priority
-        runner — it defers instead): lowest priority first; within a
-        priority level prefer sequences NOT resumed this tick
-        (anti-thrash — a same-tick swap-in/swap-out round trip wastes the
-        page-in), then the newest. The needy slot itself is a legal
-        victim — self-preemption frees the batch for others. None when no
-        eligible victim exists (the caller self-preempts/defers the needy
-        slot)."""
+        admissions; when the executor names a starved ``shard``, pages
+        must be freed on THAT shard) and whose priority does NOT exceed
+        the needy slot's (a low-priority arrival must never evict a
+        higher-priority runner — it defers instead): lowest priority
+        first; within a priority level prefer sequences NOT resumed this
+        tick (anti-thrash — a same-tick swap-in/swap-out round trip
+        wastes the page-in), then the newest. The needy slot itself is a
+        legal victim — self-preemption frees the batch for others. None
+        when no eligible victim exists (the caller self-preempts/defers
+        the needy slot)."""
         def rank(slot):
             st = self.running[slot]
             return (st.req.priority, slot in self._resumed_tick, -st.seqno)
@@ -272,7 +300,7 @@ class Scheduler:
         needy_prio = self.running[needy].req.priority \
             if needy in self.running else 0
         cands = [s for s in self.running
-                 if ex.held_pages(s) > 0
+                 if ex.held_pages(s, shard) > 0
                  and self.running[s].req.priority <= needy_prio]
         if not cands:
             return None

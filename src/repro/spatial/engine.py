@@ -1,0 +1,604 @@
+"""SpatialServingEngine — sequence-sharded serving across a device mesh.
+
+One request's KV context is STRIPED page-by-page across ``n_shards``
+devices (repro.spatial.topology), so the longest servable prompt — and
+the aggregate decode working set — scales with device count instead of
+being capped by a single device's page pool. This is the serving-side
+realization of the paper's Spatial-STAR deployment: per-shard pools with
+per-shard DLZS retention, replicated block-stack compute, and partial
+softmax ``(m, l, o)`` states merged across shards (DRAttention's
+combination) for every cross-shard attention.
+
+Dataflow per phase (each a single SPMD shard_map dispatch — see
+``lm.prefill_chunk_spatial`` / ``lm.decode_step_spatial``):
+
+* chunked prefill — the chunk's activations are replicated; every shard
+  computes a partial state of the chunk queries against ITS resident
+  past pages (the causal cross-shard part), the partials merge with
+  pmax/psum, and each shard scatters the chunk's K/V rows into the pages
+  it owns. Exact — same math as the paged engine's gather+softmax, in a
+  different reduction order.
+* decode — the query token is broadcast, each shard attends over its
+  local hot pages via the paged gather (DLZS page scores pick them,
+  per shard), and the partial states merge to the final output. Decode
+  compiles ONCE: shapes depend only on (max_batch, hot_pages_local,
+  n_pages_local).
+
+Scheduling is the SAME engine-agnostic policy as the paged engine: this
+class implements the ``serving.scheduler.Executor`` protocol, so chunked
+prefill interleaves with decode, pool pressure preempts (host swap with
+ref-1-only parking, or recompute) instead of rejecting, and priorities /
+SLA classes carry over unchanged. Pressure is shard-tagged: a starved
+shard picks a victim that actually frees pages THERE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache import (SCRATCH, PoolExhausted, SwapArea, bucketing,
+                           metrics)
+from repro.models import lm
+from repro.serving.engine import Request
+from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
+from repro.spatial.sharded_pool import ShardedPagePools, ShardPoolExhausted
+from repro.spatial.topology import ShardTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialEngineCfg:
+    n_shards: int = 2
+    max_batch: int = 8
+    page_size: int = 16
+    n_pages_local: int = 64      # per-shard pool capacity (page 0 scratch)
+    hot_pages_local: int = 16    # W: pages gathered per shard per decode
+    recent_pages: int = 2        # newest LOCAL pages always hot per shard
+    eos_id: int = 1
+    greedy: bool = True
+    temperature: float = 1.0
+    bucket_pow2: bool = True
+    share_prefixes: bool = True
+
+
+@dataclasses.dataclass
+class _PrefillProgress:
+    """Host-side cursor of a partially prefilled prompt (spatial copy of
+    the paged engine's — kept separate so the engines evolve freely)."""
+    prompt: np.ndarray
+    toks: Optional[tuple]
+    spans: list
+    chunk: int
+    sharing: bool
+    suppress_first: bool
+
+
+class SpatialServingEngine:
+    def __init__(self, model_cfg, params, scfg_engine: SpatialEngineCfg,
+                 scfg: Optional[SchedulerCfg] = None,
+                 rng: Optional[jax.Array] = None):
+        if any(blk.kind != "attn" for blk in model_cfg.pattern):
+            raise ValueError("spatial engine supports attention-only "
+                             "patterns")
+        if model_cfg.enc_layers or not model_cfg.causal:
+            raise ValueError("spatial engine needs a causal decoder-only "
+                             "model")
+        if model_cfg.star is not None:
+            raise ValueError(
+                "spatial engine serves dense-attention configs; sparsity "
+                "comes from per-shard DLZS hot-page retention at decode")
+        self.cfg = model_cfg
+        self.pcfg = scfg_engine
+        self.params = params
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.sched = Scheduler(scfg or SchedulerCfg())
+        self.topo = ShardTopology(scfg_engine.n_shards)
+        self.mesh = self.topo.make_mesh()
+        self.pools = ShardedPagePools(
+            self.topo, scfg_engine.n_pages_local, scfg_engine.page_size,
+            recent_pages=scfg_engine.recent_pages)
+        self._share = scfg_engine.share_prefixes
+        self.swap_area = SwapArea()
+
+        self.active: dict[int, Request] = {}
+        self.budget: dict[int, int] = {}
+        self.tables: dict[int, list[int]] = {}     # slot -> striped table:
+        #                                            entry j = local phys id
+        #                                            on shard owner(j)
+        self._pf: dict[int, _PrefillProgress] = {}
+        self._prefill_done: list[tuple[int, Request]] = []
+        self.lengths = np.zeros((scfg_engine.max_batch,), np.int64)
+        self.free = list(range(scfg_engine.max_batch))
+
+        mesh, axis = self.mesh, self.topo.axis
+        self._prefill_chunk = jax.jit(functools.partial(
+            self._prefill_chunk_fn), donate_argnums=(2,))
+        self._decode = jax.jit(functools.partial(self._decode_fn),
+                               donate_argnums=(2,))
+        self._copy_page = jax.jit(self._copy_fn, static_argnums=(3,))
+        self._gather_pages = jax.jit(self._gather_fn)
+        self._page_in = jax.jit(self._page_in_fn, donate_argnums=(0,))
+        self._scores = jax.jit(jax.vmap(metrics.page_scores))
+
+        # Per-shard pool slabs from a one-page probe prefill: each leaf
+        # [L, 1, page, nkv, dh] becomes [n_shards, L, P_local, page, nkv,
+        # dh], sharded over the mesh axis (one slab stack per device).
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        probe = {"tokens": jnp.zeros((1, scfg_engine.page_size), jnp.int32)}
+        _, cache_one = jax.jit(lambda p, b: lm.prefill(
+            p, model_cfg, b, last_index=jnp.zeros((1,), jnp.int32)))(
+                params, probe)
+        spec = NamedSharding(mesh, P(axis))
+        def slab(leaf):
+            shape = (self.topo.n_shards, leaf.shape[0],
+                     scfg_engine.n_pages_local) + leaf.shape[2:]
+            return jax.device_put(jnp.zeros(shape, leaf.dtype), spec)
+        self.cache = {
+            "layers": jax.tree.map(slab, cache_one["layers"]),
+            "lengths": jnp.zeros((scfg_engine.max_batch,), jnp.int32),
+        }
+        # committed-replicated so the decode signature never flips between
+        # the first call (fresh buffer) and later ones (jit outputs) —
+        # keeps the one-decode-compilation invariant
+        self.last_token = jax.device_put(
+            jnp.zeros((scfg_engine.max_batch, 1), jnp.int32),
+            NamedSharding(mesh, P()))
+
+    # -- jitted kernels -----------------------------------------------------
+
+    def _prefill_chunk_fn(self, params, batch, cache, chunk_state):
+        return lm.prefill_chunk_spatial(params, self.cfg, batch, cache,
+                                        chunk_state, mesh=self.mesh,
+                                        axis=self.topo.axis)
+
+    def _decode_fn(self, params, tokens, cache, page_state):
+        return lm.decode_step_spatial(params, self.cfg, tokens, cache,
+                                      page_state, mesh=self.mesh,
+                                      axis=self.topo.axis)
+
+    @staticmethod
+    def _copy_fn(pool_layers, src, dst, shard):
+        """COW on one shard: duplicate local page src -> dst (all layers).
+        ``shard`` is static — at most n_shards tiny compilations."""
+        return jax.tree.map(
+            lambda pool: pool.at[shard, :, dst].set(pool[shard, :, src]),
+            pool_layers)
+
+    @staticmethod
+    def _gather_fn(pool_layers, phys):
+        """Swap-out: pull local pages ``phys[s]`` out of every shard's
+        slab (pad = scratch). phys [n_shards, Wpad]."""
+        take = lambda slab, ix: slab[:, ix]
+        return jax.tree.map(
+            lambda slab: jax.vmap(take)(slab, phys), pool_layers)
+
+    @staticmethod
+    def _page_in_fn(pool_layers, rows_layers, phys):
+        """Swap-in: write gathered rows back at new per-shard local ids."""
+        put = lambda slab, r, ix: slab.at[:, ix].set(r.astype(slab.dtype))
+        return jax.tree.map(
+            lambda slab, r: jax.vmap(put)(slab, r, phys),
+            pool_layers, rows_layers)
+
+    # -- queueing -----------------------------------------------------------
+
+    def submit(self, req: Request):
+        if req.max_len is not None and req.max_len <= len(req.prompt):
+            raise ValueError(
+                f"request {req.rid}: max_len {req.max_len} leaves no room "
+                f"after a {len(req.prompt)}-token prompt")
+        total = len(req.prompt) + req.max_tokens
+        if req.max_len is not None:
+            total = min(total, req.max_len)
+        need = -(-total // self.pcfg.page_size)
+        if not self.pools.fits(need):
+            raise ValueError(
+                f"request {req.rid}: {total} tokens needs {need} striped "
+                f"pages; {self.topo.n_shards} shards x "
+                f"{self.pcfg.n_pages_local - 1} pages cannot hold them")
+        req.out = []
+        self.sched.submit(req)
+
+    @property
+    def queue(self) -> list[Request]:
+        return self.sched.queued_requests()
+
+    def _pull_scores(self) -> np.ndarray:
+        """Per-shard DLZS page scores [n_shards, n_pages_local]."""
+        return np.asarray(self._scores(self.cache["layers"]))
+
+    # -- executor protocol: admission ---------------------------------------
+
+    def free_slot_available(self) -> bool:
+        return bool(self.free)
+
+    def exec_admit(self, req: Request) -> int:
+        slot = self.free.pop(0)
+        out = req.out or []
+        if out:        # recompute-resume: replay prompt + emitted tokens
+            prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int64),
+                 np.asarray(out[:-1], np.int64)])
+        else:
+            prompt = np.asarray(req.prompt, np.int64)
+        spans = bucketing.chunk_spans(
+            len(prompt), self.pcfg.page_size, self.sched.cfg.chunk_pages,
+            pow2=self.pcfg.bucket_pow2)
+        self._pf[slot] = _PrefillProgress(
+            prompt=prompt,
+            toks=tuple(int(x) for x in prompt) if self._share else None,
+            spans=spans, chunk=0, sharing=self._share,
+            suppress_first=bool(out))
+        self.tables[slot] = []
+        self.active[slot] = req
+        self.lengths[slot] = 0
+        return slot
+
+    def prefill_chunks_left(self, slot: int) -> int:
+        pf = self._pf.get(slot)
+        return 0 if pf is None else len(pf.spans) - pf.chunk
+
+    def held_pages(self, slot: int, shard: Optional[int] = None) -> int:
+        return self.pools.held_pages(self.tables.get(slot, ()), shard)
+
+    # -- executor protocol: chunked prefill ---------------------------------
+
+    def _past_state(self, table: list[int], start_page: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-shard (past_phys, past_logical) [n_shards, 1, Wp] of the
+        pages earlier chunks wrote. Wp is pow2-bucketed on the largest
+        per-shard count so chunk compiles stay O(log^2)."""
+        n = self.topo.n_shards
+        wp = bucketing.bucket_count(
+            max(1, self.topo.max_local_count(start_page)),
+            pow2=self.pcfg.bucket_pow2)
+        phys = np.full((n, 1, wp), -1, np.int32)
+        logical = np.full((n, 1, wp), -1, np.int32)
+        for s in range(n):
+            globals_ = list(range(s, start_page, n))
+            phys[s, 0, :len(globals_)] = [table[j] for j in globals_]
+            logical[s, 0, :len(globals_)] = globals_
+        return phys, logical
+
+    def exec_prefill_chunk(self, slot: int) -> bool:
+        pf = self._pf[slot]
+        req = self.active[slot]
+        page = self.pcfg.page_size
+        start, end, width = pf.spans[pf.chunk]
+        start_page = start // page
+        n_need = -(-end // page) - start_page
+        scores = self._pull_scores() \
+            if any(self.pools.free_pages(s) < n_need
+                   for s in range(self.topo.n_shards)) else None
+        try:
+            pages, fresh_globals, sharing = self.pools.admit_chunk(
+                pf.toks, start_page, n_need, scores, sharing=pf.sharing)
+        except ShardPoolExhausted as e:
+            raise NeedPages(slot, e.shard) from None
+        pf.sharing = sharing
+        table = self.tables[slot]
+        table.extend(pages)
+        t = len(pf.prompt)
+        last = pf.chunk == len(pf.spans) - 1
+
+        logits = None
+        if fresh_globals or last:   # fully-shared middle chunks skip compute
+            toks = bucketing.pad_tokens(pf.prompt[start:end], width)
+            batch = {"tokens": jnp.asarray(toks)[None, :]}
+            last_idx = (t - 1 if last else end - 1) - start
+            # chunk page targets: the owner shard scatters fresh pages,
+            # everything else (shared content, bucket padding) -> scratch
+            n = self.topo.n_shards
+            fresh_set = set(fresh_globals)
+            chunk_phys = np.full((n, 1, width // page), SCRATCH, np.int32)
+            for cj in range(n_need):
+                g = start_page + cj
+                if g in fresh_set:
+                    chunk_phys[self.topo.owner(g), 0, cj] = table[g]
+            past_phys, past_logical = self._past_state(table, start_page)
+            chunk_state = {
+                "past_phys": jnp.asarray(past_phys),
+                "past_logical": jnp.asarray(past_logical),
+                "chunk_phys": jnp.asarray(chunk_phys),
+                "past_len": jnp.asarray([start], jnp.int32),
+                "last_index": jnp.asarray([last_idx], jnp.int32)}
+            logits, new_cache = self._prefill_chunk(
+                self.params, batch, {"layers": self.cache["layers"]},
+                chunk_state)
+            self.cache["layers"] = new_cache["layers"]
+            if self._share and pf.toks is not None:
+                self.pools.register_prompt_pages(pf.toks, table,
+                                                 fresh_globals)
+        pf.chunk += 1
+        if not last:
+            return False
+
+        if pf.suppress_first:
+            tok = int(req.out[-1])
+        else:
+            tok = int(jnp.argmax(logits[0, :self.cfg.vocab]))
+            req.out.append(tok)
+        del self._pf[slot]
+        self.lengths[slot] = t
+        self.last_token = self.last_token.at[slot, 0].set(tok)
+        self.budget[slot] = req.max_tokens - len(req.out)
+        if self.budget[slot] <= 0:
+            self.pools.release(self.tables.pop(slot))
+            del self.active[slot]
+            del self.budget[slot]
+            self.lengths[slot] = 0
+            self.free.append(slot)
+            self._prefill_done.append((slot, req))
+        return True
+
+    # -- executor protocol: decode ------------------------------------------
+
+    def _decode_slots(self) -> list[int]:
+        return [s for s in self.active if s not in self._pf]
+
+    def _page_state(self, slots: list[int]) -> dict:
+        n = self.topo.n_shards
+        b, w = self.pcfg.max_batch, self.pcfg.hot_pages_local
+        page = self.pcfg.page_size
+        phys = np.full((n, b, w), -1, np.int32)
+        logical = np.full((n, b, w), -1, np.int32)
+        write_page = np.full((n, b), SCRATCH, np.int32)
+        write_off = np.zeros((n, b), np.int32)
+
+        growers = [slot for slot in slots
+                   if int(self.lengths[slot]) // page
+                   == len(self.tables[slot])]
+        grow_by_shard = [0] * n
+        for slot in growers:
+            grow_by_shard[self.topo.owner(len(self.tables[slot]))] += 1
+        need_scores = (
+            any(self.topo.max_local_count(len(self.tables[s])) > w
+                for s in slots)
+            or any(self.pools.free_pages(s) < grow_by_shard[s]
+                   for s in range(n)))
+        scores = self._pull_scores() if need_scores else None
+        for slot in slots:
+            table = self.tables[slot]
+            length = int(self.lengths[slot])
+            idx = length // page
+            if idx == len(table):              # tail page full: grow
+                try:
+                    table.append(self.pools.extend(idx, scores))
+                except ShardPoolExhausted as e:
+                    raise NeedPages(slot, e.shard) from None
+            cow = self.pools.ensure_owned(table, idx)
+            if cow is not None:
+                shard, src, dst = cow
+                self.cache["layers"] = self._copy_page(
+                    self.cache["layers"], jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32), shard)
+            for s in range(n):
+                ph, lg = self.pools.select_hot(table, s, w, scores)
+                phys[s, slot] = ph
+                logical[s, slot] = lg
+            owner = self.topo.owner(idx)
+            write_page[owner, slot] = table[idx]
+            write_off[owner, slot] = length % page
+        return {"phys": jnp.asarray(phys),
+                "logical": jnp.asarray(logical),
+                "write_page": jnp.asarray(write_page),
+                "write_off": jnp.asarray(write_off)}
+
+    def exec_decode(self) -> list[tuple[int, Request]]:
+        slots = self._decode_slots()
+        if not slots:
+            done_early, self._prefill_done = self._prefill_done, []
+            return done_early
+        ps = self._page_state(slots)       # may raise NeedPages
+        done_early, self._prefill_done = self._prefill_done, []
+        self.cache["lengths"] = jnp.asarray(self.lengths, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.last_token,
+                                          self.cache, ps)
+        logits = logits[:, :self.cfg.vocab]
+        if self.pcfg.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            self.rng, sub = jax.random.split(self.rng)
+            nxt = jax.random.categorical(
+                sub, logits / self.pcfg.temperature, axis=-1)
+        self.last_token = nxt[:, None].astype(jnp.int32)
+        nxt_host = np.asarray(nxt)
+        finished = done_early
+        for slot in slots:
+            req = self.active[slot]
+            tok = int(nxt_host[slot])
+            req.out.append(tok)
+            self.lengths[slot] += 1
+            self.budget[slot] -= 1
+            limit = req.max_len
+            done = (tok == self.pcfg.eos_id or self.budget[slot] <= 0
+                    or (limit is not None
+                        and self.lengths[slot] + 1 >= limit))
+            if done:
+                self.pools.release(self.tables.pop(slot))
+                del self.active[slot]
+                del self.budget[slot]
+                self.lengths[slot] = 0
+                self.free.append(slot)
+                finished.append((slot, req))
+        return finished
+
+    # -- executor protocol: preemption / swap -------------------------------
+
+    def exec_preempt(self, slot: int, swap: bool) -> bool:
+        """Evict ``slot`` with the same shared-prefix-aware parking as the
+        paged engine: ref-1 pages are gathered per shard into the host
+        SwapArea; shared pages keep this sequence's reference (and stay
+        resident on their shard) until it resumes."""
+        req = self.active.pop(slot)
+        table = self.tables.pop(slot)
+        pf = self._pf.pop(slot, None)
+        swapped = False
+        if swap and table:
+            n = self.topo.n_shards
+            ref = lambda j: self.pools.pools[self.topo.owner(j)].ref(
+                table[j])
+            kept = [(j, table[j]) for j in range(len(table)) if ref(j) > 1]
+            park = [j for j in range(len(table)) if ref(j) == 1]
+            park_by_shard = [[j for j in park if self.topo.owner(j) == s]
+                             for s in range(n)]
+            host = None
+            nbytes = 0
+            if park:
+                max_park = max(len(p) for p in park_by_shard)
+                wpad = bucketing.bucket_count(max_park,
+                                              pow2=self.pcfg.bucket_pow2)
+                phys = np.full((n, wpad), SCRATCH, np.int32)
+                for s in range(n):
+                    phys[s, :len(park_by_shard[s])] = \
+                        [table[j] for j in park_by_shard[s]]
+                rows = self._gather_pages(self.cache["layers"],
+                                          jnp.asarray(phys))
+                # the gather width is pow2-bucketed for jit-shape
+                # stability, but only the real pages are parked — copy
+                # out of the padded buffer so host swap memory matches
+                # the reported swap pressure
+                host = jax.tree.map(
+                    lambda r: np.ascontiguousarray(
+                        np.asarray(r)[:, :, :max_park]), rows)
+                nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(host))
+            toks = pf.toks if pf is not None else (
+                tuple(int(x) for x in req.prompt) if self._share else None)
+            state = {"rows": host, "park_by_shard": park_by_shard,
+                     "kept": kept, "n_pages": len(table),
+                     "lookup_toks": toks}
+            if pf is not None:
+                state.update(kind="prefill", prompt=pf.prompt,
+                             toks=pf.toks, spans=pf.spans, chunk=pf.chunk,
+                             sharing=pf.sharing,
+                             suppress_first=pf.suppress_first)
+            else:
+                state.update(kind="decode",
+                             length=int(self.lengths[slot]),
+                             last_token=int(np.asarray(
+                                 self.last_token[slot, 0])),
+                             budget=self.budget[slot])
+            self.swap_area.put(req.rid, state, nbytes)
+            for s in range(n):
+                for j in park_by_shard[s]:
+                    self.pools.pools[s].decref(table[j])
+            swapped = True
+        else:
+            self.pools.release(table)
+        self.budget.pop(slot, None)
+        self.lengths[slot] = 0
+        self.free.append(slot)
+        return swapped
+
+    def exec_swap_in(self, req: Request) -> Optional[int]:
+        state = self.swap_area.peek(req.rid)
+        n = self.topo.n_shards
+        park_by_shard = state["park_by_shard"]
+        if any(self.pools.reclaimable(s) < len(park_by_shard[s])
+               for s in range(n)):
+            return None
+        scores = self._pull_scores() \
+            if any(self.pools.free_pages(s) < len(park_by_shard[s])
+                   for s in range(n)) else None
+        toks = state["lookup_toks"]
+        page = self.pcfg.page_size
+        filled: dict[int, int] = {}
+        upload: list[tuple[int, int, int]] = []   # (shard, park pos, phys)
+        taken: list[tuple[int, int]] = []
+        try:
+            for s in range(n):
+                for pos, j in enumerate(park_by_shard[s]):
+                    hit = None
+                    end = (j + 1) * page
+                    if toks is not None and end <= len(toks):
+                        hit = self.pools.pools[s].lookup(tuple(toks[:end]))
+                    if hit is None:
+                        hit = self.pools.allocs[s].extend(
+                            scores[s] if scores is not None else None)
+                        upload.append((s, pos, hit))
+                    filled[j] = hit
+                    taken.append((s, hit))
+        except PoolExhausted:        # defensive: roll back, entry stays put
+            for s, pid in taken:
+                self.pools.pools[s].decref(pid)
+            return None
+        state = self.swap_area.take(req.rid)
+        slot = self.free.pop(0)
+        for j, pid in state["kept"]:
+            filled[j] = pid
+        table = [filled[j] for j in range(state["n_pages"])]
+        if upload:
+            per_shard = [[(pos, pid) for s2, pos, pid in upload if s2 == s]
+                         for s in range(n)]
+            wpad = bucketing.bucket_count(
+                max(1, max(len(u) for u in per_shard)),
+                pow2=self.pcfg.bucket_pow2)
+            phys = np.full((n, wpad), SCRATCH, np.int32)
+            for s in range(n):
+                phys[s, :len(per_shard[s])] = [pid for _, pid
+                                               in per_shard[s]]
+            def sub_rows(r):
+                out = np.zeros((n, r.shape[1], wpad) + r.shape[3:],
+                               r.dtype)
+                for s in range(n):
+                    pos = [p for p, _ in per_shard[s]]
+                    if pos:
+                        out[s, :, :len(pos)] = r[s][:, pos]
+                return out
+            self.cache["layers"] = self._page_in(
+                self.cache["layers"],
+                jax.tree.map(sub_rows, state["rows"]), jnp.asarray(phys))
+        self.tables[slot] = table
+        self.active[slot] = req
+        if state["kind"] == "prefill":
+            self._pf[slot] = _PrefillProgress(
+                prompt=state["prompt"], toks=state["toks"],
+                spans=state["spans"], chunk=state["chunk"],
+                sharing=state["sharing"],
+                suppress_first=state["suppress_first"])
+            self.lengths[slot] = 0
+        else:
+            self.lengths[slot] = state["length"]
+            self.last_token = self.last_token.at[slot, 0].set(
+                state["last_token"])
+            self.budget[slot] = state["budget"]
+        return slot
+
+    # -- driver -------------------------------------------------------------
+
+    def step(self) -> list[Request]:
+        return self.sched.tick(self)
+
+    def run(self, requests: list[Request], max_steps: int = 10_000):
+        """Serve a request list to completion; returns {rid: tokens}."""
+        for r in requests:
+            self.submit(r)
+        done: dict[int, list] = {}
+        steps = 0
+        while self.sched.has_work() and steps < max_steps:
+            for fin in self.step():
+                done[fin.rid] = fin.out
+            steps += 1
+        return done
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        pools = self.pools.stats()
+        per_page = metrics.bytes_per_page(
+            jax.tree.map(lambda leaf: leaf[0], self.cache["layers"]))
+        return {
+            "pools": pools,
+            "n_shards": self.topo.n_shards,
+            "swap": self.swap_area.stats(),
+            "sched": dataclasses.replace(self.sched.stats),
+            "bytes_per_page": per_page,
+            "working_set_bytes": pools["peak_live"] * per_page,
+            "slab_bytes": metrics.tree_bytes(self.cache["layers"]),
+            "decode_compiles": self._decode._cache_size(),
+        }

@@ -382,6 +382,100 @@ def test_paged_engine_preempt_resume_parity(smoke_lm):
     assert not eng.active and eng.pool.live_pages() == 0
 
 
+def test_paged_swap_stable_occupancy_same_prefix(smoke_lm):
+    """Regression (shared-prefix-aware swap): repeated preempt/resume of
+    same-prefix traffic must neither re-upload the shared prefix nor grow
+    pool occupancy. Pages shared at swap-out keep the victim's reference
+    (zero host bytes); parked ref-1 prompt pages revive through the
+    prefix index on page-in instead of duplicating."""
+    cfg, params = smoke_lm
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=32, hot_pages=4, eos_id=-1))
+    shared = np.arange(32, dtype=np.int32)       # 2 full prefix pages
+    reqs = [Request(rid=i, prompt=np.concatenate(
+                [shared, np.full((5 + i,), 90 + i, np.int32)]),
+                    max_tokens=16)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):                            # both slots decoding
+        eng.step()
+    assert len(eng._decode_slots()) == 2
+    slot = 1
+    rid = eng.active[slot].rid
+    n_private = sum(1 for pid in eng.tables[slot]
+                    if eng.pool.ref(pid) == 1)
+    assert n_private > 0                          # tail pages are private
+    live0, free0 = eng.pool.live_pages(), eng.pool.free_pages()
+    per_page = eng.stats()["bytes_per_page"]
+    st = eng.sched.running.pop(slot)
+    for cycle in range(3):
+        assert eng.exec_preempt(slot, True)
+        # only the private (ref-1, non-revivable-by-index... the parked)
+        # pages hit the host: the 2 prefix pages are shared with slot 0
+        # and stay resident under the victim's kept reference
+        assert eng.swap_area.stats().bytes == n_private * per_page
+        slot = eng.exec_swap_in(st.req)
+        assert slot is not None
+        assert eng.pool.live_pages() == live0, f"cycle {cycle}: occupancy"
+        assert eng.pool.free_pages() == free0, f"cycle {cycle}: leak"
+    eng.sched.running[slot] = st
+    done = eng.run([])                            # drain to completion
+    assert set(done) == {0, 1}
+    assert all(len(v) == 16 for v in done.values())
+    assert eng.pool.stats().cow_copies == 0
+
+
+def test_star_chunk_sparse_prefill_within_tolerance():
+    """STAR inside later prefill chunks (satellite of the spatial PR):
+    with the ``chunk_sparse`` flag the chunk's queries DLZS-predict over
+    the gathered past pages and drop whole pages outside the SADS sphere.
+    Pages with uniformly tiny keys are dropped — and the output stays
+    within the sphere's error bound of the dense chunk path."""
+    import dataclasses as dc
+
+    from repro.core.star_attention import STARConfig
+    from repro.models import attention
+
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 6)
+    nkv, nh, dh, page, wp, c = 2, 4, 16, 8, 4, 8
+    acfg = attention.AttentionCfg(
+        d_model=64, n_heads=nh, n_kv=nkv, head_dim=dh, q_chunk=64,
+        star=STARConfig(block_q=8, block_kv=8, radius=14.0),
+        chunk_sparse=True, dtype=jnp.float32)
+    params = attention.init(ks[0], acfg)
+    # past pool: 3 near-zero pages + 1 dominant page. The sphere keeps
+    # only the dominant page, and the dropped mass is bounded by
+    # S_past * e^-radius of the total — the tolerance below
+    kp = jax.random.normal(ks[1], (6, page, nkv, dh), jnp.float32) * 0.01
+    kp = kp.at[4].set(jax.random.normal(ks[2], (page, nkv, dh)) * 20.0)
+    vp = jax.random.normal(ks[3], (6, page, nkv, dh), jnp.float32)
+    from repro.core import dlzs
+    cache = {"k": kp, "v": vp, "k_lz": dlzs.lz_pack(kp)}
+    x = jax.random.normal(ks[4], (1, c, 64), jnp.float32)
+    positions = (wp * page + jnp.arange(c))[None, :]
+    past_phys = jnp.array([[1, 2, 4, 3]], jnp.int32)
+    past_logical = jnp.array([[0, 1, 2, 3]], jnp.int32)
+    past_len = jnp.array([wp * page], jnp.int32)
+
+    run = lambda a: attention.apply_prefill_chunk(
+        params, a, x, positions, cache, past_phys, past_logical,
+        past_len)[0]
+    dense = run(dc.replace(acfg, star=None, chunk_sparse=False))
+    sparse = run(acfg)
+    keep_all = run(dc.replace(
+        acfg, star=dc.replace(acfg.star, radius=1e9)))
+    # an infinite sphere keeps every page: exactly the dense path
+    np.testing.assert_allclose(np.asarray(keep_all), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+    # the real radius drops the tiny pages: not identical, but within the
+    # sphere's e^-radius relative-mass bound
+    assert float(jnp.max(jnp.abs(sparse - dense))) > 1e-7
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               atol=0.02)
+
+
 def test_paged_engine_priority_preempts_low_first(smoke_lm):
     """Under pressure the low-priority request is the victim; the
     high-priority one is never preempted and still finishes exactly."""

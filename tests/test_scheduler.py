@@ -7,7 +7,8 @@ import pytest
 from repro.kvcache import SwapArea
 from repro.kvcache import paged_attention as pa
 from repro.serving import Request
-from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
+from repro.serving.scheduler import (NeedPages, Scheduler, SchedulerCfg,
+                                     sla_priority)
 
 
 class FakeEngine:
@@ -49,7 +50,7 @@ class FakeEngine:
         st = self.state[slot]
         return self.chunks[st["req"].rid] - st["chunk"]
 
-    def held_pages(self, slot):
+    def held_pages(self, slot, shard=None):
         return self.pages.get(slot, 0)
 
     def exec_prefill_chunk(self, slot):
@@ -238,6 +239,83 @@ def test_scheduler_blocked_swap_in_holds_the_line():
     assert {r.rid for r in done} == {0, 1, 2}
     assert ("preempt", 1, True) in ex.log        # rid 1 was swapped out...
     assert ex.log.index(("swap_in", 1)) < ex.log.index(("admit", 2))
+
+
+def test_scheduler_sla_classes_map_to_priority():
+    """The external QoS input: an SLA class on the request becomes a
+    scheduler priority at submit — interactive outranks standard outranks
+    batch — and an explicit priority is what preemption ranks by."""
+    assert sla_priority("interactive") > sla_priority("standard") \
+        > sla_priority("batch")
+    with pytest.raises(ValueError, match="SLA"):
+        sla_priority("platinum")
+    # batch traffic is the preemption victim; interactive never is
+    ex = FakeEngine(capacity=4, slots=3,
+                    chunks={0: 1, 1: 1, 2: 1},
+                    decode_steps={0: 3, 1: 3, 2: 3})
+    sched = Scheduler(SchedulerCfg(swap=True))
+    sched.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                         sla="interactive", out=[]))
+    sched.submit(Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                         sla="batch", out=[]))
+    sched.submit(Request(rid=2, prompt=np.arange(4, dtype=np.int32),
+                         sla="batch", out=[]))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2}
+    victims = [e[1] for e in ex.log if e[0] == "preempt"]
+    assert victims and 0 not in victims
+
+
+class ShardedFakeEngine(FakeEngine):
+    """FakeEngine with two page shards: even slots hold pages on shard 0,
+    odd slots on shard 1 (a stand-in for the spatial engine's striping)."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.last_need_shard = None
+        self.victim_shards_ok: list[bool] = []
+
+    def held_pages(self, slot, shard=None):
+        if shard is not None and slot % 2 != shard:
+            return 0
+        return self.pages.get(slot, 0)
+
+    def exec_decode(self):
+        decode = [s for s in self.state
+                  if self.prefill_chunks_left(s) == 0]
+        for slot in decode:        # growth raises with the slot's shard;
+            st = self.state[slot]  # super() then sees grown=True and skips
+            if not st.get("grown"):
+                if self._used() + 1 > self.capacity:
+                    self.last_need_shard = slot % 2
+                    raise NeedPages(slot, shard=slot % 2)
+                self.pages[slot] += 1
+                st["grown"] = True
+        return super().exec_decode()
+
+    def exec_preempt(self, slot, swap):
+        if self.last_need_shard is not None:
+            self.victim_shards_ok.append(slot % 2 == self.last_need_shard)
+        return super().exec_preempt(slot, swap)
+
+
+def test_scheduler_shard_tagged_pressure_picks_shard_victim():
+    """A NeedPages tagged with a shard must evict a victim that frees
+    pages on THAT shard — evicting elsewhere would not unblock the needy
+    sequence (the spatial engine's per-shard pools)."""
+    # per-sequence worst case (1 prefill + 4 decode pages) fits capacity
+    ex = ShardedFakeEngine(capacity=5, slots=3,
+                           chunks={0: 1, 1: 1, 2: 1},
+                           decode_steps={0: 4, 1: 4, 2: 4})
+    sched = Scheduler(SchedulerCfg(swap=True))
+    for rid in (0, 1, 2):
+        sched.submit(_req(rid))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2}
+    assert sched.stats.preemptions > 0
+    assert all(h > 0 for h in ex.preempt_held)
+    # every shard-tagged preemption freed pages on the starved shard
+    assert ex.victim_shards_ok and all(ex.victim_shards_ok)
 
 
 def test_swap_area_bookkeeping():

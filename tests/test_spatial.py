@@ -1,0 +1,148 @@
+"""Spatial serving runtime: topology/striping units, sharded-pool policy,
+and engine acceptance (parity + ultra-long context + preemption) on 2- and
+4-shard fake-device meshes via subprocess (the main pytest process keeps
+its single-device view — see tests/test_distributed.py)."""
+
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import mrca
+from repro.spatial.sharded_pool import ShardedPagePools, ShardPoolExhausted
+from repro.spatial.topology import ShardTopology
+
+PROGS = pathlib.Path(__file__).parent / "spatial_progs"
+
+
+# -- topology -----------------------------------------------------------------
+
+def test_topology_striping():
+    topo = ShardTopology(4)
+    assert [topo.owner(j) for j in range(8)] == [0, 1, 2, 3, 0, 1, 2, 3]
+    # 10 pages striped: shards 0/1 hold 3, shards 2/3 hold 2
+    assert [topo.local_count(10, s) for s in range(4)] == [3, 3, 2, 2]
+    assert topo.max_local_count(10) == 3
+    assert topo.max_local_count(0) == 0
+    with pytest.raises(ValueError):
+        ShardTopology(0)
+
+
+def test_topology_mrca_schedule_realizes_ring():
+    """The neighbor schedule is MRCA (mesh-legal: neighbor hops only) and
+    delivers every shard's partial to every shard — the logical ring the
+    partial-state merge needs."""
+    topo = ShardTopology(6)
+    sched = topo.neighbor_schedule()
+    assert all(abs(s.src - s.dest) == 1 for step in sched for s in step)
+    assert mrca.ring_equivalent(6)
+    # 1 shard: no exchange at all
+    assert ShardTopology(1).neighbor_schedule() == []
+
+
+def test_topology_mrca_beats_naive_ring():
+    """MRCA eliminates the store-and-forward wrap tail a naive logical
+    ring pays on a wrap-around-free mesh (paper §V-B2)."""
+    cost = ShardTopology(8).exchange_cost()
+    assert cost["mrca"]["latency_ns"] < cost["naive_ring"]["latency_ns"]
+
+
+# -- sharded pools ------------------------------------------------------------
+
+def _pools(n_shards=2, n_pages_local=8, page=4):
+    return ShardedPagePools(ShardTopology(n_shards), n_pages_local, page)
+
+
+def test_sharded_admit_stripes_pages_across_shards():
+    pools = _pools()
+    toks = tuple(range(16))                    # 4 full pages
+    table, fresh, sharing = pools.admit_chunk(toks, 0, 4)
+    assert fresh == [0, 1, 2, 3] and not sharing   # miss -> sharing off
+    # pages 0/2 live on shard 0, pages 1/3 on shard 1
+    assert pools.pools[0].live_pages() == 2
+    assert pools.pools[1].live_pages() == 2
+    phys, logical = pools.local_pages(table, 0)
+    assert logical == [0, 2]
+    phys, logical = pools.local_pages(table, 1)
+    assert logical == [1, 3]
+
+
+def test_sharded_prefix_sharing_per_shard():
+    pools = _pools()
+    toks = tuple(range(16))
+    t1, fresh, _ = pools.admit_chunk(toks, 0, 4)
+    pools.register_prompt_pages(toks, t1, fresh)
+    t2, fresh2, sharing = pools.admit_chunk(toks, 0, 4)
+    assert t2 == t1 and fresh2 == [] and sharing
+    assert all(pools.pools[s].stats().shared_hits == 2 for s in (0, 1))
+    assert pools.held_pages(t1) == 0           # everything shared: no gain
+    pools.release(t2)
+    assert pools.held_pages(t1) == 4
+    assert pools.held_pages(t1, shard=0) == 2
+
+
+def test_sharded_extend_and_exhaustion_names_the_shard():
+    pools = _pools(n_shards=2, n_pages_local=3)    # 2 usable per shard
+    table, _, _ = pools.admit_chunk(None, 0, 4, sharing=False)
+    # next page (global 4) belongs to shard 0, which is full
+    with pytest.raises(ShardPoolExhausted) as ei:
+        pools.extend(4)
+    assert ei.value.shard == 0
+    assert pools.free_pages(1) == 0
+    pools.release(table)
+    assert pools.free_pages(0) == 2 and pools.free_pages(1) == 2
+
+
+def test_sharded_admit_rollback_names_the_starved_shard():
+    """Regression: when a chunk takes pages on one shard and then starves
+    on another, the rollback must not clobber the reported shard — the
+    scheduler preempts victims on the shard the exception names."""
+    pools = _pools(n_shards=2, n_pages_local=3)    # 2 usable per shard
+    table, _, _ = pools.admit_chunk(None, 0, 4, sharing=False)
+    pools.pools[1].decref(table[1])                # shard 1: one page free
+    # pages 5 (shard 1: fits) then 6 (shard 0: starved, rolls 5 back)
+    with pytest.raises(ShardPoolExhausted) as ei:
+        pools.admit_chunk(None, 5, 2, sharing=False)
+    assert ei.value.shard == 0
+    assert pools.free_pages(1) == 1                # rollback returned page 5
+
+
+def test_sharded_fits_is_per_shard_not_aggregate():
+    pools = _pools(n_shards=2, n_pages_local=3)
+    assert pools.fits(4)        # 2 per shard
+    assert not pools.fits(5)    # shard 0 would need 3 > 2 usable
+    assert pools.capacity_pages() == 4
+
+
+def test_sharded_select_hot_returns_global_logical():
+    pools = _pools(n_shards=2, n_pages_local=8)
+    table, _, _ = pools.admit_chunk(None, 0, 6, sharing=False)
+    phys, logical = pools.select_hot(table, 0, width=2)
+    # shard 0 holds globals [0, 2, 4]; width 2 keeps the newest locals
+    assert list(logical) == [2, 4]
+    assert list(phys) == [table[2], table[4]]
+    phys, logical = pools.select_hot(table, 1, width=4)
+    assert list(logical) == [1, 3, 5, -1]
+
+
+# -- engine acceptance (fake-device subprocess) -------------------------------
+
+def _run(prog: str, *args) -> str:
+    out = subprocess.run(
+        [sys.executable, str(PROGS / prog), *map(str, args)],
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, \
+        f"{prog} failed:\nSTDOUT:{out.stdout}\nSTDERR:{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_spatial_engine_acceptance(n_shards):
+    """Token parity with the paged engine on mixed-length batches, an
+    ultra-long prompt only the spatial engine admits, preemption parity
+    under per-shard pressure, cross-shard prefix sharing — on a
+    fake-device mesh."""
+    out = _run("engine_prog.py", n_shards)
+    assert "ALL_OK" in out

@@ -2,7 +2,7 @@
 
 Run:  PYTHONPATH=src python tools/smoke_serve.py
 
-Two scenarios, ~30s each on CPU:
+Three scenarios, ~30s each on CPU:
 
 1. Basic: a small mixed-length batch through the paged KV-cache engine —
    every request completes with valid tokens, variable-length admission
@@ -12,6 +12,10 @@ Two scenarios, ~30s each on CPU:
    with ZERO rejections, swapping under pressure. The scenario's metrics
    refresh the ``overload`` entry of BENCH_serving.json so the trajectory
    (docs/benchmarks.md) tracks preemption behavior across PRs.
+3. Spatial: the sequence-sharded engine on a 2-shard fake-device mesh in
+   a subprocess (tools/smoke_spatial_prog.py — the parent's XLA device
+   count is fixed at first jax init): token parity with the paged engine
+   and an ultra-long prompt only the sharded engine can admit.
 
 Exits non-zero on any failure.
 """
@@ -20,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
+import subprocess
 import sys
 import time
 
@@ -85,11 +90,26 @@ def overload(cfg, params) -> bool:
     return ok
 
 
+def spatial() -> bool:
+    t0 = time.time()
+    prog = pathlib.Path(__file__).parent / "smoke_spatial_prog.py"
+    out = subprocess.run([sys.executable, str(prog)],
+                         capture_output=True, text=True, timeout=900)
+    ok = out.returncode == 0 and "SPATIAL_OK" in out.stdout
+    dt = time.time() - t0
+    detail = out.stdout.strip().splitlines()[-1] if out.stdout.strip() \
+        else out.stderr[-300:]
+    print(f"smoke_serve[spatial]: {detail} ({dt:.1f}s) "
+          f"-> {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
 def main() -> int:
     cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
     params = lm.init(jax.random.PRNGKey(0), cfg)
     ok = basic(cfg, params)
     ok = overload(cfg, params) and ok
+    ok = spatial() and ok
     return 0 if ok else 1
 
 

@@ -1,0 +1,64 @@
+"""Subprocess program for the CI spatial smoke: 2-shard fake-device mesh.
+
+Launched by tools/smoke_serve.py (the XLA device count is fixed at first
+jax init, so the parent cannot host the mesh itself). Small and fast:
+
+* token parity: SpatialServingEngine(2 shards) == PagedServingEngine on a
+  small mixed-length batch, one decode compilation;
+* capacity: a prompt that overflows one shard's pool is rejected by the
+  single-pool engine and served by the 2-shard engine.
+
+Prints SPATIAL_OK on success; any assertion exits non-zero.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import (PagedEngineCfg, PagedServingEngine, Request,
+                           SchedulerCfg)
+from repro.spatial import SpatialEngineCfg, SpatialServingEngine
+
+cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+params = lm.init(jax.random.PRNGKey(0), cfg)
+
+reqs = lambda: [Request(rid=i, prompt=(np.arange(l, dtype=np.int32) * 5 + i)
+                        % cfg.vocab, max_tokens=4)
+                for i, l in enumerate((6, 18, 35))]
+
+paged = PagedServingEngine(cfg, params, PagedEngineCfg(
+    max_batch=2, page_size=16, n_pages=24, hot_pages=4, eos_id=-1),
+    SchedulerCfg(chunk_pages=1))
+want = paged.run(reqs())
+sp = SpatialServingEngine(cfg, params, SpatialEngineCfg(
+    n_shards=2, max_batch=2, page_size=16, n_pages_local=24,
+    hot_pages_local=4, eos_id=-1), SchedulerCfg(chunk_pages=1))
+got = sp.run(reqs())
+assert got == want, f"2-shard parity broke:\n{got}\n{want}"
+assert sp.stats()["decode_compiles"] == 1
+
+long_prompt = (np.arange(150, dtype=np.int32) * 3 + 7) % cfg.vocab
+small = PagedServingEngine(cfg, params, PagedEngineCfg(
+    max_batch=2, page_size=16, n_pages=8, hot_pages=12, eos_id=-1))
+try:
+    small.submit(Request(rid=9, prompt=long_prompt, max_tokens=4))
+    raise SystemExit("single-pool engine admitted the overflow prompt")
+except ValueError:
+    pass
+sp_small = SpatialServingEngine(cfg, params, SpatialEngineCfg(
+    n_shards=2, max_batch=2, page_size=16, n_pages_local=8,
+    hot_pages_local=12, eos_id=-1), SchedulerCfg(chunk_pages=2))
+done = sp_small.run([Request(rid=9, prompt=long_prompt, max_tokens=4)])
+assert len(done[9]) == 4 and all(0 <= t < cfg.vocab for t in done[9])
+
+print(f"SPATIAL_OK parity={len(want)} long_prompt={len(long_prompt)} "
+      f"shards=2")
