@@ -159,19 +159,24 @@ class PagedAllocator:
         """Choose <= ``width`` pages for the decode gather.
 
         Returns (phys, logical) int32 arrays of length ``width``, padded
-        with -1. Logical order is preserved (ascending positions) so the
-        gathered rows stay position-sorted.
+        with -1; ``logical`` values index into ``pages``. Logical order
+        is preserved (ascending positions) so the gathered rows stay
+        position-sorted. Entries with a negative id (the lazy-swap SHED
+        sentinel — content parked on the host) are never hot: the
+        selection runs over the resident pages only.
         """
         phys = np.full((width,), -1, np.int32)
         logical = np.full((width,), -1, np.int32)
-        n = len(pages)
+        present = np.asarray([j for j, pid in enumerate(pages) if pid >= 0],
+                             np.int32)
+        n = len(present)
         if n <= width:
-            phys[:n] = pages
-            logical[:n] = np.arange(n)
+            phys[:n] = [pages[j] for j in present]
+            logical[:n] = present
             return phys, logical
         recent = min(self.recent, width)
         n_cold = width - recent
-        cold_logical = np.arange(n - recent)
+        cold_logical = present[:n - recent]    # table idx of cold residents
         if scores is None:                     # no signal: keep newest pages
             keep_cold = cold_logical[len(cold_logical) - n_cold:]
         else:
@@ -179,7 +184,7 @@ class PagedAllocator:
             # stable top-k by DLZS page score, ties to the newest pages
             order = np.argsort(-s, kind="stable")[:n_cold]
             keep_cold = np.sort(cold_logical[order])
-        keep = np.concatenate([keep_cold, np.arange(n - recent, n)])
+        keep = np.concatenate([keep_cold, present[n - recent:]])
         phys[:len(keep)] = [pages[j] for j in keep]
         logical[:len(keep)] = keep
         return phys, logical

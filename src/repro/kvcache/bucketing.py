@@ -64,6 +64,64 @@ def bucket_count(n: int, *, pow2: bool = True, lo: int = 1) -> int:
     return p
 
 
+def budget_tokens(prefill_tokens: int, page_size: int,
+                  chunk_pages: int, *, pow2: bool = True) -> int:
+    """Fixed flat-buffer width of a batched chunk-prefill dispatch.
+
+    The buffer must be a whole number of pages (chunk K/V rows scatter
+    onto pool pages) and at least one chunk wide — the widest single
+    chunk is ``bucket_len(chunk_pages * page_size)``, which exceeds
+    ``chunk_pages * page_size`` itself when ``chunk_pages`` is not a
+    power of two (a bucketed final remainder can round past it). Fixing
+    the width here is what keeps the batched prefill at ONE compilation
+    regardless of how chunks pack each tick.
+    """
+    floor = bucket_len(chunk_pages * page_size, page_size, pow2=pow2)
+    width = -(-prefill_tokens // page_size) * page_size
+    return max(width, floor)
+
+
+def pack_budget(widths: list, budget: int) -> list[tuple]:
+    """Pack candidates' chunk widths into one dispatch token budget.
+
+    ``widths`` is ``[(key, [w0, w1, ...]), ...]`` in priority order,
+    each entry listing the candidate's REMAINING chunk widths (w0 next).
+    Returns ``[(key, n_chunks)]``: how many CONSECUTIVE chunks each
+    packed candidate advances this dispatch — consecutive chunks of one
+    sequence concatenate into one larger varlen span, so leftover budget
+    deepens sequences instead of going idle.
+
+    Two-stage policy: a strict-priority first sweep takes one chunk per
+    candidate in order, stopping at the first non-fit (nothing bypasses
+    a starved candidate — cross-tick aging handles its fairness); then
+    round-robin deepening sweeps hand every packed candidate one more
+    chunk while the budget lasts. The head candidate is always taken
+    even when its first chunk alone exceeds ``budget`` — the dispatch
+    buffer is sized to hold any single chunk (``budget_tokens``).
+    """
+    counts: dict = {}
+    used = 0
+    packed: list = []
+    for key, ws in widths:               # sweep 1: strict priority
+        if not ws:
+            continue
+        if packed and used + ws[0] > budget:
+            break
+        counts[key] = 1
+        used += ws[0]
+        packed.append((key, ws))
+    progress = True
+    while progress:                      # deepening: round-robin
+        progress = False
+        for key, ws in packed:
+            k = counts[key]
+            if k < len(ws) and used + ws[k] <= budget:
+                counts[key] = k + 1
+                used += ws[k]
+                progress = True
+    return [(key, counts[key]) for key, _ in packed]
+
+
 def chunk_spans(n_tokens: int, page_size: int,
                 chunk_pages: Optional[int], *, pow2: bool = True
                 ) -> list[tuple[int, int, int]]:

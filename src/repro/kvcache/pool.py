@@ -216,6 +216,17 @@ class SwapArea:
         self._swap_ins += 1
         return payload
 
+    def discard(self, rid: int) -> object:
+        """Drop an entry WITHOUT counting a swap-in: lazy-shed payloads
+        being merged into a full swap payload, or a finished sequence
+        whose shed pages are simply no longer needed. Returns the payload
+        (None when no entry exists)."""
+        if rid not in self._entries:
+            return None
+        payload, nbytes = self._entries.pop(rid)
+        self._bytes -= nbytes
+        return payload
+
     def __contains__(self, rid: int) -> bool:
         return rid in self._entries
 

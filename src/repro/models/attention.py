@@ -358,6 +358,134 @@ def apply_prefill_chunk(params, cfg: AttentionCfg, x, positions, cache,
     return out, chunk_cache
 
 
+def _batch_past_rows(cfg: AttentionCfg, cache, past_phys, past_lane,
+                     past_logical, past_len, dtype):
+    """Flatten the shared past-page ARENA into one row buffer.
+
+    The arena is one flat pool of ``Wp`` past-page slots shared by every
+    lane in the batch — each slot carries its owner lane id — so the KV
+    axis scales with the TOTAL past actually packed this dispatch, not
+    lanes x max-window. past_phys/past_lane/past_logical [Wp] (-1 pad);
+    past_len [S] per lane. Returns (k [1, Wp*page, nkv, d], v likewise,
+    seg [Wp*page], pos [Wp*page], ok [Wp*page]); queries match rows by
+    lane id, so one masked softmax covers every lane's own past.
+    """
+    page = cache["k"].shape[1]
+    wp = past_phys.shape[0]
+    safe = jnp.maximum(past_phys, 0)
+    kg = jnp.take(cache["k"], safe, axis=0)
+    vg = jnp.take(cache["v"], safe, axis=0)
+    sp = wp * page
+    kg = kg.reshape(1, sp, cfg.n_kv, cfg.head_dim).astype(dtype)
+    vg = vg.reshape(1, sp, cfg.n_kv, cfg.head_dim).astype(dtype)
+    pos = (past_logical[:, None] * page
+           + jnp.arange(page)[None, :]).reshape(sp)
+    seg = jnp.repeat(past_lane, page)
+    ok = (past_logical[:, None] >= 0).repeat(page, axis=1).reshape(sp)
+    ok = ok & (pos < past_len[jnp.maximum(seg, 0)])
+    return kg, vg, seg, pos, ok
+
+
+def apply_prefill_chunk_batch(params, cfg: AttentionCfg, x, positions,
+                              cache, pack_state):
+    """Prefill MANY sequences' chunks in one flat varlen dispatch.
+
+    x [1, B_tok, H] — every packed chunk's hidden states back to back
+    (padding between/after chunks is allowed); positions [1, B_tok] —
+    ABSOLUTE token positions (RoPE-exact against past pool rows);
+    cache k/v [P, page, nkv, dh] — pool slabs, read-only here.
+    ``pack_state``:
+      seg_ids [B_tok] — lane (batch-slot) index per flat token, -1 pad,
+      past_phys/past_lane/past_logical [Wp] — the shared past ARENA:
+        block-table rows of pages earlier chunks wrote, each slot tagged
+        with its owner lane (-1 = pad),
+      past_len [S] — tokens already cached per lane.
+
+    The mask composes three terms: lane match (a query only sees rows of
+    its own sequence), validity (padding rows/tokens see nothing), and
+    causality over absolute positions. Per-lane math is identical to
+    ``apply_prefill_chunk`` — the batched form just runs every lane's
+    gather+softmax inside one compiled program, which is what removes
+    the per-sequence dispatch overhead chunked prefill used to pay.
+    Returns (y [1, B_tok, H], chunk_cache [1, B_tok, nkv, dh] + LZ) —
+    the caller scatters the flat rows onto each lane's pool pages.
+    """
+    b, t, _ = x.shape
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    seg_q = pack_state["seg_ids"]
+    past_phys = pack_state["past_phys"]
+    past_lane = pack_state["past_lane"]
+    wp = past_phys.shape[0]
+    page = cache["k"].shape[1]
+    sp = wp * page
+    s_lanes = pack_state["past_len"].shape[0]
+
+    kg, vg, seg_p, pos_p, ok_p = _batch_past_rows(
+        cfg, cache, past_phys, past_lane, pack_state["past_logical"],
+        pack_state["past_len"], q.dtype)
+
+    k_all = jnp.concatenate([kg, k], axis=1)      # [1, Sp+B_tok, nkv, d]
+    v_all = jnp.concatenate([vg, v], axis=1)
+    kv_seg = jnp.concatenate([seg_p, seg_q])
+    kv_pos = jnp.concatenate([pos_p, positions[0]])
+    kv_ok = jnp.concatenate([ok_p, seg_q >= 0])
+
+    n_rep = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(b, t, cfg.n_kv, n_rep, cfg.head_dim)
+    sc = jnp.einsum("btgrd,bsgd->bgrts", qg, k_all).astype(jnp.float32)
+    sc = sc * scale
+    mask = (kv_ok & (kv_seg[None, :] == seg_q[:, None])
+            )[None, None, None] \
+        & (kv_pos[None, None, None, None, :]
+           <= positions[:, None, None, :, None])
+
+    if cfg.star is not None and cfg.chunk_sparse and wp > 0:
+        # Same DLZS sphere as apply_prefill_chunk, per lane: predicted
+        # scores of OTHER lanes' queries against an arena slot are
+        # already NEG_INF under the lane mask, so the per-slot max over
+        # all flat queries is exactly the owner lane's max; the sphere
+        # radius is then applied against a segmented per-lane row max.
+        if "k_lz" in cache:
+            khat = dlzs.lz_unpack(
+                jnp.take(cache["k_lz"], jnp.maximum(past_phys, 0),
+                         axis=0), q.dtype)
+            khat = khat.reshape(1, sp, cfg.n_kv, cfg.head_dim)
+        else:
+            khat = dlzs.pow2_quantize(kg)
+        s_hat = jnp.einsum("btgrd,bsgd->bgrts", qg, khat
+                           ).astype(jnp.float32) * scale
+        s_hat = jnp.where(mask[..., :sp], s_hat, NEG_INF)
+        page_max = s_hat.reshape(
+            b, cfg.n_kv, n_rep, t, wp, page
+        ).max(axis=(0, 1, 2, 3, 5))                    # [Wp]
+        lane_max = jnp.where(
+            past_lane[:, None] == jnp.arange(s_lanes)[None, :],
+            page_max[:, None], NEG_INF).max(axis=0)    # [S]
+        keep = page_max >= \
+            lane_max[jnp.maximum(past_lane, 0)] - cfg.star.radius
+        keep_rows = keep[:, None].repeat(page, axis=1).reshape(sp)
+        keep_all = jnp.concatenate([keep_rows, jnp.ones((t,), bool)])
+        mask = mask & keep_all[None, None, None, None, :]
+
+    sc = jnp.where(mask, sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bgrts,bsgd->btgrd", (p / l).astype(q.dtype), v_all)
+    y = o.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    out = jnp.einsum("bsnd,ndh->bsh", y, params["wo"])
+    out = shd(out, "batch", "act_seq", "embed")
+
+    chunk_cache = {"k": shd(k, "batch", "kv_seq", "kv_heads", "head_dim"),
+                   "v": shd(v, "batch", "kv_seq", "kv_heads", "head_dim")}
+    if cfg.lz_cache:
+        chunk_cache["k_lz"] = shd(dlzs.lz_pack(k),
+                                  "batch", "kv_seq", "kv_heads", "head_dim")
+    return out, chunk_cache
+
+
 def apply_decode_paged(params, cfg: AttentionCfg, x, cache, lengths,
                        page_state):
     """One-token decode against a paged pool. x [B,1,H];
@@ -534,6 +662,77 @@ def apply_prefill_chunk_spatial(params, cfg: AttentionCfg, x, positions,
     chunk_phys = page_state["chunk_phys"]           # [B, C // page]
     def put(pool, rows):
         rows = rows.reshape(b, c // page, page, *rows.shape[2:])
+        return pool.at[chunk_phys].set(rows.astype(pool.dtype))
+    new_cache = dict(cache, k=put(cache["k"], k), v=put(cache["v"], v))
+    if cfg.lz_cache and "k_lz" in cache:
+        new_cache["k_lz"] = put(cache["k_lz"], dlzs.lz_pack(k))
+    return out, new_cache
+
+
+def apply_prefill_chunk_batch_spatial(params, cfg: AttentionCfg, x,
+                                      positions, cache, page_state,
+                                      axis: str):
+    """Batched varlen chunk prefill, one shard's view (inside shard_map).
+
+    The flat chunk buffer (see ``apply_prefill_chunk_batch``) is
+    replicated; each shard computes a partial (m, l, o) of EVERY lane's
+    chunk queries against its local slice of that lane's past pages, the
+    partials merge across ``axis`` (pmax/psum — exact), and the flat
+    segment-masked causal self block is added locally (identical on
+    every shard, merged exactly once). Fresh K/V rows scatter into the
+    pages this shard owns via ``page_state["chunk_phys"]``
+    [1, B_tok // page] (SCRATCH for pages owned elsewhere) — so many
+    sequences' chunks advance in ONE SPMD dispatch.
+    """
+    b, t, _ = x.shape
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    page = cache["k"].shape[1]
+    n_rep = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(b, t, cfg.n_kv, n_rep, cfg.head_dim)
+    seg_q = page_state["seg_ids"]
+
+    # partial stats vs this shard's arena slice of every lane's past
+    kg, vg, seg_p, pos_p, ok_p = _batch_past_rows(
+        cfg, cache, page_state["past_phys"], page_state["past_lane"],
+        page_state["past_logical"], page_state["past_len"], q.dtype)
+    sc_p = jnp.einsum("btgrd,bsgd->bgrts", qg, kg).astype(jnp.float32)
+    sc_p = sc_p * scale
+    mask_p = (ok_p & (seg_p[None, :] == seg_q[:, None])
+              )[None, None, None] \
+        & (pos_p[None, None, None, None, :]
+           <= positions[:, None, None, :, None])
+    sc_p = jnp.where(mask_p, sc_p, NEG_INF)
+    m1 = sc_p.max(axis=-1)                          # [1, G, R, B_tok]
+    p1 = jnp.exp(sc_p - m1[..., None])
+    p1 = jnp.where(sc_p <= NEG_INF / 2, 0.0, p1)
+    l1 = p1.sum(axis=-1)
+    o1 = jnp.einsum("bgrts,bsgd->bgrtd", p1, vg.astype(jnp.float32))
+    m1, l1, o1 = _psum_merge_stats(m1, l1, o1, axis)
+
+    # flat causal self block, lane-masked (replicated compute)
+    sc_c = jnp.einsum("btgrd,bsgd->bgrts", qg, k).astype(jnp.float32)
+    sc_c = sc_c * scale
+    mask_c = ((seg_q >= 0) & (seg_q[None, :] == seg_q[:, None])
+              )[None, None, None] \
+        & (positions[:, None, None, None, :]
+           <= positions[:, None, None, :, None])
+    sc_c = jnp.where(mask_c, sc_c, NEG_INF)
+    m2 = sc_c.max(axis=-1)
+    p2 = jnp.exp(sc_c - m2[..., None])
+    p2 = jnp.where(sc_c <= NEG_INF / 2, 0.0, p2)
+    l2 = p2.sum(axis=-1)
+    o2 = jnp.einsum("bgrts,bsgd->bgrtd", p2, v.astype(jnp.float32))
+
+    m, l, o = _merge_two_stats(m1, l1, o1, m2, l2, o2)
+    o = o / jnp.maximum(l, 1e-30)[..., None]        # [1, G, R, B_tok, d]
+    y = jnp.moveaxis(o, 3, 1).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    out = jnp.einsum("bsnd,ndh->bsh", y.astype(x.dtype), params["wo"])
+    out = shd(out, "batch", "act_seq", "embed")
+
+    chunk_phys = page_state["chunk_phys"]           # [1, B_tok // page]
+    def put(pool, rows):
+        rows = rows.reshape(b, t // page, page, *rows.shape[2:])
         return pool.at[chunk_phys].set(rows.astype(pool.dtype))
     new_cache = dict(cache, k=put(cache["k"], k), v=put(cache["v"], v))
     if cfg.lz_cache and "k_lz" in cache:

@@ -167,7 +167,17 @@ def _block_apply(params, cfg: ModelCfg, blk: BlockCfg, x, positions, *,
     acfg = cfg.attn_cfg(mode, causal)
     new_cache = {}
     if blk.kind == "attn":
-        if mode == "prefill_chunk" and spatial_axis is not None:
+        if mode == "prefill_chunk_batch" and spatial_axis is not None:
+            y, c = attention.apply_prefill_chunk_batch_spatial(
+                params["core"], acfg, h, positions, cache["attn"],
+                page_state, spatial_axis)
+            new_cache["attn"] = c
+        elif mode == "prefill_chunk_batch":
+            y, c = attention.apply_prefill_chunk_batch(
+                params["core"], acfg, h, positions, cache["attn"],
+                page_state)
+            new_cache["attn"] = c
+        elif mode == "prefill_chunk" and spatial_axis is not None:
             y, c = attention.apply_prefill_chunk_spatial(
                 params["core"], acfg, h, positions, cache["attn"],
                 page_state, spatial_axis)
@@ -505,6 +515,93 @@ def prefill_chunk_paged(params, cfg: ModelCfg, batch, cache, chunk_state):
         axis=1)
     logits = _logits(params, cfg, x_last)
     return logits[:, 0], {"layers": chunk_caches}
+
+
+def prefill_chunk_batch_paged(params, cfg: ModelCfg, batch, cache,
+                              pack_state):
+    """Prefill MANY sequences' chunks as ONE flat varlen dispatch.
+
+    batch["tokens"] [1, B_tok] — every packed chunk back to back in a
+    fixed-width buffer (the scheduler's per-tick token budget; padding
+    lanes/tails carry seg_id -1); ``cache["layers"]`` — pool slabs, read
+    only; ``pack_state``:
+      seg_ids [B_tok] — batch-slot lane per flat token (-1 = pad),
+      positions [B_tok] — absolute token positions (RoPE-exact),
+      past_phys/past_lane/past_logical [Wp] — the shared past-page
+        ARENA: block-table rows of pages earlier chunks wrote, each slot
+        tagged with its owner lane (-1 = pad; fixed Wp sized to TOTAL
+        past, so the batched path compiles ONCE and the KV axis does not
+        scale with lanes x max-window),
+      past_len [S] — tokens already cached per lane,
+      last_index [S] — FLAT index of each lane's last real token (its
+        logits row; only meaningful on a lane's final chunk).
+
+    Returns (logits [S, vocab_padded], chunk_caches [L, 1, B_tok, ...])
+    — the engine scatters the flat rows onto each lane's pool pages,
+    exactly like the per-sequence chunk path but for the whole batch at
+    once. All shapes depend only on (B_tok, S, Wp), never on the mix of
+    chunks packed, so there is exactly one prefill compilation.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    positions = pack_state["positions"][None, :]
+    x, chunk_caches, _ = _run_stack(
+        params["blocks"], cfg, cfg.pattern, x, positions,
+        mode="prefill_chunk_batch", causal=cfg.causal,
+        caches=cache["layers"], page_state=pack_state)
+    x_last = jnp.take(x[0], pack_state["last_index"].astype(jnp.int32),
+                      axis=0)[None]
+    logits = _logits(params, cfg, x_last)
+    return logits[0], {"layers": chunk_caches}
+
+
+def prefill_chunk_batch_spatial(params, cfg: ModelCfg, batch, cache,
+                                pack_state, *, mesh, axis: str = "shards"):
+    """Batched varlen chunk prefill across a device mesh: one shard_map
+    dispatch advances MANY sequence-sharded prompts by one chunk each.
+
+    Same flat layout as ``prefill_chunk_batch_paged``; the per-shard
+    leaves are stacked on axis 0 and sharded over ``axis``:
+      past_phys/past_lane/past_logical [n_shards, Wp] — each shard's
+        slice of the past-page arena (shard-LOCAL physical ids, owner
+        lane tags, GLOBAL logical page indices),
+      chunk_phys [n_shards, 1, B_tok // page] — local scatter targets
+        for the flat buffer's pages (SCRATCH off the owner shard);
+    seg_ids/positions/past_len/last_index are replicated. Every shard
+    computes partial (m, l, o) states of ALL lanes' chunk queries
+    against its local past pages; the merge is the same pmax/psum tree
+    as the per-sequence spatial path (see attention).
+    """
+    from repro.shardlib import shard_map
+
+    shard_spec, rep_spec = _spatial_specs(mesh, axis)
+    sharded = {"past_phys", "past_lane", "past_logical", "chunk_phys"}
+    ps_specs = {k: shard_spec if k in sharded else rep_spec
+                for k in pack_state}
+
+    def local_fn(p, toks, layers, ps):
+        layers = jax.tree.map(lambda leaf: leaf[0], layers)
+        ps = {k: (v[0] if k in sharded else v) for k, v in ps.items()}
+        x = _embed_inputs(p, cfg, {"tokens": toks})
+        positions = ps["positions"][None, :]
+        x, new_layers, _ = _run_stack(
+            p["blocks"], cfg, cfg.pattern, x, positions,
+            mode="prefill_chunk_batch", causal=cfg.causal, caches=layers,
+            page_state=ps, spatial_axis=axis)
+        x_last = jnp.take(x[0], ps["last_index"].astype(jnp.int32),
+                          axis=0)[None]
+        logits = _logits(p, cfg, x_last)[0]
+        return logits, jax.tree.map(lambda leaf: leaf[None], new_layers)
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: rep_spec, params), rep_spec,
+                  jax.tree.map(lambda _: shard_spec, cache["layers"]),
+                  ps_specs),
+        out_specs=(rep_spec,
+                   jax.tree.map(lambda _: shard_spec, cache["layers"])))
+    logits, new_layers = fn(params, batch["tokens"], cache["layers"],
+                            pack_state)
+    return logits, {"layers": new_layers}
 
 
 def decode_step(params, cfg: ModelCfg, tokens, cache):

@@ -35,8 +35,12 @@ the scheduler drives:
 Single-step flow (``step()`` = one scheduler tick):
   admit   — swap preempted sequences back in, bind waiting requests to
             free slots (no page allocation yet)
-  prefill — advance up to ``prefill_per_step`` prompts by one chunk:
-            share/allocate the chunk's pages, compute, scatter into pool
+  prefill — with a ``SchedulerCfg.prefill_tokens`` budget: pack chunks
+            of EVERY prefilling prompt (consecutive chunks merge) into
+            ONE batched varlen dispatch (``exec_prefill_chunk_batch``);
+            legacy path: up to ``prefill_per_step`` one-sequence chunk
+            dispatches. Either way: share/allocate the chunk's pages,
+            compute, scatter into pool
   decode  — ensure tail pages (COW guard), select hot pages, fused decode;
             finished sequences are reaped and their pages released
 """
@@ -54,8 +58,10 @@ import numpy as np
 from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
                            SwapArea, bucketing, metrics)
 from repro.models import lm
+from repro.serving import swap_policy
 from repro.serving.engine import Request
 from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
+from repro.serving.swap_policy import PrefillProgress as _PrefillProgress
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,20 +76,13 @@ class PagedEngineCfg:
     temperature: float = 1.0
     bucket_pow2: bool = True     # prompt buckets: pow2 page counts
     share_prefixes: bool = True
-
-
-@dataclasses.dataclass
-class _PrefillProgress:
-    """Host-side cursor of a partially prefilled prompt."""
-    prompt: np.ndarray           # effective prompt (original + replayed)
-    toks: Optional[tuple]        # same tokens as int tuple — built once,
-    #                              reused for every chunk's prefix-index
-    #                              key; None when prefix sharing is off
-    spans: list                  # bucketing.chunk_spans output
-    chunk: int                   # next span index to run
-    sharing: bool                # prefix-share state carried across chunks
-    suppress_first: bool         # recompute resume: the final chunk's
-    #                              sampled token was already emitted
+    batch_past_pages: Optional[int] = None
+    # Past-page gather width of the BATCHED chunk-prefill dispatch
+    # (SchedulerCfg.prefill_tokens). Fixed at init so the batched prefill
+    # compiles exactly once; None sizes it to the whole pool (always
+    # safe). Set it to the largest prompt page count you actually serve
+    # to shrink the per-dispatch gather — submit() rejects requests that
+    # could not fit the window.
 
 
 class PagedServingEngine:
@@ -126,9 +125,24 @@ class PagedServingEngine:
         self.lengths = np.zeros((pcfg.max_batch,), np.int64)
         self.free = list(range(pcfg.max_batch))
 
+        # batched varlen chunk prefill: fixed flat-buffer width + fixed
+        # past-gather window => exactly one prefill compilation
+        scfg_live = self.sched.cfg
+        self._batched = (scfg_live.prefill_tokens is not None
+                         and scfg_live.chunk_pages is not None)
+        if self._batched:
+            self._budget_tokens = bucketing.budget_tokens(
+                scfg_live.prefill_tokens, pcfg.page_size,
+                scfg_live.chunk_pages, pow2=pcfg.bucket_pow2)
+            self._batch_wp = bucketing.bucket_count(
+                pcfg.batch_past_pages or pcfg.n_pages - 1,
+                pow2=pcfg.bucket_pow2)
+
         self._prefill = jax.jit(functools.partial(self._prefill_fn))
         self._prefill_chunk = jax.jit(functools.partial(
             self._prefill_chunk_fn))
+        self._prefill_chunk_batch = jax.jit(functools.partial(
+            self._prefill_chunk_batch_fn))
         # donate the cache/pool slabs: these updates would otherwise keep
         # two full copies of the page pool live per step (no-op on CPU,
         # which lacks donation — load-bearing on TPU)
@@ -163,6 +177,10 @@ class PagedServingEngine:
     def _prefill_chunk_fn(self, params, batch, cache, chunk_state):
         return lm.prefill_chunk_paged(params, self.cfg, batch, cache,
                                       chunk_state)
+
+    def _prefill_chunk_batch_fn(self, params, batch, cache, pack_state):
+        return lm.prefill_chunk_batch_paged(params, self.cfg, batch, cache,
+                                            pack_state)
 
     def _decode_fn(self, params, tokens, cache, page_state):
         return lm.decode_step_paged(params, self.cfg, tokens, cache,
@@ -211,6 +229,11 @@ class PagedServingEngine:
             raise ValueError(
                 f"request {req.rid}: {total} tokens needs {need} pages; "
                 f"pool holds {self.pool.n_pages - 1}")
+        if self._batched and need - 1 > self._batch_wp:
+            raise ValueError(
+                f"request {req.rid}: {need} pages exceeds the batched "
+                f"chunk-prefill past window ({self._batch_wp} pages); "
+                f"raise PagedEngineCfg.batch_past_pages")
         req.out = []
         self.sched.submit(req)
 
@@ -261,11 +284,11 @@ class PagedServingEngine:
 
     def held_pages(self, slot: int, shard=None) -> int:
         """Pages preempting this slot would actually FREE: prefix-shared
-        pages (ref > 1) survive a victim's release, so a slot whose table
-        is all shared hits is as useless a victim as an empty one.
-        ``shard`` is ignored — this engine runs one pool."""
+        pages (ref > 1) survive a victim's release, and lazily-shed
+        entries (negative sentinel) already left the device. ``shard`` is
+        ignored — this engine runs one pool."""
         return sum(1 for pid in self.tables.get(slot, ())
-                   if self.pool.ref(pid) == 1)
+                   if pid >= 0 and self.pool.ref(pid) == 1)
 
     # -- executor protocol: chunked prefill ---------------------------------
 
@@ -352,6 +375,219 @@ class PagedServingEngine:
             self._prefill_done.append((slot, req))
         return True
 
+    # -- executor protocol: batched varlen chunk prefill --------------------
+
+    def pending_chunk_widths(self, slot: int) -> list[int]:
+        pf = self._pf[slot]
+        return [w for _, _, w in pf.spans[pf.chunk:]]
+
+    @staticmethod
+    def _merged_span(pf, n: int) -> tuple[int, int, int]:
+        """Span covering the next ``n`` CONSECUTIVE chunks as one varlen
+        piece: non-final chunks are exactly full, so only the tail can
+        pad — merged chunks behave exactly like one larger chunk."""
+        start = pf.spans[pf.chunk][0]
+        end = pf.spans[pf.chunk + n - 1][1]
+        width = sum(w for _, _, w in pf.spans[pf.chunk:pf.chunk + n])
+        return start, end, width
+
+    def exec_prefill_chunk_batch(self, batch: list[tuple[int, int]]
+                                 ) -> list[int]:
+        """Advance every ``(slot, n_chunks)`` entry in ONE compiled
+        varlen dispatch over a fixed ``[1, budget_tokens]`` flat buffer.
+
+        Three phases: (A) allocate each slot's merged-span pages —
+        idempotent via ``pf.pending``, so a NeedPages retry after
+        preemption reuses what already succeeded; (A2) same-tick prefix
+        dedup; (B) pack the spans back to back into the flat buffer
+        (segment ids, absolute positions, and the shared past-page ARENA
+        tagged by owner lane) and dispatch — fully prefix-shared
+        non-final spans need no lanes at all; (C) commit: extend tables,
+        register fresh prompt pages, advance cursors, emit first tokens
+        for completed prompts. Nothing commits before the dispatch
+        succeeds, so a phase-A NeedPages leaves every cursor untouched.
+        In the rare case the packed spans' pasts overflow the fixed
+        arena, phase B splits into several same-shape waves (still one
+        compilation). Returns the slots entering decode."""
+        page = self.pcfg.page_size
+        for slot, n in batch:                  # phase A: allocation
+            pf = self._pf[slot]
+            if pf.pending is not None:
+                continue
+            n = max(1, min(n, len(pf.spans) - pf.chunk))
+            start, end, _ = self._merged_span(pf, n)
+            n_need = -(-end // page) - start // page
+            scores = (self._pull_scores()
+                      if self.pool.free_pages() < n_need else None)
+            try:
+                pages, fresh, _, sharing = self.alloc.admit_chunk(
+                    pf.toks if pf.toks is not None else pf.prompt,
+                    start // page, n_need, scores, sharing=pf.sharing)
+            except PoolExhausted:
+                raise NeedPages(slot) from None
+            pf.sharing = sharing
+            pf.pending = (pages, fresh, n)
+
+        # Phase A2 — same-tick prefix dedup. Batched admission runs many
+        # same-prefix prompts' chunks in ONE tick, so the ordinary
+        # register-after-compute flow would never let them share (each
+        # allocates before any registers). Once every allocation above
+        # succeeded nothing can raise before the dispatch commits, so it
+        # is safe to register fresh full prompt pages NOW and point later
+        # slots in the batch at them — the owning lane's scatter writes
+        # the content within this same dispatch.
+        slots = [s for s, _ in batch]
+        if self._share:
+            for slot in slots:
+                pf = self._pf[slot]
+                if pf.toks is None:
+                    continue
+                pages, fresh, n = pf.pending
+                start_page = pf.spans[pf.chunk][0] // page
+                fresh_set = set(fresh)
+                new_fresh = []
+                for i, pid in enumerate(pages):
+                    if pid not in fresh_set:
+                        continue
+                    end = (start_page + i + 1) * page
+                    if end > len(pf.toks):
+                        new_fresh.append(pid)
+                        continue
+                    hit = self.pool.lookup(pf.toks[:end])
+                    if hit is not None:        # an earlier lane owns it
+                        self.pool.decref(pid)
+                        pages[i] = hit
+                    else:
+                        self.pool.register(pf.toks[:end], pid)
+                        new_fresh.append(pid)
+                pf.pending = (pages, new_fresh, n)
+
+        def is_last(slot):
+            pf = self._pf[slot]
+            return pf.chunk + pf.pending[2] == len(pf.spans)
+
+        compute = [s for s in slots
+                   if self._pf[s].pending[1] or is_last(s)]
+
+        # wave split: spans whose combined past pages (or tokens, after a
+        # pressure retry reshuffled the batch) overflow the fixed buffers
+        # spill to a follow-up dispatch of the SAME compiled shape
+        waves: list[list[int]] = []
+        cur: list[int] = []
+        cur_p = cur_t = 0
+        for slot in compute:
+            pf = self._pf[slot]
+            start, _, width = self._merged_span(pf, pf.pending[2])
+            sp = start // page
+            if cur and (cur_p + sp > self._batch_wp
+                        or cur_t + width > self._budget_tokens):
+                waves.append(cur)
+                cur, cur_p, cur_t = [], 0, 0
+            cur.append(slot)
+            cur_p += sp
+            cur_t += width
+        if cur:
+            waves.append(cur)
+
+        logits_by_slot: dict[int, np.ndarray] = {}
+        for wave in waves:                     # phase B: dispatch(es)
+            self._dispatch_chunk_wave(wave, logits_by_slot)
+
+        done = []
+        for slot in slots:                     # phase C: commit
+            pf = self._pf[slot]
+            pages, fresh, n = pf.pending
+            self.tables[slot].extend(pages)
+            # prefix registration already happened in phase A2 — the
+            # sole registration point, which is what makes same-tick
+            # sharing safe (content lands via this dispatch's scatter)
+            pf.pending = None
+            pf.chunk += n
+            if pf.chunk < len(pf.spans):
+                continue
+            req = self.active[slot]
+            if pf.suppress_first:
+                tok = int(req.out[-1])
+            else:
+                tok = int(np.argmax(
+                    logits_by_slot[slot][:self.cfg.vocab]))
+                req.out.append(tok)
+            del self._pf[slot]
+            self.lengths[slot] = len(pf.prompt)
+            self.last_token = self.last_token.at[slot, 0].set(tok)
+            self.budget[slot] = req.max_tokens - len(req.out)
+            done.append(slot)
+            if self.budget[slot] <= 0:     # done at prefill (max_tokens=1)
+                self.alloc.release(self.tables.pop(slot))
+                del self.active[slot]
+                del self.budget[slot]
+                self.lengths[slot] = 0
+                self.free.append(slot)
+                self._prefill_done.append((slot, req))
+        return done
+
+    def _dispatch_chunk_wave(self, wave: list[int],
+                             logits_by_slot: dict) -> None:
+        """Pack one wave of merged spans into the flat buffer + past
+        arena and run the single compiled dispatch + pool scatter."""
+        page = self.pcfg.page_size
+        b_tok, wp, lanes = self._budget_tokens, self._batch_wp, \
+            self.pcfg.max_batch
+        flat = np.zeros((b_tok,), np.int32)
+        seg = np.full((b_tok,), -1, np.int32)
+        pos = np.zeros((b_tok,), np.int32)
+        phys_sc = np.full((b_tok // page,), SCRATCH, np.int32)
+        past_phys = np.full((wp,), -1, np.int32)
+        past_lane = np.full((wp,), -1, np.int32)
+        past_logical = np.full((wp,), -1, np.int32)
+        past_len = np.zeros((lanes,), np.int32)
+        last_index = np.zeros((lanes,), np.int32)
+        cursor = 0
+        arena = 0
+        for slot in wave:
+            pf = self._pf[slot]
+            pages, fresh, n = pf.pending
+            start, end, width = self._merged_span(pf, n)
+            start_page = start // page
+            last = pf.chunk + n == len(pf.spans)
+            t = len(pf.prompt)
+            flat[cursor:cursor + width] = bucketing.pad_tokens(
+                pf.prompt[start:end], width)
+            seg[cursor:cursor + width] = slot
+            pos[cursor:cursor + width] = start + np.arange(width)
+            last_index[slot] = cursor + (t - 1 if last else end - 1) \
+                - start
+            past_len[slot] = start
+            table = self.tables[slot]
+            past_phys[arena:arena + start_page] = table[:start_page]
+            past_lane[arena:arena + start_page] = slot
+            past_logical[arena:arena + start_page] = \
+                np.arange(start_page)
+            arena += start_page
+            fresh_set = set(fresh)
+            base = cursor // page
+            for j, pid in enumerate(pages):
+                if pid in fresh_set:
+                    phys_sc[base + j] = pid
+            cursor += width
+        pack_state = {
+            "seg_ids": jnp.asarray(seg),
+            "positions": jnp.asarray(pos),
+            "past_phys": jnp.asarray(past_phys),
+            "past_lane": jnp.asarray(past_lane),
+            "past_logical": jnp.asarray(past_logical),
+            "past_len": jnp.asarray(past_len),
+            "last_index": jnp.asarray(last_index)}
+        logits, cache_flat = self._prefill_chunk_batch(
+            self.params, {"tokens": jnp.asarray(flat)[None, :]},
+            {"layers": self.cache["layers"]}, pack_state)
+        self.cache["layers"] = self._scatter(
+            self.cache["layers"], cache_flat["layers"],
+            jnp.asarray(phys_sc))
+        logits_host = np.asarray(logits)
+        for slot in wave:
+            logits_by_slot[slot] = logits_host[slot]
+
     # -- executor protocol: decode ------------------------------------------
 
     def _decode_slots(self) -> list[int]:
@@ -433,7 +669,9 @@ class PagedServingEngine:
                     or (limit is not None
                         and self.lengths[slot] + 1 >= limit))
             if done:
-                self.alloc.release(self.tables.pop(slot))
+                self.alloc.release([pid for pid in self.tables.pop(slot)
+                                    if pid >= 0])
+                self.swap_area.discard(req.rid)   # lazily-shed pages
                 del self.active[slot]
                 del self.budget[slot]
                 self.lengths[slot] = 0
@@ -443,70 +681,104 @@ class PagedServingEngine:
 
     # -- executor protocol: preemption / swap -------------------------------
 
+    def _gather_park(self, pids: list[int]):
+        """Pull pages ``pids`` to the host. The gather width is
+        pow2-bucketed for jit-shape stability, but only the real pages
+        are kept — padding would inflate host swap bytes (and the
+        reported swap pressure)."""
+        phys = np.full(
+            (bucketing.bucket_count(len(pids),
+                                    pow2=self.pcfg.bucket_pow2),),
+            SCRATCH, np.int32)
+        phys[:len(pids)] = pids
+        rows = self._gather_pages(self.cache["layers"], jnp.asarray(phys))
+        return jax.tree.map(
+            lambda r: np.ascontiguousarray(np.asarray(r)[:, :len(pids)]),
+            rows)
+
+    @staticmethod
+    def _concat_rows(a, b):
+        """Join two host row trees along the page axis (payload merge)."""
+        return jax.tree.map(
+            lambda x, y: np.concatenate([x, y], axis=1), a, b)
+
+    def exec_shed_cold(self, slot: int, shard=None) -> int:
+        """Lazy swap: park the slot's DLZS-cold uniquely-owned pages on
+        the host while it KEEPS decoding. Only pages outside both the
+        recent window and the current hot-page selection are shed — pages
+        the decode gather was already skipping — so the victim's hot-set
+        output is unchanged; the pool just gets its cold pages back.
+        Table entries become the SHED sentinel; a later full preemption
+        merges the shed payload into the ordinary swap payload. Returns
+        pages freed (0: mid-prefill, or nothing sheddable)."""
+        if slot in self._pf or slot not in self.tables:
+            return 0                 # prefill still reads its past pages
+        table = self.tables[slot]
+        scores = self._pull_scores()
+        _, hot_logical = self.alloc.select_hot(table, self.pcfg.hot_pages,
+                                               scores)
+        cands = swap_policy.shed_candidates(
+            table, hot_logical, int(self.lengths[slot]),
+            self.pcfg.page_size, lambda j: self.pool.ref(table[j]),
+            keep_recent=self.alloc.recent)
+        if not cands:
+            return 0
+        req = self.active[slot]
+        host = self._gather_park([table[j] for j in cands])
+        state = swap_policy.merge_shed(
+            {"rows": host, "park": list(cands)},
+            self.swap_area.discard(req.rid), self._concat_rows)
+        self.swap_area.put(req.rid, state, sum(
+            leaf.nbytes for leaf in jax.tree.leaves(state["rows"])))
+        for j in cands:
+            self.pool.decref(table[j])
+            table[j] = swap_policy.SHED
+        return len(cands)
+
     def exec_preempt(self, slot: int, swap: bool) -> bool:
         """Evict ``slot``. swap=True parks its page contents in the host
         SwapArea (resume = page-in); otherwise pages are dropped and the
         sequence recomputes from prompt + emitted tokens on re-admission.
 
-        Shared-prefix-aware parking: only uniquely-owned (ref-1) pages are
-        gathered to the host. A page some other sequence also references
-        keeps OUR reference while swapped — its content cannot be freed or
-        rewritten underneath us, so resume reuses the same physical page
-        with zero upload. Repeated preempt/resume of same-prefix traffic
-        therefore no longer duplicates the shared prefix (neither in host
-        swap bytes nor, after page-in, in pool pages)."""
+        Shared-prefix-aware parking (swap_policy core): only uniquely-
+        owned (ref-1) pages are gathered to the host. A page some other
+        sequence also references keeps OUR reference while swapped — its
+        content cannot be freed or rewritten underneath us, so resume
+        reuses the same physical page with zero upload. Pages a lazy
+        shed already parked merge into the payload."""
         req = self.active.pop(slot)
         table = self.tables.pop(slot)
         pf = self._pf.pop(slot, None)
+        swap_policy.release_pending(pf, self.alloc.release)
         swapped = False
         if swap and table:
-            kept = [(j, pid) for j, pid in enumerate(table)
-                    if self.pool.ref(pid) > 1]
-            park = [j for j, pid in enumerate(table)
-                    if self.pool.ref(pid) == 1]
-            host = None
-            if park:
-                # gather BEFORE decref: page content is only guaranteed
-                # until the ids return to the free list. The gather width
-                # is pow2-bucketed for jit-shape stability, but only the
-                # real pages are parked — padding would inflate host swap
-                # bytes (and the reported swap pressure).
-                phys = np.full(
-                    (bucketing.bucket_count(len(park),
-                                            pow2=self.pcfg.bucket_pow2),),
-                    SCRATCH, np.int32)
-                phys[:len(park)] = [table[j] for j in park]
-                rows = self._gather_pages(self.cache["layers"],
-                                          jnp.asarray(phys))
-                host = jax.tree.map(lambda r: np.asarray(r)[:, :len(park)],
-                                    rows)
-            nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(host)) \
-                if host is not None else 0
-            # key tokens for the prefix re-lookup at page-in: the effective
-            # prompt mid-prefill; in decode, conservatively the original
-            # prompt (its pages are the ones same-prefix traffic shares)
-            toks = pf.toks if pf is not None else (
-                tuple(int(x) for x in req.prompt) if self._share else None)
-            state = {"rows": host, "park": park, "kept": kept,
-                     "n_pages": len(table), "lookup_toks": toks}
-            if pf is not None:
-                state.update(kind="prefill", prompt=pf.prompt,
-                             toks=pf.toks, spans=pf.spans, chunk=pf.chunk,
-                             sharing=pf.sharing,
-                             suppress_first=pf.suppress_first)
-            else:
-                state.update(kind="decode",
-                             length=int(self.lengths[slot]),
-                             last_token=int(np.asarray(
-                                 self.last_token[slot, 0])),
-                             budget=self.budget[slot])
+            kept, park, shed = swap_policy.partition_table(
+                table, lambda j: self.pool.ref(table[j]))
+            # gather BEFORE decref: page content is only guaranteed
+            # until the ids return to the free list
+            host = self._gather_park([table[j] for j in park]) \
+                if park else None
+            state = swap_policy.progress_state(
+                req, pf, share=self._share,
+                length=int(self.lengths[slot]),
+                last_token=int(np.asarray(self.last_token[slot, 0])),
+                budget=self.budget.get(slot, 0))
+            state.update(rows=host, park=park, kept=kept,
+                         n_pages=len(table))
+            state = swap_policy.merge_shed(
+                state, self.swap_area.discard(req.rid) if shed else None,
+                self._concat_rows)
+            nbytes = sum(leaf.nbytes
+                         for leaf in jax.tree.leaves(state["rows"])) \
+                if state["rows"] is not None else 0
             self.swap_area.put(req.rid, state, nbytes)
             # release ONLY the parked pages; kept (shared) pages retain
             # this sequence's reference until it resumes
             self.alloc.release([table[j] for j in park])
             swapped = True
         else:
-            self.alloc.release(table)
+            self.swap_area.discard(req.rid)    # stale lazy-shed payload
+            self.alloc.release([pid for pid in table if pid >= 0])
         self.budget.pop(slot, None)
         self.lengths[slot] = 0
         self.free.append(slot)
@@ -520,7 +792,8 @@ class PagedServingEngine:
         Parked full-prompt pages first retry the prefix index — if an
         identical prefix is pooled (often our own parked copy, cached at
         release), the page revives with no upload; only genuine misses
-        allocate a fresh page and upload the parked rows."""
+        allocate a fresh page and upload the parked rows
+        (swap_policy.plan_page_in, rollback on exhaustion)."""
         state = self.swap_area.peek(req.rid)
         park = state["park"]
         # conservative: lookups below can only reduce the real need
@@ -528,26 +801,14 @@ class PagedServingEngine:
             return None
         scores = (self._pull_scores()
                   if self.pool.free_pages() < len(park) else None)
-        toks = state["lookup_toks"]
-        page = self.pcfg.page_size
-        filled: dict[int, int] = {}       # table idx -> phys
-        upload: list[tuple[int, int]] = []  # (park position, phys)
-        taken: list[int] = []
-        try:
-            for pos, j in enumerate(park):
-                hit = None
-                end = (j + 1) * page
-                if toks is not None and end <= len(toks):
-                    hit = self.pool.lookup(toks[:end])
-                if hit is None:
-                    hit = self.alloc.extend(scores)
-                    upload.append((pos, hit))
-                filled[j] = hit
-                taken.append(hit)
-        except PoolExhausted:      # defensive: roll back, entry stays put
-            for pid in taken:
-                self.pool.decref(pid)
+        plan = swap_policy.plan_page_in(
+            park, state["lookup_toks"], self.pcfg.page_size,
+            lookup=lambda j, key: self.pool.lookup(key),
+            extend=lambda j: self.alloc.extend(scores),
+            rollback=lambda j, pid: self.pool.decref(pid))
+        if plan is None:           # defensive: entry stays put, retry later
             return None
+        filled, upload = plan
         state = self.swap_area.take(req.rid)   # committed: pages acquired
         slot = self.free.pop(0)
         for j, pid in state["kept"]:
@@ -568,12 +829,9 @@ class PagedServingEngine:
                 jax.tree.map(sub_rows, state["rows"]), jnp.asarray(phys))
         self.tables[slot] = pages
         self.active[slot] = req
-        if state["kind"] == "prefill":
-            self._pf[slot] = _PrefillProgress(
-                prompt=state["prompt"], toks=state["toks"],
-                spans=state["spans"], chunk=state["chunk"],
-                sharing=state["sharing"],
-                suppress_first=state["suppress_first"])
+        pf = swap_policy.restore_progress(state)
+        if pf is not None:
+            self._pf[slot] = pf
             self.lengths[slot] = 0
         else:
             self.lengths[slot] = state["length"]
@@ -614,4 +872,5 @@ class PagedServingEngine:
             "working_set_bytes": pool.peak_live * per_page,
             "slab_bytes": metrics.tree_bytes(self.cache["layers"]),
             "decode_compiles": self._decode._cache_size(),
+            "prefill_batch_compiles": self._prefill_chunk_batch._cache_size(),
         }

@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Protocol
 
+from repro.kvcache.bucketing import pack_budget
 from repro.serving.engine import Request
 
 
@@ -80,9 +81,25 @@ class SchedulerCfg:
     chunk_pages: Optional[int] = 4   # prefill chunk size in pages
     #                                  (None = monolithic, the pre-chunking
     #                                  behavior: one prefill per prompt)
-    prefill_per_step: int = 1        # prefill chunks advanced per tick
+    prefill_tokens: Optional[int] = None
+    # Per-tick prefill TOKEN budget: each tick packs the next chunk of as
+    # many prefilling sequences as fit (padded widths, SJF+aging order)
+    # and advances them all in ONE batched varlen dispatch
+    # (``exec_prefill_chunk_batch``). This replaces the per-SEQUENCE
+    # ``prefill_per_step`` counter as the throughput knob — one dispatch
+    # per tick regardless of how many prompts are mid-prefill, which is
+    # what closes the chunked-vs-monolithic gap. None (or monolithic
+    # chunk_pages=None) keeps the legacy one-dispatch-per-sequence path.
+    prefill_per_step: int = 1        # LEGACY path only: prefill chunks
+    #                                  advanced per tick when no token
+    #                                  budget is set
     swap: bool = True                # preempt via host swap (False: drop
     #                                  pages, recompute from prompt+output)
+    lazy_swap: bool = False          # under pressure, first try shedding a
+    #                                  victim's DLZS-cold ref-1 pages to the
+    #                                  SwapArea (``exec_shed_cold``) so it
+    #                                  keeps decoding on its hot set; full
+    #                                  preemption only when nobody can shed
     starvation_ticks: int = 8        # a prefill passed over this many
     #                                  ticks goes first regardless of
     #                                  remaining length (anti-starvation
@@ -96,6 +113,8 @@ class SchedStats:
     swap_outs: int = 0
     recomputes: int = 0
     resumes: int = 0
+    sheds: int = 0                   # lazy cold-page swaps (victim kept
+    #                                  running; not counted as preemptions)
 
 
 class Executor(Protocol):
@@ -111,7 +130,29 @@ class Executor(Protocol):
         """Advance one chunk; True when the prompt is fully prefilled and
         the slot entered decode. May raise NeedPages."""
 
+    def exec_prefill_chunk_batch(self, batch: list[tuple[int, int]]
+                                 ) -> list[int]:
+        """Advance every ``(slot, n_chunks)`` entry by n CONSECUTIVE
+        chunks in a single batched varlen dispatch; returns the slots
+        whose prompt completed (they entered decode). May raise
+        NeedPages(slot) from the allocation stage — in that case NO slot
+        advanced (allocations already made for other slots are kept and
+        reused on retry), so the scheduler preempts/sheds and calls
+        again."""
+
+    def pending_chunk_widths(self, slot: int) -> list[int]:
+        """Padded token widths of the slot's remaining prefill chunks,
+        next first (what they cost against the per-tick token budget)."""
+
     def prefill_chunks_left(self, slot: int) -> int: ...
+
+    def exec_shed_cold(self, slot: int, shard: Optional[int] = None
+                       ) -> int:
+        """Lazy swap: park the slot's DLZS-cold uniquely-owned pages in
+        the SwapArea WITHOUT stopping it — the sequence keeps decoding
+        on its hot set. Returns the number of pages freed (0 when the
+        slot has nothing sheddable, e.g. mid-prefill or all pages hot).
+        Only called when ``SchedulerCfg.lazy_swap`` is set."""
 
     def held_pages(self, slot: int, shard: Optional[int] = None) -> int:
         """Pool pages preempting the slot would actually free (the
@@ -218,7 +259,12 @@ class Scheduler:
     # traffic. SJF alone would starve a long prompt under a sustained
     # stream of short ones, so a prefill passed over ``starvation_ticks``
     # times is aged to the front of its priority level (oldest first).
-    def _prefill_phase(self, ex: Executor) -> None:
+    #
+    # Two dispatch modes: with a ``prefill_tokens`` budget, ONE batched
+    # varlen dispatch advances every sequence that packs under the budget
+    # (the continuous-batching form); otherwise the legacy loop issues up
+    # to ``prefill_per_step`` one-sequence dispatches.
+    def _prefill_order_key(self, ex: Executor):
         def order(slot):
             st = self.running[slot]
             starved = self._pf_wait.get(slot, 0) >= \
@@ -226,7 +272,24 @@ class Scheduler:
             return (-st.req.priority, not starved,
                     st.seqno if starved else ex.prefill_chunks_left(slot),
                     st.seqno)
+        return order
 
+    def _prefill_phase(self, ex: Executor) -> None:
+        if self.cfg.prefill_tokens is not None \
+                and self.cfg.chunk_pages is not None:
+            advanced = self._prefill_batched(ex)
+        else:
+            advanced = self._prefill_sequential(ex)
+        # aging bookkeeping: slots passed over this tick accumulate wait
+        for s, st in list(self.running.items()):
+            if st.phase == "prefill":
+                self._pf_wait[s] = 0 if s in advanced \
+                    else self._pf_wait.get(s, 0) + 1
+            else:
+                self._pf_wait.pop(s, None)
+
+    def _prefill_sequential(self, ex: Executor) -> set[int]:
+        order = self._prefill_order_key(ex)
         budget = self.cfg.prefill_per_step
         advanced: set[int] = set()
         while budget > 0:
@@ -241,19 +304,49 @@ class Scheduler:
                 if ex.exec_prefill_chunk(slot):
                     self.running[slot].phase = "decode"
             except NeedPages as e:
+                if self._try_shed(ex, needy=slot, shard=e.shard):
+                    budget += 1                    # retry the same slot
+                    continue
                 victim = self._pick_victim(ex, needy=slot, shard=e.shard)
                 if victim is None or victim == slot:
                     self._preempt(ex, slot)        # self-preempt: requeue
                 else:
                     self._preempt(ex, victim)
                     budget += 1                    # retry the same slot
-        # aging bookkeeping: slots passed over this tick accumulate wait
-        for s, st in list(self.running.items()):
-            if st.phase == "prefill":
-                self._pf_wait[s] = 0 if s in advanced \
-                    else self._pf_wait.get(s, 0) + 1
-            else:
-                self._pf_wait.pop(s, None)
+        return advanced
+
+    def _prefill_batched(self, ex: Executor) -> set[int]:
+        """Pack next-chunks under the token budget (SJF + aging order)
+        and advance them all in one dispatch. Pressure preempts/sheds and
+        retries with a re-packed batch — the failed call advanced nobody,
+        so the retry is clean."""
+        order = self._prefill_order_key(ex)
+        advanced: set[int] = set()
+        while True:
+            cands = sorted((s for s, st in self.running.items()
+                            if st.phase == "prefill"
+                            and s not in advanced), key=order)
+            if not cands:
+                return advanced
+            batch = pack_budget(
+                [(s, ex.pending_chunk_widths(s)) for s in cands],
+                self.cfg.prefill_tokens)
+            try:
+                done = ex.exec_prefill_chunk_batch(batch)
+            except NeedPages as e:
+                if self._try_shed(ex, needy=e.slot, shard=e.shard):
+                    continue
+                victim = self._pick_victim(ex, needy=e.slot,
+                                           shard=e.shard)
+                if victim is None or victim == e.slot:
+                    self._preempt(ex, e.slot)
+                else:
+                    self._preempt(ex, victim)
+                continue
+            advanced.update(s for s, _ in batch)
+            for slot in done:
+                self.running[slot].phase = "decode"
+            return advanced
 
     # Phase 3: decode retries after preempting until the batch fits.
     def _decode_phase(self, ex: Executor) -> list[Request]:
@@ -264,6 +357,8 @@ class Scheduler:
                 finished = ex.exec_decode()
                 break
             except NeedPages as e:
+                if self._try_shed(ex, needy=e.slot, shard=e.shard):
+                    continue
                 victim = self._pick_victim(ex, needy=e.slot, shard=e.shard)
                 if victim is None:
                     victim = e.slot
@@ -279,6 +374,41 @@ class Scheduler:
 
     # -- preemption ---------------------------------------------------------
 
+    def _victim_candidates(self, ex: Executor, needy: int,
+                           shard: Optional[int]) -> list[int]:
+        """Victim-rank-ordered slots eligible to relieve pressure for
+        ``needy``: must actually free pages (on ``shard`` when given)
+        and must not outrank the needy slot — shared by full preemption
+        and lazy shedding so the two policies can never drift apart.
+        Rank: lowest priority first; within a level prefer slots NOT
+        resumed this tick (anti-thrash), then the newest."""
+        def rank(slot):
+            st = self.running[slot]
+            return (st.req.priority, slot in self._resumed_tick, -st.seqno)
+
+        needy_prio = self.running[needy].req.priority \
+            if needy in self.running else 0
+        return sorted((s for s in self.running
+                       if ex.held_pages(s, shard) > 0
+                       and self.running[s].req.priority <= needy_prio),
+                      key=rank)
+
+    def _try_shed(self, ex: Executor, needy: int,
+                  shard: Optional[int] = None) -> bool:
+        """Lazy pressure relief: before stopping anyone, ask candidates in
+        victim-rank order to park their DLZS-cold uniquely-owned pages
+        (``exec_shed_cold``) while they keep decoding on their hot set.
+        True when some slot freed at least one page — the caller retries
+        without a preemption. Same candidate filter as ``_pick_victim``,
+        so shedding never touches higher-priority work either."""
+        if not self.cfg.lazy_swap:
+            return False
+        for slot in self._victim_candidates(ex, needy, shard):
+            if ex.exec_shed_cold(slot, shard) > 0:
+                self.stats.sheds += 1
+                return True
+        return False
+
     def _pick_victim(self, ex: Executor, needy: int,
                      shard: Optional[int] = None) -> Optional[int]:
         """Among slots whose eviction actually FREES pages (preempting a
@@ -293,18 +423,8 @@ class Scheduler:
         legal victim — self-preemption frees the batch for others. None
         when no eligible victim exists (the caller self-preempts/defers
         the needy slot)."""
-        def rank(slot):
-            st = self.running[slot]
-            return (st.req.priority, slot in self._resumed_tick, -st.seqno)
-
-        needy_prio = self.running[needy].req.priority \
-            if needy in self.running else 0
-        cands = [s for s in self.running
-                 if ex.held_pages(s, shard) > 0
-                 and self.running[s].req.priority <= needy_prio]
-        if not cands:
-            return None
-        return min(cands, key=rank)
+        cands = self._victim_candidates(ex, needy, shard)
+        return cands[0] if cands else None
 
     def _preempt(self, ex: Executor, slot: int) -> None:
         st = self.running.pop(slot)

@@ -45,8 +45,10 @@ import numpy as np
 from repro.kvcache import (SCRATCH, PoolExhausted, SwapArea, bucketing,
                            metrics)
 from repro.models import lm
+from repro.serving import swap_policy
 from repro.serving.engine import Request
 from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
+from repro.serving.swap_policy import PrefillProgress as _PrefillProgress
 from repro.spatial.sharded_pool import ShardedPagePools, ShardPoolExhausted
 from repro.spatial.topology import ShardTopology
 
@@ -64,18 +66,11 @@ class SpatialEngineCfg:
     temperature: float = 1.0
     bucket_pow2: bool = True
     share_prefixes: bool = True
-
-
-@dataclasses.dataclass
-class _PrefillProgress:
-    """Host-side cursor of a partially prefilled prompt (spatial copy of
-    the paged engine's — kept separate so the engines evolve freely)."""
-    prompt: np.ndarray
-    toks: Optional[tuple]
-    spans: list
-    chunk: int
-    sharing: bool
-    suppress_first: bool
+    batch_past_pages: Optional[int] = None
+    # Per-SHARD past-page gather width of the batched chunk-prefill
+    # dispatch (SchedulerCfg.prefill_tokens); None sizes it to a whole
+    # local pool. Fixed at init so the batched spatial prefill compiles
+    # exactly once.
 
 
 class SpatialServingEngine:
@@ -115,9 +110,25 @@ class SpatialServingEngine:
         self.lengths = np.zeros((scfg_engine.max_batch,), np.int64)
         self.free = list(range(scfg_engine.max_batch))
 
+        # batched varlen chunk prefill (one shard_map dispatch per tick):
+        # fixed flat width + fixed per-shard past window => one compile
+        scfg_live = self.sched.cfg
+        self._batched = (scfg_live.prefill_tokens is not None
+                         and scfg_live.chunk_pages is not None)
+        if self._batched:
+            self._budget_tokens = bucketing.budget_tokens(
+                scfg_live.prefill_tokens, scfg_engine.page_size,
+                scfg_live.chunk_pages, pow2=scfg_engine.bucket_pow2)
+            self._batch_wp = bucketing.bucket_count(
+                scfg_engine.batch_past_pages
+                or scfg_engine.n_pages_local - 1,
+                pow2=scfg_engine.bucket_pow2)
+
         mesh, axis = self.mesh, self.topo.axis
         self._prefill_chunk = jax.jit(functools.partial(
             self._prefill_chunk_fn), donate_argnums=(2,))
+        self._prefill_chunk_batch = jax.jit(functools.partial(
+            self._prefill_chunk_batch_fn), donate_argnums=(2,))
         self._decode = jax.jit(functools.partial(self._decode_fn),
                                donate_argnums=(2,))
         self._copy_page = jax.jit(self._copy_fn, static_argnums=(3,))
@@ -155,6 +166,12 @@ class SpatialServingEngine:
         return lm.prefill_chunk_spatial(params, self.cfg, batch, cache,
                                         chunk_state, mesh=self.mesh,
                                         axis=self.topo.axis)
+
+    def _prefill_chunk_batch_fn(self, params, batch, cache, pack_state):
+        return lm.prefill_chunk_batch_spatial(params, self.cfg, batch,
+                                              cache, pack_state,
+                                              mesh=self.mesh,
+                                              axis=self.topo.axis)
 
     def _decode_fn(self, params, tokens, cache, page_state):
         return lm.decode_step_spatial(params, self.cfg, tokens, cache,
@@ -201,6 +218,12 @@ class SpatialServingEngine:
                 f"request {req.rid}: {total} tokens needs {need} striped "
                 f"pages; {self.topo.n_shards} shards x "
                 f"{self.pcfg.n_pages_local - 1} pages cannot hold them")
+        if self._batched and self.topo.max_local_count(need) \
+                > self._batch_wp:
+            raise ValueError(
+                f"request {req.rid}: {need} striped pages exceeds the "
+                f"batched chunk-prefill past window ({self._batch_wp} "
+                f"pages/shard); raise SpatialEngineCfg.batch_past_pages")
         req.out = []
         self.sched.submit(req)
 
@@ -336,6 +359,230 @@ class SpatialServingEngine:
             self._prefill_done.append((slot, req))
         return True
 
+    # -- executor protocol: batched varlen chunk prefill --------------------
+
+    def pending_chunk_widths(self, slot: int) -> list[int]:
+        pf = self._pf[slot]
+        return [w for _, _, w in pf.spans[pf.chunk:]]
+
+    @staticmethod
+    def _merged_span(pf, n: int) -> tuple[int, int, int]:
+        start = pf.spans[pf.chunk][0]
+        end = pf.spans[pf.chunk + n - 1][1]
+        width = sum(w for _, _, w in pf.spans[pf.chunk:pf.chunk + n])
+        return start, end, width
+
+    def _release_from(self, pages: list[int], start_global: int) -> None:
+        """Decref chunk pages whose global indices start at
+        ``start_global`` (pending pages are not in the table yet)."""
+        for i, pid in enumerate(pages):
+            self.pools.pools[self.topo.owner(start_global + i)].decref(pid)
+
+    def exec_prefill_chunk_batch(self, batch: list[tuple[int, int]]
+                                 ) -> list[int]:
+        """Advance every ``(slot, n_chunks)`` entry in ONE shard_map
+        dispatch — the spatial twin of the paged engine's batched path.
+
+        Same phases (allocate with ``pf.pending`` idempotence; same-tick
+        prefix dedup; pack; commit after the dispatch), except the past
+        ARENA and the chunk scatter targets are per-SHARD: shard s
+        gathers its local slices of every lane's past pages and scatters
+        the flat buffer's pages it owns, with the cross-shard softmax
+        merged through the usual pmax/psum tree. Raises shard-tagged
+        NeedPages from the allocation phase, before anything commits."""
+        page = self.pcfg.page_size
+        n_sh = self.topo.n_shards
+        for slot, n in batch:                  # phase A: allocation
+            pf = self._pf[slot]
+            if pf.pending is not None:
+                continue
+            n = max(1, min(n, len(pf.spans) - pf.chunk))
+            start, end, _ = self._merged_span(pf, n)
+            start_page = start // page
+            n_need = -(-end // page) - start_page
+            scores = self._pull_scores() \
+                if any(self.pools.free_pages(s) < n_need
+                       for s in range(n_sh)) else None
+            try:
+                pages, fresh_globals, sharing = self.pools.admit_chunk(
+                    pf.toks, start_page, n_need, scores,
+                    sharing=pf.sharing)
+            except ShardPoolExhausted as e:
+                raise NeedPages(slot, e.shard) from None
+            pf.sharing = sharing
+            pf.pending = (pages, fresh_globals, n)
+
+        # Phase A2 — same-tick prefix dedup (see the paged engine): with
+        # every allocation committed, fresh full prompt pages register on
+        # their owner shard now, and later slots in the batch share them
+        # — the owning lane scatters the content this same dispatch.
+        slots = [s for s, _ in batch]
+        if self._share:
+            for slot in slots:
+                pf = self._pf[slot]
+                if pf.toks is None:
+                    continue
+                pages, fresh_globals, n = pf.pending
+                start_page = pf.spans[pf.chunk][0] // page
+                fresh_set = set(fresh_globals)
+                new_fresh = []
+                for cj, pid in enumerate(pages):
+                    g = start_page + cj
+                    if g not in fresh_set:
+                        continue
+                    end = (g + 1) * page
+                    if end > len(pf.toks):
+                        new_fresh.append(g)
+                        continue
+                    s = self.topo.owner(g)
+                    key = tuple(pf.toks[:end])
+                    hit = self.pools.pools[s].lookup(key)
+                    if hit is not None:        # an earlier lane owns it
+                        self.pools.pools[s].decref(pid)
+                        pages[cj] = hit
+                    else:
+                        self.pools.pools[s].register(key, pid)
+                        new_fresh.append(g)
+                pf.pending = (pages, new_fresh, n)
+
+        def is_last(slot):
+            pf = self._pf[slot]
+            return pf.chunk + pf.pending[2] == len(pf.spans)
+
+        compute = [s for s in slots
+                   if self._pf[s].pending[1] or is_last(s)]
+
+        # wave split on the per-shard arena (striping puts ~start_page/n
+        # past slots on each shard) and the token buffer
+        waves: list[list[int]] = []
+        cur: list[int] = []
+        cur_p = [0] * n_sh
+        cur_t = 0
+        for slot in compute:
+            pf = self._pf[slot]
+            start, _, width = self._merged_span(pf, pf.pending[2])
+            sp = start // page
+            local = [self.topo.local_count(sp, s) for s in range(n_sh)]
+            if cur and (cur_t + width > self._budget_tokens
+                        or any(cur_p[s] + local[s] > self._batch_wp
+                               for s in range(n_sh))):
+                waves.append(cur)
+                cur, cur_p, cur_t = [], [0] * n_sh, 0
+            cur.append(slot)
+            cur_p = [cur_p[s] + local[s] for s in range(n_sh)]
+            cur_t += width
+        if cur:
+            waves.append(cur)
+
+        logits_by_slot: dict[int, np.ndarray] = {}
+        for wave in waves:                     # phase B: dispatch(es)
+            self._dispatch_chunk_wave(wave, logits_by_slot)
+
+        done = []
+        for slot in slots:                     # phase C: commit
+            pf = self._pf[slot]
+            pages, fresh_globals, n = pf.pending
+            self.tables[slot].extend(pages)
+            # prefix registration already happened in phase A2 — the
+            # sole registration point (see the paged engine)
+            pf.pending = None
+            pf.chunk += n
+            if pf.chunk < len(pf.spans):
+                continue
+            req = self.active[slot]
+            if pf.suppress_first:
+                tok = int(req.out[-1])
+            else:
+                tok = int(np.argmax(
+                    logits_by_slot[slot][:self.cfg.vocab]))
+                req.out.append(tok)
+            del self._pf[slot]
+            self.lengths[slot] = len(pf.prompt)
+            self.last_token = self.last_token.at[slot, 0].set(tok)
+            self.budget[slot] = req.max_tokens - len(req.out)
+            done.append(slot)
+            if self.budget[slot] <= 0:
+                self.pools.release(self.tables.pop(slot))
+                del self.active[slot]
+                del self.budget[slot]
+                self.lengths[slot] = 0
+                self.free.append(slot)
+                self._prefill_done.append((slot, req))
+        return done
+
+    def _dispatch_chunk_wave(self, wave: list[int],
+                             logits_by_slot: dict) -> None:
+        """Pack one wave into the flat buffer + per-shard past arenas
+        and run the single compiled shard_map dispatch."""
+        page = self.pcfg.page_size
+        n_sh = self.topo.n_shards
+        b_tok, wp, lanes = self._budget_tokens, self._batch_wp, \
+            self.pcfg.max_batch
+        flat = np.zeros((b_tok,), np.int32)
+        seg = np.full((b_tok,), -1, np.int32)
+        pos = np.zeros((b_tok,), np.int32)
+        chunk_phys = np.full((n_sh, 1, b_tok // page), SCRATCH, np.int32)
+        past_phys = np.full((n_sh, wp), -1, np.int32)
+        past_lane = np.full((n_sh, wp), -1, np.int32)
+        past_logical = np.full((n_sh, wp), -1, np.int32)
+        past_len = np.zeros((lanes,), np.int32)
+        last_index = np.zeros((lanes,), np.int32)
+        cursor = 0
+        arena = [0] * n_sh
+        for slot in wave:
+            pf = self._pf[slot]
+            pages, fresh_globals, n = pf.pending
+            start, end, width = self._merged_span(pf, n)
+            start_page = start // page
+            last = pf.chunk + n == len(pf.spans)
+            t = len(pf.prompt)
+            flat[cursor:cursor + width] = bucketing.pad_tokens(
+                pf.prompt[start:end], width)
+            seg[cursor:cursor + width] = slot
+            pos[cursor:cursor + width] = start + np.arange(width)
+            last_index[slot] = cursor + (t - 1 if last else end - 1) \
+                - start
+            past_len[slot] = start
+            table = self.tables[slot]
+            for s in range(n_sh):
+                globals_ = list(range(s, start_page, n_sh))
+                a = arena[s]
+                past_phys[s, a:a + len(globals_)] = \
+                    [table[j] for j in globals_]
+                past_lane[s, a:a + len(globals_)] = slot
+                past_logical[s, a:a + len(globals_)] = globals_
+                arena[s] = a + len(globals_)
+            fresh_set = set(fresh_globals)
+            base = cursor // page
+            for cj, pid in enumerate(pages):
+                g = start_page + cj
+                if g in fresh_set:
+                    chunk_phys[self.topo.owner(g), 0, base + cj] = pid
+            cursor += width
+        pack_state = {
+            "seg_ids": jnp.asarray(seg),
+            "positions": jnp.asarray(pos),
+            "past_phys": jnp.asarray(past_phys),
+            "past_lane": jnp.asarray(past_lane),
+            "past_logical": jnp.asarray(past_logical),
+            "chunk_phys": jnp.asarray(chunk_phys),
+            "past_len": jnp.asarray(past_len),
+            "last_index": jnp.asarray(last_index)}
+        logits, new_cache = self._prefill_chunk_batch(
+            self.params, {"tokens": jnp.asarray(flat)[None, :]},
+            {"layers": self.cache["layers"]}, pack_state)
+        self.cache["layers"] = new_cache["layers"]
+        logits_host = np.asarray(logits)
+        for slot in wave:
+            logits_by_slot[slot] = logits_host[slot]
+
+    def exec_shed_cold(self, slot: int, shard: Optional[int] = None
+                       ) -> int:
+        """Lazy cold-page swap is not wired for the sharded pools yet
+        (ROADMAP follow-up) — report nothing sheddable so the scheduler
+        falls back to an ordinary full preemption."""
+        return 0
+
     # -- executor protocol: decode ------------------------------------------
 
     def _decode_slots(self) -> list[int]:
@@ -432,19 +679,21 @@ class SpatialServingEngine:
 
     def exec_preempt(self, slot: int, swap: bool) -> bool:
         """Evict ``slot`` with the same shared-prefix-aware parking as the
-        paged engine: ref-1 pages are gathered per shard into the host
-        SwapArea; shared pages keep this sequence's reference (and stay
-        resident on their shard) until it resumes."""
+        paged engine (swap_policy core): ref-1 pages are gathered per
+        shard into the host SwapArea; shared pages keep this sequence's
+        reference (and stay resident on their shard) until it resumes."""
         req = self.active.pop(slot)
         table = self.tables.pop(slot)
         pf = self._pf.pop(slot, None)
+        swap_policy.release_pending(
+            pf, lambda pgs: self._release_from(pgs, len(table)))
         swapped = False
         if swap and table:
             n = self.topo.n_shards
-            ref = lambda j: self.pools.pools[self.topo.owner(j)].ref(
-                table[j])
-            kept = [(j, table[j]) for j in range(len(table)) if ref(j) > 1]
-            park = [j for j in range(len(table)) if ref(j) == 1]
+            kept, park, _ = swap_policy.partition_table(
+                table,
+                lambda j: self.pools.pools[self.topo.owner(j)].ref(
+                    table[j]))
             park_by_shard = [[j for j in park if self.topo.owner(j) == s]
                              for s in range(n)]
             host = None
@@ -467,22 +716,13 @@ class SpatialServingEngine:
                     lambda r: np.ascontiguousarray(
                         np.asarray(r)[:, :, :max_park]), rows)
                 nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(host))
-            toks = pf.toks if pf is not None else (
-                tuple(int(x) for x in req.prompt) if self._share else None)
-            state = {"rows": host, "park_by_shard": park_by_shard,
-                     "kept": kept, "n_pages": len(table),
-                     "lookup_toks": toks}
-            if pf is not None:
-                state.update(kind="prefill", prompt=pf.prompt,
-                             toks=pf.toks, spans=pf.spans, chunk=pf.chunk,
-                             sharing=pf.sharing,
-                             suppress_first=pf.suppress_first)
-            else:
-                state.update(kind="decode",
-                             length=int(self.lengths[slot]),
-                             last_token=int(np.asarray(
-                                 self.last_token[slot, 0])),
-                             budget=self.budget[slot])
+            state = swap_policy.progress_state(
+                req, pf, share=self._share,
+                length=int(self.lengths[slot]),
+                last_token=int(np.asarray(self.last_token[slot, 0])),
+                budget=self.budget.get(slot, 0))
+            state.update(rows=host, park_by_shard=park_by_shard,
+                         kept=kept, n_pages=len(table))
             self.swap_area.put(req.rid, state, nbytes)
             for s in range(n):
                 for j in park_by_shard[s]:
@@ -505,28 +745,29 @@ class SpatialServingEngine:
         scores = self._pull_scores() \
             if any(self.pools.free_pages(s) < len(park_by_shard[s])
                    for s in range(n)) else None
-        toks = state["lookup_toks"]
-        page = self.pcfg.page_size
-        filled: dict[int, int] = {}
-        upload: list[tuple[int, int, int]] = []   # (shard, park pos, phys)
-        taken: list[tuple[int, int]] = []
-        try:
-            for s in range(n):
-                for pos, j in enumerate(park_by_shard[s]):
-                    hit = None
-                    end = (j + 1) * page
-                    if toks is not None and end <= len(toks):
-                        hit = self.pools.pools[s].lookup(tuple(toks[:end]))
-                    if hit is None:
-                        hit = self.pools.allocs[s].extend(
-                            scores[s] if scores is not None else None)
-                        upload.append((s, pos, hit))
-                    filled[j] = hit
-                    taken.append((s, hit))
-        except PoolExhausted:        # defensive: roll back, entry stays put
-            for s, pid in taken:
-                self.pools.pools[s].decref(pid)
+        # one flat shard-major plan: the prefix re-lookup / allocate /
+        # rollback loop is the shared swap core, with each page routed to
+        # its owner shard's pool
+        park_flat = [j for s in range(n) for j in park_by_shard[s]]
+        plan = swap_policy.plan_page_in(
+            park_flat, state["lookup_toks"], self.pcfg.page_size,
+            lookup=lambda j, key:
+                self.pools.pools[self.topo.owner(j)].lookup(key),
+            extend=lambda j: self.pools.allocs[self.topo.owner(j)].extend(
+                scores[self.topo.owner(j)] if scores is not None
+                else None),
+            rollback=lambda j, pid:
+                self.pools.pools[self.topo.owner(j)].decref(pid))
+        if plan is None:             # defensive: entry stays put
             return None
+        filled, upload_flat = plan
+        # flat park order is shard-major, so a flat position maps back to
+        # (shard, within-shard position) for the row upload
+        upload: list[tuple[int, int, int]] = []   # (shard, park pos, phys)
+        for pos, pid in upload_flat:
+            j = park_flat[pos]
+            s = self.topo.owner(j)
+            upload.append((s, park_by_shard[s].index(j), pid))
         state = self.swap_area.take(req.rid)
         slot = self.free.pop(0)
         for j, pid in state["kept"]:
@@ -555,12 +796,9 @@ class SpatialServingEngine:
                 jax.tree.map(sub_rows, state["rows"]), jnp.asarray(phys))
         self.tables[slot] = table
         self.active[slot] = req
-        if state["kind"] == "prefill":
-            self._pf[slot] = _PrefillProgress(
-                prompt=state["prompt"], toks=state["toks"],
-                spans=state["spans"], chunk=state["chunk"],
-                sharing=state["sharing"],
-                suppress_first=state["suppress_first"])
+        pf = swap_policy.restore_progress(state)
+        if pf is not None:
+            self._pf[slot] = pf
             self.lengths[slot] = 0
         else:
             self.lengths[slot] = state["length"]
@@ -601,4 +839,5 @@ class SpatialServingEngine:
             "working_set_bytes": pools["peak_live"] * per_page,
             "slab_bytes": metrics.tree_bytes(self.cache["layers"]),
             "decode_compiles": self._decode._cache_size(),
+            "prefill_batch_compiles": self._prefill_chunk_batch._cache_size(),
         }

@@ -187,10 +187,13 @@ class ShardedPagePools:
     def held_pages(self, table: Sequence[int],
                    shard: Optional[int] = None) -> int:
         """Pages preempting this table would actually free (ref == 1),
-        optionally only those on ``shard``."""
+        optionally only those on ``shard``. Negative entries (the
+        lazy-swap SHED sentinel — content parked on the host) are
+        skipped: ref(-1) would silently read the LAST page's refcount."""
         return sum(
             1 for j, pid in enumerate(table)
-            if (shard is None or self.topo.owner(j) == shard)
+            if pid >= 0
+            and (shard is None or self.topo.owner(j) == shard)
             and self.pools[self.topo.owner(j)].ref(pid) == 1)
 
     # -- stats ----------------------------------------------------------------

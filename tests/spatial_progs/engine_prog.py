@@ -7,6 +7,8 @@ argv[1] = shard count. Asserts, on a smoke LM:
      paged engine but admitted AND served by the spatial engine;
   3. preemption parity: under per-shard pool pressure (host swap +
      page-in resume) outputs equal the unpressured spatial run;
+  3b. batched varlen chunk prefill (token-budget dispatch) matches the
+     per-sequence chunk path token-for-token, one prefill compile;
   4. cross-shard prefix sharing: same-prefix prompts share pages inside
      each shard's pool.
 Prints ALL_OK on success.
@@ -92,6 +94,21 @@ assert st["swap"].entries == 0
 print(f"preempt[{N_SHARDS} shards]: OK "
       f"({st['sched'].preemptions} preemptions, "
       f"{st['swap'].swap_outs} swap-outs)")
+
+# 3b. batched varlen chunk prefill: one token-budget shard_map dispatch
+# per tick must emit the same tokens as the per-sequence chunk path,
+# with exactly one batched-prefill compilation (and one decode compile).
+sp_batch = SpatialServingEngine(cfg, params, SpatialEngineCfg(
+    n_shards=N_SHARDS, max_batch=2, page_size=16, n_pages_local=32,
+    hot_pages_local=4, recent_pages=2, eos_id=-1),
+    SchedulerCfg(chunk_pages=1, prefill_tokens=48))
+got_batch = sp_batch.run(reqs(mixed))
+assert got_batch == want, \
+    f"batched chunk-prefill parity broke:\n{got_batch}\n{want}"
+stb = sp_batch.stats()
+assert stb["prefill_batch_compiles"] == 1, stb["prefill_batch_compiles"]
+assert stb["decode_compiles"] == 1, stb["decode_compiles"]
+print(f"batched-prefill[{N_SHARDS} shards]: OK")
 
 # 4. cross-shard prefix sharing
 shared = np.arange(32, dtype=np.int32)        # 2 full pages

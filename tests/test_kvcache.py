@@ -152,6 +152,29 @@ def test_chunk_spans():
         bucketing.chunk_spans(100, 16, 0)
 
 
+def test_budget_tokens_and_pack_budget():
+    # page-aligned, and never narrower than the widest single chunk
+    assert bucketing.budget_tokens(64, 16, 2) == 64
+    assert bucketing.budget_tokens(40, 16, 2) == 48
+    # chunk_pages=3: a bucketed final remainder can round up to 4 pages
+    assert bucketing.budget_tokens(16, 16, 3) == 64
+    # greedy first-fit in priority order
+    assert bucketing.pack_budget(
+        [("a", [32]), ("b", [32]), ("c", [32])], 64) == [("a", 1),
+                                                         ("b", 1)]
+    # the head candidate always advances, even alone over budget
+    assert bucketing.pack_budget(
+        [("a", [128]), ("b", [16])], 64) == [("a", 1)]
+    # packing stops at the first non-fit: priority order is never bypassed
+    assert bucketing.pack_budget(
+        [("a", [32]), ("b", [64]), ("c", [16])], 64) == [("a", 1)]
+    # leftover budget deepens packed sequences round-robin (consecutive
+    # chunks merge into one varlen span)
+    assert bucketing.pack_budget(
+        [("a", [16, 16, 16]), ("b", [16])], 64) == [("a", 3), ("b", 1)]
+    assert bucketing.pack_budget([], 64) == []
+
+
 def test_bucket_count():
     assert bucketing.bucket_count(0) == 1
     assert bucketing.bucket_count(3) == 4
@@ -351,6 +374,92 @@ def test_paged_engine_chunked_prefill_parity(smoke_lm):
     got = paged.run(_reqs(cfg, lengths))
     assert got == want
     assert paged.stats()["decode_compiles"] == 1
+
+
+def test_paged_engine_batched_chunk_prefill_parity(smoke_lm):
+    """Token-exact parity between the batched varlen chunk-prefill path
+    (one token-budget dispatch per tick, SchedulerCfg.prefill_tokens) and
+    the per-sequence path on mixed prompt lengths — with exactly ONE
+    batched-prefill compilation and one decode compilation."""
+    cfg, params = smoke_lm
+    lengths = (5, 8, 17, 33, 40, 62)
+    seq = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=32, hot_pages=8,
+        recent_pages=2, eos_id=-1), SchedulerCfg(chunk_pages=1))
+    want = seq.run(_reqs(cfg, lengths))
+    bat = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=32, hot_pages=8,
+        recent_pages=2, eos_id=-1),
+        SchedulerCfg(chunk_pages=1, prefill_tokens=64))
+    got = bat.run(_reqs(cfg, lengths))
+    assert got == want
+    st = bat.stats()
+    assert st["prefill_batch_compiles"] == 1
+    assert st["decode_compiles"] == 1
+
+
+def test_paged_engine_batched_prefill_shares_same_tick_prefixes(smoke_lm):
+    """Same-prefix prompts packed into the SAME batched dispatch still
+    share their prefix pages (the phase-A2 dedup registers fresh full
+    pages before the dispatch), and outputs match the sequential path."""
+    cfg, params = smoke_lm
+    shared = np.arange(32, dtype=np.int32)            # 2 full pages
+    mk = lambda: [Request(rid=i, prompt=np.concatenate(
+                      [shared, np.full((4 + 3 * i,), 100 + i, np.int32)]),
+                  max_tokens=4) for i in range(4)]
+    seq = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=32, hot_pages=8, eos_id=-1),
+        SchedulerCfg(chunk_pages=1))
+    want = seq.run(mk())
+    bat = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=32, hot_pages=8, eos_id=-1),
+        SchedulerCfg(chunk_pages=1, prefill_tokens=64))
+    got = bat.run(mk())
+    assert got == want
+    # 3 followers x 2 prefix pages shared despite same-tick admission
+    assert bat.pool.stats().shared_hits >= 6
+
+
+def test_paged_engine_batched_prefill_preempt_parity(smoke_lm):
+    """Batched chunk prefill under pool pressure: preemption (swap +
+    page-in, including pending-chunk rollback) keeps token parity with an
+    unpressured batched run."""
+    cfg, params = smoke_lm
+    lengths = (20, 21, 20, 22)
+    scfg = lambda: SchedulerCfg(chunk_pages=1, prefill_tokens=64,
+                                swap=True)
+    big = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=64, hot_pages=4, eos_id=-1),
+        scfg())
+    want = big.run(_reqs(cfg, lengths, max_tokens=16))
+    tiny = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=7, hot_pages=4, eos_id=-1),
+        scfg())
+    got = tiny.run(_reqs(cfg, lengths, max_tokens=16), max_steps=3000)
+    st = tiny.stats()
+    assert got == want
+    assert st["sched"].preemptions > 0               # pressure actually hit
+    assert st["swap"].entries == 0                   # nothing left behind
+
+
+def test_paged_engine_lazy_shed_relieves_pressure(smoke_lm):
+    """Lazy cold-page swap on the real engine: under decode-time pool
+    pressure with ``lazy_swap`` the victim parks only DLZS-cold ref-1
+    pages (pages its hot-set gather was already skipping) and KEEPS
+    decoding — requests finish with sheds instead of full preemptions."""
+    cfg, params = smoke_lm
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=2, page_size=16, n_pages=9, hot_pages=3,
+        recent_pages=2, eos_id=-1),
+        SchedulerCfg(chunk_pages=1, swap=True, lazy_swap=True))
+    reqs = [Request(rid=i, prompt=(np.arange(40, dtype=np.int32) + i)
+                    % cfg.vocab, max_tokens=48) for i in range(2)]
+    done = eng.run(reqs, max_steps=4000)
+    st = eng.stats()
+    assert all(len(v) == 48 for v in done.values())
+    assert st["sched"].sheds > 0
+    assert st["swap"].entries == 0       # shed payloads dropped at finish
+    assert eng.pool.live_pages() == 0
 
 
 def test_paged_engine_preempt_resume_parity(smoke_lm):

@@ -109,6 +109,56 @@ class FakeEngine:
         return slot
 
 
+class BatchFakeEngine(FakeEngine):
+    """FakeEngine speaking the batched varlen prefill protocol: every
+    chunk costs 16 budget tokens (overridable per rid via ``widths``) and
+    one capacity page, and a batch allocates all-or-nothing like the real
+    engine's phase A."""
+
+    def __init__(self, *a, widths=None, **kw):
+        super().__init__(*a, **kw)
+        self.widths = widths or {}
+
+    def pending_chunk_widths(self, slot):
+        w = self.widths.get(self.state[slot]["req"].rid, 16)
+        return [w] * self.prefill_chunks_left(slot)
+
+    def exec_prefill_chunk_batch(self, batch):
+        if self._used() + sum(n for _, n in batch) > self.capacity:
+            raise NeedPages(batch[0][0])
+        self.log.append(("batch", sorted(
+            self.state[s]["req"].rid for s, _ in batch)))
+        done = []
+        for slot, n in batch:
+            st = self.state[slot]
+            n = max(1, min(n, self.prefill_chunks_left(slot)))
+            self.pages[slot] += n
+            st["chunk"] += n
+            for _ in range(n):
+                self.log.append(("chunk", st["req"].rid))
+            if self.prefill_chunks_left(slot) == 0:
+                done.append(slot)
+        return done
+
+
+class SheddingFakeEngine(FakeEngine):
+    """FakeEngine with lazy cold-page swap: everything but one hot (tail)
+    page of a decoding sequence is sheddable, one page per call."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.shed_log: list[int] = []
+
+    def exec_shed_cold(self, slot, shard=None):
+        if self.prefill_chunks_left(slot) > 0:       # mid-prefill: no
+            return 0                                 # past pages may leave
+        if self.pages.get(slot, 0) <= 1:
+            return 0
+        self.pages[slot] -= 1
+        self.shed_log.append(self.state[slot]["req"].rid)
+        return 1
+
+
 def _req(rid, priority=0):
     return Request(rid=rid, prompt=np.arange(4, dtype=np.int32),
                    priority=priority, out=[])
@@ -175,6 +225,94 @@ def test_scheduler_aging_unstarves_long_prefill():
     last_short = max(i for i, r in enumerate(chunk_rids) if r != 0)
     assert any(r == 0 for r in chunk_rids[:last_short]), \
         "long prefill was starved until the short stream drained"
+
+
+def test_scheduler_token_budget_batches_prefill():
+    """With ``prefill_tokens`` set, ONE batched dispatch per tick advances
+    every prefilling sequence that packs under the budget — not one
+    dispatch per sequence — and everything still completes."""
+    ex = BatchFakeEngine(capacity=100, slots=4,
+                         chunks={0: 2, 1: 2, 2: 2, 3: 2},
+                         decode_steps={r: 2 for r in range(4)})
+    sched = Scheduler(SchedulerCfg(chunk_pages=1, prefill_tokens=48))
+    for rid in range(4):
+        sched.submit(_req(rid))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2, 3}
+    batches = [e[1] for e in ex.log if e[0] == "batch"]
+    assert batches, "no batched dispatch was issued"
+    # 48-token budget = 3 chunks per dispatch: the first tick packs 3
+    # sequences into one dispatch
+    assert len(batches[0]) == 3
+    # one dispatch per tick: #batches < #chunks issued
+    n_chunks = sum(len(b) for b in batches)
+    assert len(batches) < n_chunks
+
+
+def test_scheduler_budget_head_chunk_always_advances():
+    """A chunk wider than the whole budget still makes progress — it is
+    dispatched alone (the flat buffer is sized to hold any single
+    chunk)."""
+    ex = BatchFakeEngine(capacity=100, slots=2, chunks={0: 1, 1: 1},
+                         decode_steps={0: 1, 1: 1},
+                         widths={0: 128, 1: 16})
+    sched = Scheduler(SchedulerCfg(chunk_pages=1, prefill_tokens=32))
+    sched.submit(_req(0))
+    sched.submit(_req(1))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1}
+    batches = [e[1] for e in ex.log if e[0] == "batch"]
+    # the 128-wide chunk went alone; the 16-wide one got its own dispatch
+    assert [1] in batches and [0] in batches
+
+
+def test_scheduler_batched_prefill_pressure_preempts_and_finishes():
+    """NeedPages from a batched dispatch picks a victim and retries with a
+    re-packed batch; overload degrades, never deadlocks."""
+    ex = BatchFakeEngine(capacity=4, slots=3,
+                         chunks={0: 1, 1: 1, 2: 1},
+                         decode_steps={0: 3, 1: 3, 2: 3})
+    sched = Scheduler(SchedulerCfg(chunk_pages=1, prefill_tokens=64,
+                                   swap=True))
+    for rid in range(3):
+        sched.submit(_req(rid))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2}
+    assert sched.stats.preemptions > 0
+
+
+def test_scheduler_lazy_shed_keeps_victim_running():
+    """Pressure relief via lazy cold-page swap: with ``lazy_swap`` the
+    scheduler first asks victims to shed cold pages — sequences keep
+    decoding on their hot sets, nobody is stopped, and the shed counter
+    (not the preemption counter) moves."""
+    ex = SheddingFakeEngine(capacity=4, slots=2, chunks={0: 1, 1: 1},
+                            decode_steps={0: 4, 1: 4})
+    sched = Scheduler(SchedulerCfg(swap=True, lazy_swap=True))
+    sched.submit(_req(0))
+    sched.submit(_req(1))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1}
+    assert sched.stats.sheds > 0
+    assert sched.stats.preemptions == 0
+    assert not [e for e in ex.log if e[0] == "preempt"]
+    assert ex.shed_log                       # pages actually left victims
+
+
+def test_scheduler_lazy_shed_falls_back_to_preemption():
+    """When nothing is sheddable (every page hot), lazy mode must still
+    fall back to ordinary preemption rather than spin."""
+    ex = FakeEngine(capacity=4, slots=3,
+                    chunks={0: 1, 1: 1, 2: 1},
+                    decode_steps={0: 3, 1: 3, 2: 3})
+    ex.exec_shed_cold = lambda slot, shard=None: 0
+    sched = Scheduler(SchedulerCfg(swap=True, lazy_swap=True))
+    for rid in range(3):
+        sched.submit(_req(rid))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2}
+    assert sched.stats.sheds == 0
+    assert sched.stats.preemptions > 0
 
 
 def test_scheduler_preempts_lowest_priority_newest():

@@ -142,7 +142,8 @@ def _run(prog: str, *args) -> str:
 def test_spatial_engine_acceptance(n_shards):
     """Token parity with the paged engine on mixed-length batches, an
     ultra-long prompt only the spatial engine admits, preemption parity
-    under per-shard pressure, cross-shard prefix sharing — on a
-    fake-device mesh."""
+    under per-shard pressure, batched-vs-per-sequence chunk prefill
+    parity (one token-budget shard_map dispatch per tick, one compile),
+    cross-shard prefix sharing — on a fake-device mesh."""
     out = _run("engine_prog.py", n_shards)
     assert "ALL_OK" in out

@@ -2,7 +2,7 @@
 
 Run:  PYTHONPATH=src python tools/smoke_serve.py
 
-Three scenarios, ~30s each on CPU:
+Four scenarios, ~30s each on CPU:
 
 1. Basic: a small mixed-length batch through the paged KV-cache engine —
    every request completes with valid tokens, variable-length admission
@@ -12,7 +12,11 @@ Three scenarios, ~30s each on CPU:
    with ZERO rejections, swapping under pressure. The scenario's metrics
    refresh the ``overload`` entry of BENCH_serving.json so the trajectory
    (docs/benchmarks.md) tracks preemption behavior across PRs.
-3. Spatial: the sequence-sharded engine on a 2-shard fake-device mesh in
+3. Batched prefill: one token-budget varlen dispatch per tick
+   (benchmarks.serving.batched_prefill) must serve at least as fast as
+   the per-sequence chunked path; refreshes the ``batched_prefill``
+   entry of BENCH_serving.json.
+4. Spatial: the sequence-sharded engine on a 2-shard fake-device mesh in
    a subprocess (tools/smoke_spatial_prog.py — the parent's XLA device
    count is fixed at first jax init): token parity with the paged engine
    and an ultra-long prompt only the sharded engine can admit.
@@ -90,6 +94,31 @@ def overload(cfg, params) -> bool:
     return ok
 
 
+def batched(cfg, params) -> bool:
+    """Batched varlen chunk prefill must never serve slower than the
+    per-sequence chunked path (and keeps the chunked TTFT win); refreshes
+    the ``batched_prefill`` entry of BENCH_serving.json."""
+    from benchmarks import serving as bench_serving
+    t0 = time.time()
+    try:
+        m = bench_serving.batched_prefill(cfg, params)
+    except AssertionError as e:
+        print(f"smoke_serve[batched]: FAIL ({e})")
+        return False
+    ok = m["batched"]["tok_s"] >= m["sequential"]["tok_s"]
+    if ok:      # never let a failing run overwrite the committed baseline
+        bench_serving.write_json(str(REPO / "BENCH_serving.json"),
+                                 {"batched_prefill": m})
+    dt = time.time() - t0
+    print(f"smoke_serve[batched]: batched {m['batched']['tok_s']} tok/s "
+          f"vs sequential {m['sequential']['tok_s']} (monolithic "
+          f"{m['monolithic']['tok_s']}, gap "
+          f"{m['batched_vs_monolithic_gap']}x; short TTFT p50 "
+          f"{m['batched']['ttft_p50_short_ms']}ms), {dt:.1f}s "
+          f"-> {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
 def spatial() -> bool:
     t0 = time.time()
     prog = pathlib.Path(__file__).parent / "smoke_spatial_prog.py"
@@ -109,6 +138,7 @@ def main() -> int:
     params = lm.init(jax.random.PRNGKey(0), cfg)
     ok = basic(cfg, params)
     ok = overload(cfg, params) and ok
+    ok = batched(cfg, params) and ok
     ok = spatial() and ok
     return 0 if ok else 1
 
