@@ -1,8 +1,9 @@
-"""Serve a small LM through the paged continuous-batching engine. Decode
-sparsity is page-granular: DLZS scores over the int8 LZ prediction cache
-decide which KV pages each step gathers (attention is exact within them),
-and identical prompt prefixes share pages copy-on-write. STAR's
-tile-granular pipeline still runs at prefill.
+"""Serve a small LM through the paged continuous-batching engine via the
+unified ``LLM`` front door. Decode sparsity is page-granular: DLZS
+scores over the int8 LZ prediction cache decide which KV pages each step
+gathers (attention is exact within them), and identical prompt prefixes
+share pages copy-on-write. STAR's tile-granular pipeline still runs at
+prefill.
 
 Run:  PYTHONPATH=src python examples/serve_star.py
 """
@@ -14,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import lm
-from repro.serving import PagedEngineCfg, PagedServingEngine, Request
+from repro.serving import LLM, PagedEngineCfg, SchedulerCfg
 
 
 def main():
@@ -23,29 +24,30 @@ def main():
     # page_size == star.block_q so full prefix pages never split a prefill
     # tile (keeps prefix sharing exact); hot_pages*page_size = 256-token
     # decode working set regardless of how long a request grows.
-    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=4, page_size=cfg.star.block_q, n_pages=32, hot_pages=4,
-        recent_pages=2, eos_id=-1))
+    llm = LLM.from_config(
+        cfg, backend="paged", params=params,
+        engine_cfg=PagedEngineCfg(
+            max_batch=4, page_size=cfg.star.block_q, n_pages=32,
+            hot_pages=4, recent_pages=2, eos_id=-1),
+        # chunk boundaries must stay STAR q-tile aligned
+        sched_cfg=SchedulerCfg(chunk_pages=1, prefill_tokens="auto"))
 
     rng = np.random.default_rng(0)
     system = rng.integers(0, cfg.vocab, size=cfg.star.block_q,
                           dtype=np.int32)  # shared "system prompt" page
-    reqs = [Request(rid=i,
-                    prompt=np.concatenate(
-                        [system, rng.integers(0, cfg.vocab, size=8 + 4 * i,
-                                              dtype=np.int32)]),
-                    max_tokens=16)
-            for i in range(10)]
-
     t0 = time.time()
-    done = eng.run(reqs)
+    for i in range(10):
+        llm.submit(np.concatenate(
+            [system, rng.integers(0, cfg.vocab, size=8 + 4 * i,
+                                  dtype=np.int32)]), max_tokens=16)
+    done = llm.run_until_done()
     dt = time.time() - t0
     n_tok = sum(len(v) for v in done.values())
-    st = eng.stats()
+    st = llm.stats()
     pool = st["pool"]
     print(f"served {len(done)} requests / {n_tok} tokens through "
-          f"{eng.pcfg.max_batch} continuous-batching slots in {dt:.1f}s "
-          f"({n_tok / dt:.1f} tok/s on CPU)")
+          f"{llm.engine.pcfg.max_batch} continuous-batching slots in "
+          f"{dt:.1f}s ({n_tok / dt:.1f} tok/s on CPU)")
     print(f"pool: peak {pool.peak_live}/{pool.capacity} pages live, "
           f"{pool.shared_hits} prefix-share hits, "
           f"{pool.evictions} DLZS evictions; working set "
@@ -54,7 +56,7 @@ def main():
           f"decode compiled {st['decode_compiles']}x")
     for rid in sorted(done)[:3]:
         print(f"  req {rid}: {done[rid][:8]}...")
-    assert len(done) == len(reqs)
+    assert len(done) == 10
 
 
 if __name__ == "__main__":

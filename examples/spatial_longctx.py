@@ -1,5 +1,6 @@
 """Serve an ultra-long prompt by sequence-sharding it across a device
-mesh — the spatial deployment story end to end.
+mesh — the spatial deployment story end to end, through the unified
+``LLM`` front door.
 
 A prompt that overflows a single device's KV page pool is striped
 page-by-page over 4 shards (fake host devices here; real accelerators on
@@ -8,7 +9,9 @@ the cross-shard causal part merged as partial-softmax states, and every
 decode step broadcasts the query, attends shard-locally, and merges the
 partial (m, l, o) back — DRAttention's combination as a psum tree. Next
 to it, a handful of normal requests with mixed SLA classes show the
-orchestrator's QoS path on the same mesh.
+front door's QoS path on the same mesh. The request mix comes from the
+same scenario builder the spatial benchmark uses
+(``repro.serving.scenarios.longctx_mix``).
 
 Run:  PYTHONPATH=src python examples/spatial_longctx.py
 (relaunches itself with xla_force_host_platform_device_count=4)
@@ -20,53 +23,56 @@ N_SHARDS = 4
 
 
 def main():
-    import numpy as np
+    import dataclasses
+
     import jax
 
     from repro.configs import get_smoke_config
     from repro.models import lm
-    from repro.serving import PagedEngineCfg, PagedServingEngine, Request
-    from repro.serving.scheduler import SchedulerCfg
-    from repro.spatial import (Orchestrator, SpatialEngineCfg,
-                               SpatialServingEngine)
-    import dataclasses
+    from repro.serving import LLM, PagedEngineCfg, SchedulerCfg
+    from repro.serving.scenarios import longctx_mix
+    from repro.spatial import SpatialEngineCfg
 
     cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
     params = lm.init(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
 
     pages_local = 12                        # 11 usable pages per shard
-    long_prompt = rng.integers(0, cfg.vocab, size=500, dtype=np.int32)
+    # one 500-token interactive prompt + 3 mixed-SLA shorts — the shared
+    # scenario builder the spatial benchmark drives too
+    mix = longctx_mix(cfg.vocab, long_tokens=500, long_max_tokens=16,
+                      n_short=3, short_tokens=24, short_max_tokens=16)
 
     # a single-pool engine with the same per-device budget cannot admit it
-    single = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=4, page_size=16, n_pages=pages_local, hot_pages=8,
-        eos_id=-1))
+    single = LLM.from_config(cfg, backend="paged", params=params,
+                             engine_cfg=PagedEngineCfg(
+                                 max_batch=4, page_size=16,
+                                 n_pages=pages_local, hot_pages=8,
+                                 eos_id=-1))
     try:
-        single.submit(Request(rid=0, prompt=long_prompt, max_tokens=8))
+        single.submit(mix[0]["prompt"], max_tokens=mix[0]["max_tokens"])
         raise AssertionError("single pool admitted the long prompt?!")
     except ValueError as e:
         print(f"single device: {e}")
 
-    eng = SpatialServingEngine(cfg, params, SpatialEngineCfg(
-        n_shards=N_SHARDS, max_batch=4, page_size=16,
-        n_pages_local=pages_local, hot_pages_local=10, eos_id=-1),
-        SchedulerCfg(chunk_pages=2))
-    orch = Orchestrator(eng)
-    orch.submit(long_prompt, max_tokens=16, sla="interactive")
-    for i in range(3):
-        orch.submit(rng.integers(0, cfg.vocab, size=24, dtype=np.int32),
-                    max_tokens=16, sla=("standard", "batch", "batch")[i])
-    done = orch.run()
-    rep = orch.report()
+    llm = LLM.from_config(
+        cfg, backend="spatial", params=params,
+        engine_cfg=SpatialEngineCfg(
+            n_shards=N_SHARDS, max_batch=4, page_size=16,
+            n_pages_local=pages_local, hot_pages_local=10, eos_id=-1),
+        sched_cfg=SchedulerCfg(chunk_pages=2))
+    handles = [llm.submit(**r) for r in mix]
+    done = llm.run_until_done()
+    rep = llm.metrics()
 
-    st = eng.stats()
+    eng = llm.engine
+    st = llm.stats()
     print(f"\n{N_SHARDS} shards x {pages_local - 1} pages "
           f"({(pages_local - 1) * 16} tokens/shard) served a "
-          f"{len(long_prompt)}-token prompt + {len(done)-1} mixed-SLA "
-          f"requests:")
+          f"{len(mix[0]['prompt'])}-token prompt + {len(done) - 1} "
+          f"mixed-SLA requests:")
     print(f"  {rep['tokens']} tokens in {rep['wall_s']}s "
-          f"({rep['tok_s']} tok/s), ttft p50 {rep['ttft_p50_ms']} ms")
+          f"({rep['tok_s']} tok/s), ttft p50 {rep['ttft_p50_ms']} ms, "
+          f"occupancy {rep['occupancy']}")
     for sla, m in rep["per_sla"].items():
         print(f"  {sla:12s} ttft {m['ttft_mean_ms']} ms")
     print(f"  pools: {st['pools']['live']} live / "
@@ -77,8 +83,9 @@ def main():
     print(f"  NoC exchange (MRCA vs forced ring): "
           f"{cost['mrca']['latency_ns']:.0f} vs "
           f"{cost['naive_ring']['latency_ns']:.0f} ns/rotation")
-    print(f"  long-prompt output head: {done[0][:8]}...")
-    assert len(done[0]) == 16
+    long_handle = handles[0]
+    print(f"  long-prompt output head: {long_handle.tokens[:8]}...")
+    assert long_handle.done and len(long_handle.tokens) == 16
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Drives one of the three serving engines:
+Drives the unified serving front door (``repro.serving.api.LLM``) over
+one of the three backends:
 
 * ``--engine dense``   — the slot-based baseline (STAR sparse decode per
   the arch's config).
 * ``--engine paged``   — the paged KV-cache engine with chunked prefill
-  and the preemption scheduler.
+  and the preemption scheduler (batched varlen prefill with the
+  ``prefill_tokens="auto"`` budget controller by default).
 * ``--engine spatial`` — the sequence-sharded multi-device runtime
   (``--shards N``): context length scales with device count. When the
   process has fewer devices than shards it re-executes itself with
@@ -62,17 +64,15 @@ def main(argv=None):
                 args.shards, ["-m", "repro.launch.serve"]
                 + (argv if argv is not None else sys.argv[1:])))
 
+    import dataclasses
+
     import jax
     import numpy as np
 
     from repro.configs import ARCHS, get_config, get_smoke_config
     from repro.models import lm
-    from repro.serving import (EngineCfg, PagedEngineCfg,
-                               PagedServingEngine, SchedulerCfg,
-                               ServingEngine)
-    from repro.serving.engine import Request
-    from repro.spatial import (Orchestrator, SpatialEngineCfg,
-                               SpatialServingEngine)
+    from repro.serving import LLM, EngineCfg, PagedEngineCfg
+    from repro.spatial import SpatialEngineCfg
 
     if args.arch not in ARCHS:
         raise SystemExit(f"unknown arch {args.arch}; choose from "
@@ -81,47 +81,42 @@ def main(argv=None):
     if cfg.enc_layers or cfg.embeds_input:
         raise SystemExit(f"{args.arch}: frontend-stub archs serve via "
                          "examples/ drivers")
-    import dataclasses
     if args.engine == "spatial" and cfg.star is not None:
         cfg = dataclasses.replace(cfg, star=None)
     params = lm.init(jax.random.PRNGKey(0), cfg)
 
     if args.engine == "dense":
-        eng = ServingEngine(cfg, params, EngineCfg(
-            max_batch=args.slots, max_len=args.max_len, eos_id=-1))
+        engine_cfg = EngineCfg(max_batch=args.slots, max_len=args.max_len,
+                               eos_id=-1)
     elif args.engine == "paged":
-        eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        engine_cfg = PagedEngineCfg(
             max_batch=args.slots, page_size=args.page_size,
             n_pages=args.pages, hot_pages=args.max_len // args.page_size,
-            eos_id=-1), SchedulerCfg())
+            eos_id=-1)
     else:
-        eng = SpatialServingEngine(cfg, params, SpatialEngineCfg(
+        engine_cfg = SpatialEngineCfg(
             n_shards=args.shards, max_batch=args.slots,
             page_size=args.page_size, n_pages_local=args.pages,
-            hot_pages_local=args.max_len // args.page_size,
-            eos_id=-1), SchedulerCfg())
+            hot_pages_local=args.max_len // args.page_size, eos_id=-1)
+    llm = LLM.from_config(cfg, backend=args.engine, params=params,
+                          shards=args.shards, engine_cfg=engine_cfg)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
-    if args.engine == "dense":
-        reqs = [Request(rid=i, prompt=rng.integers(
-            0, cfg.vocab, size=args.prompt_len, dtype=np.int32),
-            max_tokens=args.max_tokens) for i in range(args.requests)]
-        done = eng.run(reqs)
-        n_tok = sum(len(v) for v in done.values())
-        extra = ""
-    else:
-        orch = Orchestrator(eng)
-        for i in range(args.requests):
-            orch.submit(rng.integers(0, cfg.vocab, size=args.prompt_len,
-                                     dtype=np.int32),
-                        max_tokens=args.max_tokens,
-                        sla=SLA_CYCLE[i % len(SLA_CYCLE)]
-                        if args.sla_mix else None)
-        done = orch.run()
-        rep = orch.report()
-        n_tok = rep["tokens"]
+    for i in range(args.requests):
+        llm.submit(rng.integers(0, cfg.vocab, size=args.prompt_len,
+                                dtype=np.int32),
+                   max_tokens=args.max_tokens,
+                   sla=SLA_CYCLE[i % len(SLA_CYCLE)]
+                   if args.sla_mix else None)
+    done = llm.run_until_done()
+    rep = llm.metrics()
+    n_tok = rep.get("tokens", sum(len(v) for v in done.values()))
+    extra = ""
+    if rep.get("requests"):
         extra = f", ttft_p50={rep['ttft_p50_ms']}ms"
+        if rep.get("occupancy") is not None:
+            extra += f", occupancy={rep['occupancy']}"
         if args.sla_mix:
             extra += "".join(
                 f", {k}={v['ttft_mean_ms']}ms"

@@ -1,6 +1,12 @@
+from repro.serving.api import LLM, RequestHandle
 from repro.serving.engine import EngineCfg, Request, ServingEngine
-from repro.serving.paged import PagedEngineCfg, PagedServingEngine
-from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
+from repro.serving.engine_core import Backend, EngineCore
+from repro.serving.paged import (PagedBackend, PagedEngineCfg,
+                                 PagedServingEngine)
+from repro.serving.scheduler import (BudgetController, NeedPages, Scheduler,
+                                     SchedulerCfg)
 
-__all__ = ["EngineCfg", "NeedPages", "PagedEngineCfg", "PagedServingEngine",
-           "Request", "Scheduler", "SchedulerCfg", "ServingEngine"]
+__all__ = ["Backend", "BudgetController", "EngineCfg", "EngineCore", "LLM",
+           "NeedPages", "PagedBackend", "PagedEngineCfg",
+           "PagedServingEngine", "Request", "RequestHandle", "Scheduler",
+           "SchedulerCfg", "ServingEngine"]

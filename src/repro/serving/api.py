@@ -1,0 +1,290 @@
+"""The serving front door: one ``LLM`` interface over every backend.
+
+``LLM`` is the single entry point ``launch/serve.py``, the benchmarks,
+the smoke tests and the examples drive. It wraps any serving engine —
+dense slot baseline, paged single-pool, or the sequence-sharded spatial
+runtime — behind one surface:
+
+    llm = LLM.from_config(cfg, backend="paged")     # or "dense"/"spatial"
+    h = llm.submit(prompt, max_tokens=64, sla="interactive")
+    for tok in h:                   # streams tokens, ticking the engine
+        ...
+    llm.run_until_done()            # or drive tick() yourself
+    print(llm.metrics())            # TTFT / tok/s / occupancy / preempts
+
+Layering (docs/serving.md): ``LLM`` owns request ids, submit-time
+records and the serve loop; ``EngineCore`` (one shared executor state
+machine) owns slots, tables and the swap area; a ``Backend`` owns device
+state. The paged/spatial backends default to the batched varlen prefill
+with ``prefill_tokens="auto"`` — the scheduler's EMA controller sizes
+the per-tick prefill budget from observed tick wall-times.
+
+``repro.spatial.Orchestrator`` is the deprecated predecessor of this
+class and now subclasses it (one-PR migration shim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.serving.engine import Request
+
+BACKENDS = ("dense", "paged", "spatial")
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    req: Request
+    submit_t: float
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.first_token_t is None \
+            else self.first_token_t - self.submit_t
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.done_t is None else self.done_t - self.submit_t
+
+
+class RequestHandle:
+    """One submitted request: stream its tokens or wait for the result.
+
+    Iterating the handle yields generated tokens as they appear,
+    driving ``llm.tick()`` whenever none are buffered — so a plain
+    ``for tok in handle`` serves the whole engine (co-resident requests
+    included) while streaming this one."""
+
+    def __init__(self, llm: "LLM", rid: int):
+        self._llm = llm
+        self.rid = rid
+
+    @property
+    def _record(self) -> RequestRecord:
+        return self._llm.records[self.rid]
+
+    @property
+    def tokens(self) -> list[int]:
+        """Tokens generated so far."""
+        return list(self._record.req.out or ())
+
+    @property
+    def done(self) -> bool:
+        return self._record.done_t is not None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return self._record.ttft
+
+    def __iter__(self) -> Iterator[int]:
+        sent = 0
+        while True:
+            out = self._record.req.out or ()
+            while sent < len(out):
+                yield int(out[sent])
+                sent += 1
+            if self.done:
+                return
+            if not self._llm.has_work():     # defensive: nothing can move
+                return
+            self._llm.tick()
+
+    def result(self, max_steps: int = 100_000) -> list[int]:
+        """Drive the engine until this request finishes; returns its
+        tokens (other requests keep being served along the way)."""
+        steps = 0
+        while not self.done and self._llm.has_work() and steps < max_steps:
+            self._llm.tick()
+            steps += 1
+        return self.tokens
+
+
+class LLM:
+    """Front-door serving interface over a constructed engine.
+
+    Use ``LLM.from_config`` to build engine + backend in one call, or
+    pass any engine exposing ``submit / step / queue / active``
+    (``PagedServingEngine``, ``SpatialServingEngine``, the dense
+    ``ServingEngine``)."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.records: dict[int, RequestRecord] = {}
+        self._pending: dict[int, RequestRecord] = {}   # not yet finished:
+        #                         the only records a tick has to touch, so
+        #                         a long-lived serve loop stays O(active)
+        #                         per tick, not O(all-time requests)
+        self._next_rid = 0
+        # the dense slot engine predates the scheduler protocol: its tick
+        # is an explicit admit() + generator-style step()
+        self._dense = not hasattr(engine, "sched")
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, model_cfg, *, backend: str = "paged",
+                    params=None, shards: int = 2, engine_cfg=None,
+                    sched_cfg=None, rng=None) -> "LLM":
+        """Build params (if not given), the backend engine, and the LLM.
+
+        ``backend`` picks the runtime: ``"dense"`` (slot baseline,
+        ``EngineCfg``), ``"paged"`` (single page pool,
+        ``PagedEngineCfg``), ``"spatial"`` (sequence-sharded across
+        ``shards`` devices, ``SpatialEngineCfg`` — the process must
+        already have that many jax devices, see
+        ``repro.spatial.ensure_host_devices``). ``engine_cfg`` overrides
+        the backend's default config; ``sched_cfg`` the scheduler's
+        (default: batched prefill with the ``prefill_tokens="auto"``
+        budget controller). ``rng`` seeds both param init and sampling.
+        """
+        import jax
+
+        from repro.models import lm
+        from repro.serving.engine import EngineCfg, ServingEngine
+        from repro.serving.paged import PagedEngineCfg, PagedServingEngine
+        from repro.serving.scheduler import SchedulerCfg
+
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}: choose from {BACKENDS}")
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        if params is None:
+            params = lm.init(rng, model_cfg)
+        if backend == "dense":
+            eng = ServingEngine(model_cfg, params,
+                                engine_cfg or EngineCfg(), rng=rng)
+            return cls(eng)
+        scfg = sched_cfg or SchedulerCfg(prefill_tokens="auto")
+        if backend == "paged":
+            eng = PagedServingEngine(model_cfg, params,
+                                     engine_cfg or PagedEngineCfg(),
+                                     scfg, rng=rng)
+        else:
+            from repro.spatial.engine import (SpatialEngineCfg,
+                                              SpatialServingEngine)
+            eng = SpatialServingEngine(
+                model_cfg, params,
+                engine_cfg or SpatialEngineCfg(n_shards=shards),
+                scfg, rng=rng)
+        return cls(eng)
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, prompt, max_tokens: int = 32, *,
+               sla: Optional[str] = None, priority: Optional[int] = None,
+               max_len: Optional[int] = None, rid: Optional[int] = None
+               ) -> RequestHandle:
+        """Queue one request; returns its handle. ``sla`` is the QoS
+        input — the scheduler maps it to a priority at submit (an
+        explicit ``priority`` wins)."""
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid + 1)
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_tokens=max_tokens, max_len=max_len,
+                      sla=None if priority is not None else sla,
+                      priority=priority or 0)
+        # submit first: a capacity rejection (ValueError) must not leave
+        # a phantom never-finishing record behind in a long-lived server
+        self.engine.submit(req)
+        rec = RequestRecord(req, time.perf_counter())
+        self.records[rid] = rec
+        self._pending[rid] = rec
+        return RequestHandle(self, rid)
+
+    # -- the serve loop ------------------------------------------------------
+
+    def tick(self) -> list[Request]:
+        """One engine step; stamps TTFT / completion times."""
+        if self._dense:
+            self.engine.admit()
+            finished = list(self.engine.step() or ())
+        else:
+            finished = self.engine.step() or []
+        now = time.perf_counter()
+        for rec in self._pending.values():
+            if rec.first_token_t is None and rec.req.out:
+                rec.first_token_t = now
+        for fin in finished:
+            rec = self._pending.pop(fin.rid)
+            rec.done_t = now
+        return finished
+
+    def has_work(self) -> bool:
+        return bool(self.engine.queue or self.engine.active)
+
+    def run_until_done(self, max_steps: int = 100_000) -> dict[int, list]:
+        """Drain every queued request; returns {rid: tokens}."""
+        done: dict[int, list] = {}
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            for fin in self.tick():
+                done[fin.rid] = fin.out
+            steps += 1
+        return done
+
+    # kept as the Orchestrator-era name
+    run = run_until_done
+
+    def clear_finished(self) -> None:
+        """Drop finished records (typically after ``metrics()``) so a
+        persistent server's history does not grow without bound."""
+        self.records = {rid: rec for rid, rec in self.records.items()
+                        if rec.done_t is None}
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> dict:
+        return self.engine.stats() if hasattr(self.engine, "stats") else {}
+
+    def metrics(self) -> dict:
+        """Serving snapshot: request/token counts, wall time, tok/s,
+        TTFT percentiles, per-SLA TTFT, pool occupancy and preemption
+        counters — everything the launchers and benchmarks report."""
+        st = self.stats()
+        occupancy = None
+        pool = st.get("pool") or st.get("pools")
+        if pool is not None:
+            live = pool.live if hasattr(pool, "live") else pool["live"]
+            cap = pool.capacity if hasattr(pool, "capacity") \
+                else pool["capacity"]
+            occupancy = round(live / max(cap, 1), 4)
+        sched = st.get("sched")
+        out = {
+            "occupancy": occupancy,
+            "preemptions": getattr(sched, "preemptions", 0),
+            "sheds": getattr(sched, "sheds", 0),
+            "resumes": getattr(sched, "resumes", 0),
+            "engine": st,
+        }
+        recs = [r for r in self.records.values() if r.done_t is not None]
+        if not recs:
+            out["requests"] = 0
+            return out
+        t0 = min(r.submit_t for r in recs)
+        t1 = max(r.done_t for r in recs)
+        n_tok = sum(len(r.req.out) for r in recs)
+        ttfts = sorted(r.ttft for r in recs if r.ttft is not None)
+        by_sla: dict[str, list] = {}
+        for r in recs:
+            by_sla.setdefault(r.req.sla or "default", []).append(r)
+        out.update({
+            "requests": len(recs),
+            "tokens": n_tok,
+            "wall_s": round(t1 - t0, 4),
+            "tok_s": round(n_tok / max(t1 - t0, 1e-9), 1),
+            "ttft_p50_ms": round(1e3 * ttfts[len(ttfts) // 2], 1),
+            "ttft_mean_ms": round(1e3 * float(np.mean(ttfts)), 1),
+            "per_sla": {
+                k: {"requests": len(v),
+                    "ttft_mean_ms": round(1e3 * float(np.mean(
+                        [r.ttft for r in v if r.ttft is not None])), 1)}
+                for k, v in sorted(by_sla.items())},
+        })
+        return out

@@ -1,0 +1,719 @@
+"""EngineCore — the one executor state machine behind every paged-pool
+serving backend.
+
+``PagedServingEngine`` and ``SpatialServingEngine`` used to carry two
+drifting copies of the identical serving scaffold: admission binding,
+chunked prefill, the batched varlen prefill's phase A (pending-cursor
+allocation) / phase A2 (same-tick prefix dedup) / wave split / commit,
+the fused decode loop, lazy cold-page shedding, and preempt/swap-in.
+Every scheduler-visible behavior now lives HERE, once, driven through a
+small formal ``Backend`` protocol that covers only what genuinely
+differs between a single page pool and a sharded mesh deployment:
+
+* pool primitives — allocate a chunk's pages, look up / register prefix
+  keys, drop references (``alloc_chunk`` / ``lookup_prefix`` /
+  ``register_prefix`` / ``decref_page`` / ``release_table``);
+* dispatch primitives — run one chunk, one batched wave, or one fused
+  decode step on the device(s) (``dispatch_chunk`` / ``dispatch_wave``
+  / ``decode_step``);
+* swap hooks — gather page rows to the host and write them back
+  (``gather_park`` / ``upload_park`` / ``page_in_extend``), with ONE
+  payload layout (flat page axis) so the host ``SwapArea`` format is
+  backend-agnostic and the lazy-shed machinery works everywhere.
+
+``EngineCore`` implements the ``serving.scheduler.Executor`` protocol —
+``engine.step()`` is one scheduler tick — and owns all host-side
+sequence state: slot binding, block tables, prefill cursors, decode
+budgets, the swap area. A backend owns only device state (pool slabs,
+jitted kernels) and pool bookkeeping. New scheduler or engine features
+(lazy shed, batched prefill, budget autotuning) therefore land once and
+every backend inherits them; the spatial engine's lazy cold-page shed
+exists purely because this class hosts the paged engine's.
+
+Most callers should not touch this class directly — the front-door
+``repro.serving.api.LLM`` wraps it (see docs/serving.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache import PoolExhausted, SwapArea, bucketing
+from repro.serving import swap_policy
+from repro.serving.engine import Request
+from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
+from repro.serving.swap_policy import PrefillProgress as _PrefillProgress
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Device/pool primitives a serving backend provides to EngineCore.
+
+    A backend is a *stateless policy-free* device driver: it never
+    decides WHO runs — it allocates, dispatches, and moves page bytes
+    when the core asks. All page addressing at this boundary is by
+    GLOBAL logical page index ``j`` (a position in a sequence's block
+    table); the backend maps ``j`` to whatever pool/shard owns it.
+    """
+
+    # -- static shape/config facts -------------------------------------
+    cfg: object                  # model config (vocab, pattern, ...)
+    params: object
+    page_size: int
+    max_batch: int
+    eos_id: int
+    greedy: bool
+    temperature: float
+    bucket_pow2: bool
+    share: bool                  # effective prefix sharing
+    keep_recent: int             # newest pages a lazy shed must keep
+    batched: bool                # batched varlen prefill configured
+    budget_tokens: Optional[int]  # flat-buffer width (one compile)
+    batch_wp: Optional[int]      # past-arena width (per pool shard)
+
+    # -- admission ------------------------------------------------------
+    def check_capacity(self, rid: int, total_tokens: int,
+                       need_pages: int) -> None:
+        """Raise ValueError when the request could NEVER fit."""
+
+    # -- pool primitives ------------------------------------------------
+    def alloc_chunk(self, pf, start_page: int, n_need: int
+                    ) -> tuple[list[int], list[int], bool]:
+        """Share/allocate pages for global range [start_page,
+        start_page+n_need). Returns (pages, fresh_globals, sharing);
+        raises PoolExhausted (``.shard`` names a starved pool shard)."""
+
+    def release_pages(self, pages: list[int], start_global: int) -> None:
+        """Decref not-yet-committed chunk pages (globals from
+        ``start_global``)."""
+
+    def release_table(self, table: list[int]) -> None:
+        """Drop a sequence's references (negative SHED entries skipped)."""
+
+    def lookup_prefix(self, g: int, key: tuple) -> Optional[int]: ...
+
+    def register_prefix(self, g: int, key: tuple, pid: int) -> None: ...
+
+    def decref_page(self, g: int, pid: int) -> None: ...
+
+    def register_prompt_pages(self, toks, table, fresh_globals,
+                              start_page: int) -> None: ...
+
+    def ref_of(self, table, j: int) -> int: ...
+
+    def held_pages(self, table, shard: Optional[int]) -> int: ...
+
+    def page_on_shard(self, j: int, shard: Optional[int]) -> bool:
+        """Does freeing global page ``j`` relieve pool shard ``shard``?
+        Single-pool backends always say True."""
+
+    # -- prefill dispatch ------------------------------------------------
+    def dispatch_chunk(self, pf, table, start: int, end: int, width: int,
+                       last_idx: int, pages: list[int],
+                       fresh_globals: list[int]):
+        """Compute + scatter ONE chunk; returns the logits row of
+        ``last_idx`` (legacy per-sequence path). May stay a device
+        array — the core only materializes the FINAL chunk's row."""
+
+    def arena_cost(self, past_pages: int) -> list[int]:
+        """Per-pool-shard past-arena slots a lane with ``past_pages``
+        past pages occupies in a batched wave."""
+
+    def dispatch_wave(self, flat, seg, pos, past_len, last_index,
+                      lanes: list[dict]) -> dict[int, np.ndarray]:
+        """Run one batched varlen wave (shared flat buffers prepacked by
+        the core; ``lanes`` carry per-slot tables/pages/fresh sets) and
+        return {slot: host logits row}."""
+
+    # -- decode ----------------------------------------------------------
+    def decode_step(self, slots, tables, lengths) -> jax.Array:
+        """Grow/COW tail pages, select hot pages, run the fused decode;
+        returns device logits [max_batch, >=vocab]. Raises NeedPages."""
+
+    def set_last_token(self, slot: int, tok: int) -> None: ...
+
+    def get_last_token(self, slot: int) -> int: ...
+
+    def commit_tokens(self, next_tokens: jax.Array) -> None:
+        """Install the sampled tokens as the next decode input."""
+
+    # -- shed / swap ------------------------------------------------------
+    def hot_logical(self, table) -> set[int]:
+        """Global logical indices the decode gather currently keeps hot."""
+
+    def gather_park(self, table, js: list[int]):
+        """Pull pages ``js`` to the host as a tree whose page axis (1) is
+        flat payload order — one layout for every backend, so shed and
+        swap payloads concatenate with ``concat_rows``."""
+
+    def can_hold(self, park_js: list[int]) -> bool:
+        """Cheap pre-check: could the pool(s) supply ``park_js`` now?"""
+
+    def page_in_extend(self, park_js: list[int]):
+        """Return a ``j -> fresh pid`` allocator for a page-in plan
+        (scores pulled once up front). May raise PoolExhausted lazily."""
+
+    def upload_park(self, rows, uploads: list[tuple[int, int, int]]
+                    ) -> None:
+        """Write payload rows back: ``uploads`` is [(payload position,
+        global index j, physical id)]."""
+
+    # -- observability ----------------------------------------------------
+    def stats(self) -> dict: ...
+
+
+def concat_rows(a, b):
+    """Join two flat-payload host row trees along the page axis."""
+    return jax.tree.map(lambda x, y: np.concatenate([x, y], axis=1), a, b)
+
+
+def _rows_bytes(rows) -> int:
+    return 0 if rows is None else sum(
+        leaf.nbytes for leaf in jax.tree.leaves(rows))
+
+
+class EngineCore:
+    """Scheduler-driven executor over a ``Backend``.
+
+    Single-step flow (``step()`` = one scheduler tick):
+      admit   — swap preempted sequences back in, bind waiting requests
+                to free slots (no page allocation yet)
+      prefill — with a ``SchedulerCfg.prefill_tokens`` budget: pack
+                chunks of EVERY prefilling prompt (consecutive chunks
+                merge) into ONE batched varlen dispatch; legacy path: up
+                to ``prefill_per_step`` one-sequence chunk dispatches
+      decode  — one fused decode step over every decode-phase slot;
+                finished sequences are reaped and their pages released
+    """
+
+    def __init__(self, backend: Backend,
+                 scfg: Optional[SchedulerCfg] = None,
+                 rng: Optional[jax.Array] = None):
+        self.backend = backend
+        self.cfg = backend.cfg
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.sched = Scheduler(scfg or SchedulerCfg())
+        if backend.batched and self.sched.cfg.prefill_tokens == "auto":
+            chunk_tok = self.sched.cfg.chunk_pages * backend.page_size
+            self.sched.attach_budget(lo=chunk_tok,
+                                     hi=backend.budget_tokens,
+                                     quantum=backend.page_size)
+
+        self.swap_area = SwapArea()
+        self.active: dict[int, Request] = {}       # slot -> request
+        self.budget: dict[int, int] = {}           # decode tokens left
+        self.tables: dict[int, list[int]] = {}     # slot -> block table
+        self._pf: dict[int, _PrefillProgress] = {}  # slots mid-prefill
+        self._prefill_done: list[tuple[int, Request]] = []  # finished at
+        #                              prefill (budget 0): reaped next decode
+        self.lengths = np.zeros((backend.max_batch,), np.int64)
+        self.free = list(range(backend.max_batch))
+
+    @property
+    def params(self):
+        return self.backend.params
+
+    # -- queueing -----------------------------------------------------------
+
+    def submit(self, req: Request):
+        if req.max_len is not None and req.max_len <= len(req.prompt):
+            raise ValueError(
+                f"request {req.rid}: max_len {req.max_len} leaves no room "
+                f"after a {len(req.prompt)}-token prompt")
+        total = len(req.prompt) + req.max_tokens
+        if req.max_len is not None:
+            total = min(total, req.max_len)
+        need = -(-total // self.backend.page_size)
+        self.backend.check_capacity(req.rid, total, need)
+        req.out = []
+        self.sched.submit(req)
+
+    @property
+    def queue(self) -> list[Request]:
+        """Waiting work (fresh + preempted), highest priority first."""
+        return self.sched.queued_requests()
+
+    # -- executor protocol: admission --------------------------------------
+
+    def free_slot_available(self) -> bool:
+        return bool(self.free)
+
+    def exec_admit(self, req: Request) -> int:
+        """Bind a request to a slot. Pages come later, chunk by chunk.
+
+        A request carrying prior output is a recompute-resume: its emitted
+        tokens are appended to the prompt and replayed through prefill
+        (exact under greedy decode), with the final sampled token
+        suppressed — it was already emitted before preemption."""
+        slot = self.free.pop(0)
+        out = req.out or []
+        if out:
+            prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int64),
+                 np.asarray(out[:-1], np.int64)])
+        else:
+            prompt = np.asarray(req.prompt, np.int64)
+        spans = bucketing.chunk_spans(
+            len(prompt), self.backend.page_size, self.sched.cfg.chunk_pages,
+            pow2=self.backend.bucket_pow2)
+        share = self.backend.share
+        self._pf[slot] = _PrefillProgress(
+            prompt=prompt,
+            toks=tuple(int(x) for x in prompt) if share else None,
+            spans=spans, chunk=0, sharing=share,
+            suppress_first=bool(out))
+        self.tables[slot] = []
+        self.active[slot] = req
+        self.lengths[slot] = 0
+        return slot
+
+    def prefill_chunks_left(self, slot: int) -> int:
+        pf = self._pf.get(slot)
+        return 0 if pf is None else len(pf.spans) - pf.chunk
+
+    def held_pages(self, slot: int, shard: Optional[int] = None) -> int:
+        return self.backend.held_pages(self.tables.get(slot, ()), shard)
+
+    # -- executor protocol: chunked prefill ---------------------------------
+
+    def _alloc_chunk(self, slot: int, pf, start_page: int, n_need: int):
+        """Backend allocation with pool pressure translated into the
+        scheduler's NeedPages signal (shard-tagged when the backend's
+        exhaustion names a starved pool shard)."""
+        try:
+            return self.backend.alloc_chunk(pf, start_page, n_need)
+        except PoolExhausted as e:
+            raise NeedPages(slot, getattr(e, "shard", None)) from None
+
+    def _finish_prefill(self, slot: int, pf, logits_row, done_out=None
+                        ) -> None:
+        """Prompt complete: emit the first token, enter decode phase (or
+        reap immediately when the token budget is already spent)."""
+        req = self.active[slot]
+        if pf.suppress_first:
+            tok = int(req.out[-1])
+        else:
+            tok = int(np.argmax(logits_row[:self.cfg.vocab]))
+            req.out.append(tok)
+        del self._pf[slot]
+        self.lengths[slot] = len(pf.prompt)
+        self.backend.set_last_token(slot, tok)
+        self.budget[slot] = req.max_tokens - len(req.out)
+        if done_out is not None:
+            done_out.append(slot)
+        if self.budget[slot] <= 0:     # e.g. max_tokens=1: done at prefill
+            self.backend.release_table(self.tables.pop(slot))
+            del self.active[slot]
+            del self.budget[slot]
+            self.lengths[slot] = 0
+            self.free.append(slot)
+            self._prefill_done.append((slot, req))
+
+    def exec_prefill_chunk(self, slot: int) -> bool:
+        """Share/allocate + compute + scatter ONE chunk of ``slot``'s
+        prompt. Returns True once the prompt is complete (slot enters
+        decode). Raises NeedPages when the pool cannot supply the chunk."""
+        pf = self._pf[slot]
+        page = self.backend.page_size
+        start, end, width = pf.spans[pf.chunk]
+        start_page = start // page
+        n_need = -(-end // page) - start_page
+        pages, fresh_globals, sharing = self._alloc_chunk(
+            slot, pf, start_page, n_need)
+        pf.sharing = sharing
+        table = self.tables[slot]
+        table.extend(pages)
+        t = len(pf.prompt)
+        last = pf.chunk == len(pf.spans) - 1
+
+        logits = None
+        if fresh_globals or last:  # fully-shared middle chunks skip compute
+            last_idx = (t - 1 if last else end - 1) - start
+            logits = self.backend.dispatch_chunk(
+                pf, table, start, end, width, last_idx, pages,
+                fresh_globals)
+            if self.backend.share and pf.toks is not None:
+                self.backend.register_prompt_pages(pf.toks, table,
+                                                   fresh_globals,
+                                                   start_page)
+        pf.chunk += 1
+        if not last:
+            return False
+        self._finish_prefill(slot, pf, logits)
+        return True
+
+    # -- executor protocol: batched varlen chunk prefill --------------------
+
+    def pending_chunk_widths(self, slot: int) -> list[int]:
+        pf = self._pf[slot]
+        return [w for _, _, w in pf.spans[pf.chunk:]]
+
+    @staticmethod
+    def _merged_span(pf, n: int) -> tuple[int, int, int]:
+        """Span covering the next ``n`` CONSECUTIVE chunks as one varlen
+        piece: non-final chunks are exactly full, so only the tail can
+        pad — merged chunks behave exactly like one larger chunk."""
+        start = pf.spans[pf.chunk][0]
+        end = pf.spans[pf.chunk + n - 1][1]
+        width = sum(w for _, _, w in pf.spans[pf.chunk:pf.chunk + n])
+        return start, end, width
+
+    def exec_prefill_chunk_batch(self, batch: list[tuple[int, int]]
+                                 ) -> list[int]:
+        """Advance every ``(slot, n_chunks)`` entry in ONE compiled
+        varlen dispatch over a fixed ``[1, budget_tokens]`` flat buffer.
+
+        Three phases: (A) allocate each slot's merged-span pages —
+        idempotent via ``pf.pending``, so a NeedPages retry after
+        preemption reuses what already succeeded; (A2) same-tick prefix
+        dedup; (B) pack the spans back to back into the flat buffer
+        (segment ids, absolute positions) and hand the wave to the
+        backend's dispatch — fully prefix-shared non-final spans need no
+        lanes at all; (C) commit: extend tables, advance cursors, emit
+        first tokens for completed prompts. Nothing commits before the
+        dispatch succeeds, so a phase-A NeedPages leaves every pending
+        cursor untouched. In the rare case the packed spans' pasts
+        overflow the fixed arena, phase B splits into several same-shape
+        waves (still one compilation). Returns the slots entering
+        decode."""
+        page = self.backend.page_size
+        for slot, n in batch:                  # phase A: allocation
+            pf = self._pf[slot]
+            if pf.pending is not None:
+                continue
+            n = max(1, min(n, len(pf.spans) - pf.chunk))
+            start, end, _ = self._merged_span(pf, n)
+            start_page = start // page
+            n_need = -(-end // page) - start_page
+            pages, fresh_globals, sharing = self._alloc_chunk(
+                slot, pf, start_page, n_need)
+            pf.sharing = sharing
+            pf.pending = (pages, fresh_globals, n)
+
+        # Phase A2 — same-tick prefix dedup. Batched admission runs many
+        # same-prefix prompts' chunks in ONE tick, so the ordinary
+        # register-after-compute flow would never let them share (each
+        # allocates before any registers). Once every allocation above
+        # succeeded nothing can raise before the dispatch commits, so it
+        # is safe to register fresh full prompt pages NOW and point later
+        # slots in the batch at them — the owning lane's scatter writes
+        # the content within this same dispatch.
+        slots = [s for s, _ in batch]
+        if self.backend.share:
+            for slot in slots:
+                pf = self._pf[slot]
+                if pf.toks is None:
+                    continue
+                pages, fresh_globals, n = pf.pending
+                start_page = pf.spans[pf.chunk][0] // page
+                fresh_set = set(fresh_globals)
+                new_fresh = []
+                for cj, pid in enumerate(pages):
+                    g = start_page + cj
+                    if g not in fresh_set:
+                        continue
+                    end = (g + 1) * page
+                    if end > len(pf.toks):
+                        new_fresh.append(g)
+                        continue
+                    key = pf.toks[:end]
+                    hit = self.backend.lookup_prefix(g, key)
+                    if hit is not None:        # an earlier lane owns it
+                        self.backend.decref_page(g, pid)
+                        pages[cj] = hit
+                    else:
+                        self.backend.register_prefix(g, key, pid)
+                        new_fresh.append(g)
+                pf.pending = (pages, new_fresh, n)
+
+        def is_last(slot):
+            pf = self._pf[slot]
+            return pf.chunk + pf.pending[2] == len(pf.spans)
+
+        compute = [s for s in slots
+                   if self._pf[s].pending[1] or is_last(s)]
+
+        # wave split: spans whose combined past pages (or tokens, after a
+        # pressure retry reshuffled the batch) overflow the fixed buffers
+        # spill to a follow-up dispatch of the SAME compiled shape. Past
+        # cost is per pool shard (a striped backend fills several arenas)
+        waves: list[list[int]] = []
+        cur: list[int] = []
+        cur_p: Optional[list[int]] = None
+        cur_t = 0
+        for slot in compute:
+            pf = self._pf[slot]
+            start, _, width = self._merged_span(pf, pf.pending[2])
+            cost = self.backend.arena_cost(start // page)
+            if cur and (cur_t + width > self.backend.budget_tokens
+                        or any(c + d > self.backend.batch_wp
+                               for c, d in zip(cur_p, cost))):
+                waves.append(cur)
+                cur, cur_p, cur_t = [], None, 0
+            cur.append(slot)
+            cur_p = cost if cur_p is None \
+                else [c + d for c, d in zip(cur_p, cost)]
+            cur_t += width
+        if cur:
+            waves.append(cur)
+
+        logits_by_slot: dict[int, np.ndarray] = {}
+        for wave in waves:                     # phase B: dispatch(es)
+            self._dispatch_chunk_wave(wave, logits_by_slot)
+
+        done: list[int] = []
+        for slot in slots:                     # phase C: commit
+            pf = self._pf[slot]
+            pages, fresh_globals, n = pf.pending
+            self.tables[slot].extend(pages)
+            # prefix registration already happened in phase A2 — the
+            # sole registration point, which is what makes same-tick
+            # sharing safe (content lands via this dispatch's scatter)
+            pf.pending = None
+            pf.chunk += n
+            if pf.chunk < len(pf.spans):
+                continue
+            self._finish_prefill(slot, pf, logits_by_slot.get(slot),
+                                 done_out=done)
+        return done
+
+    def _dispatch_chunk_wave(self, wave: list[int],
+                             logits_by_slot: dict) -> None:
+        """Pack one wave of merged spans into the shared flat buffer
+        (tokens, segment ids, absolute positions, per-lane past lengths
+        and last indices) and hand it to the backend dispatch, which
+        adds its pool-specific past arena + scatter targets."""
+        page = self.backend.page_size
+        b_tok, lanes_n = self.backend.budget_tokens, self.backend.max_batch
+        flat = np.zeros((b_tok,), np.int32)
+        seg = np.full((b_tok,), -1, np.int32)
+        pos = np.zeros((b_tok,), np.int32)
+        past_len = np.zeros((lanes_n,), np.int32)
+        last_index = np.zeros((lanes_n,), np.int32)
+        cursor = 0
+        lanes: list[dict] = []
+        for slot in wave:
+            pf = self._pf[slot]
+            pages, fresh_globals, n = pf.pending
+            start, end, width = self._merged_span(pf, n)
+            last = pf.chunk + n == len(pf.spans)
+            t = len(pf.prompt)
+            flat[cursor:cursor + width] = bucketing.pad_tokens(
+                pf.prompt[start:end], width)
+            seg[cursor:cursor + width] = slot
+            pos[cursor:cursor + width] = start + np.arange(width)
+            last_index[slot] = cursor + (t - 1 if last else end - 1) \
+                - start
+            past_len[slot] = start
+            lanes.append({"slot": slot, "table": self.tables[slot],
+                          "pages": pages, "fresh": set(fresh_globals),
+                          "start_page": start // page,
+                          "base": cursor // page})
+            cursor += width
+        logits_by_slot.update(self.backend.dispatch_wave(
+            flat, seg, pos, past_len, last_index, lanes))
+
+    # -- executor protocol: decode ------------------------------------------
+
+    def _decode_slots(self) -> list[int]:
+        return [s for s in self.active if s not in self._pf]
+
+    def exec_decode(self) -> list[tuple[int, Request]]:
+        slots = self._decode_slots()
+        if not slots:
+            done_early, self._prefill_done = self._prefill_done, []
+            return done_early
+        # may raise NeedPages (tail-page growth) — drain the
+        # prefill-finished list only once nothing can raise anymore
+        logits = self.backend.decode_step(slots, self.tables, self.lengths)
+        done_early, self._prefill_done = self._prefill_done, []
+        logits = logits[:, :self.cfg.vocab]
+        if self.backend.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            self.rng, sub = jax.random.split(self.rng)
+            nxt = jax.random.categorical(
+                sub, logits / self.backend.temperature, axis=-1)
+        self.backend.commit_tokens(nxt)
+        nxt_host = np.asarray(nxt)
+        finished = done_early
+        for slot in slots:
+            req = self.active[slot]
+            tok = int(nxt_host[slot])
+            req.out.append(tok)
+            self.lengths[slot] += 1
+            self.budget[slot] -= 1
+            limit = req.max_len
+            done = (tok == self.backend.eos_id or self.budget[slot] <= 0
+                    or (limit is not None
+                        and self.lengths[slot] + 1 >= limit))
+            if done:
+                self.backend.release_table(self.tables.pop(slot))
+                self.swap_area.discard(req.rid)   # lazily-shed pages
+                del self.active[slot]
+                del self.budget[slot]
+                self.lengths[slot] = 0
+                self.free.append(slot)
+                finished.append((slot, req))
+        return finished
+
+    # -- executor protocol: lazy shed / preemption / swap -------------------
+
+    def exec_shed_cold(self, slot: int, shard: Optional[int] = None
+                       ) -> int:
+        """Lazy swap: park the slot's DLZS-cold uniquely-owned pages on
+        the host while it KEEPS decoding. Only pages outside both the
+        recent window and the current hot-page selection are shed — pages
+        the decode gather was already skipping — so the victim's hot-set
+        output is unchanged; the pool just gets its cold pages back.
+        Table entries become the SHED sentinel; a later full preemption
+        merges the shed payload into the ordinary swap payload. When the
+        pressure names a starved pool shard, only pages owned there are
+        shed (freeing elsewhere would not unblock the needy sequence).
+        Returns pages freed (0: mid-prefill, or nothing sheddable)."""
+        if slot in self._pf or slot not in self.tables:
+            return 0                 # prefill still reads its past pages
+        table = self.tables[slot]
+        hot = self.backend.hot_logical(table)
+        cands = swap_policy.shed_candidates(
+            table, hot, int(self.lengths[slot]), self.backend.page_size,
+            lambda j: self.backend.ref_of(table, j),
+            keep_recent=self.backend.keep_recent)
+        cands = [j for j in cands
+                 if self.backend.page_on_shard(j, shard)]
+        if not cands:
+            return 0
+        req = self.active[slot]
+        host = self.backend.gather_park(table, cands)
+        state = swap_policy.merge_shed(
+            {"rows": host, "park": list(cands)},
+            self.swap_area.discard(req.rid), concat_rows)
+        self.swap_area.put(req.rid, state, _rows_bytes(state["rows"]))
+        for j in cands:
+            self.backend.decref_page(j, table[j])
+            table[j] = swap_policy.SHED
+        return len(cands)
+
+    def exec_preempt(self, slot: int, swap: bool) -> bool:
+        """Evict ``slot``. swap=True parks its page contents in the host
+        SwapArea (resume = page-in); otherwise pages are dropped and the
+        sequence recomputes from prompt + emitted tokens on re-admission.
+
+        Shared-prefix-aware parking (swap_policy core): only uniquely-
+        owned (ref-1) pages are gathered to the host. A page some other
+        sequence also references keeps OUR reference while swapped — its
+        content cannot be freed or rewritten underneath us, so resume
+        reuses the same physical page with zero upload. Pages a lazy
+        shed already parked merge into the payload."""
+        req = self.active.pop(slot)
+        table = self.tables.pop(slot)
+        pf = self._pf.pop(slot, None)
+        swap_policy.release_pending(
+            pf, lambda pgs: self.backend.release_pages(pgs, len(table)))
+        swapped = False
+        if swap and table:
+            kept, park, shed = swap_policy.partition_table(
+                table, lambda j: self.backend.ref_of(table, j))
+            # gather BEFORE decref: page content is only guaranteed
+            # until the ids return to the free list
+            host = self.backend.gather_park(table, park) if park else None
+            state = swap_policy.progress_state(
+                req, pf, share=self.backend.share,
+                length=int(self.lengths[slot]),
+                last_token=self.backend.get_last_token(slot),
+                budget=self.budget.get(slot, 0))
+            state.update(rows=host, park=park, kept=kept,
+                         n_pages=len(table))
+            state = swap_policy.merge_shed(
+                state, self.swap_area.discard(req.rid) if shed else None,
+                concat_rows)
+            self.swap_area.put(req.rid, state, _rows_bytes(state["rows"]))
+            # release ONLY the parked pages; kept (shared) pages retain
+            # this sequence's reference until it resumes
+            for j in park:
+                self.backend.decref_page(j, table[j])
+            swapped = True
+        else:
+            self.swap_area.discard(req.rid)    # stale lazy-shed payload
+            self.backend.release_table(table)
+        self.budget.pop(slot, None)
+        self.lengths[slot] = 0
+        self.free.append(slot)
+        return swapped
+
+    def exec_swap_in(self, req: Request) -> Optional[int]:
+        """Page a swapped sequence back in, or None if the pool cannot hold
+        its block table right now.
+
+        Pages kept live at swap-out (shared at the time) are reused as-is.
+        Parked full-prompt pages first retry the prefix index — if an
+        identical prefix is pooled (often our own parked copy, cached at
+        release), the page revives with no upload; only genuine misses
+        allocate a fresh page and upload the parked rows
+        (swap_policy.plan_page_in, rollback on exhaustion)."""
+        state = self.swap_area.peek(req.rid)
+        park = state["park"]
+        # conservative: lookups below can only reduce the real need
+        if not self.backend.can_hold(park):
+            return None
+        extend = self.backend.page_in_extend(park)
+        plan = swap_policy.plan_page_in(
+            park, state["lookup_toks"], self.backend.page_size,
+            lookup=lambda j, key: self.backend.lookup_prefix(j, key),
+            extend=lambda j: extend(j),
+            rollback=lambda j, pid: self.backend.decref_page(j, pid))
+        if plan is None:           # defensive: entry stays put, retry later
+            return None
+        filled, upload = plan
+        state = self.swap_area.take(req.rid)   # committed: pages acquired
+        slot = self.free.pop(0)
+        for j, pid in state["kept"]:
+            filled[j] = pid
+        pages = [filled[j] for j in range(state["n_pages"])]
+        if upload:
+            self.backend.upload_park(
+                state["rows"],
+                [(pos, park[pos], pid) for pos, pid in upload])
+        self.tables[slot] = pages
+        self.active[slot] = req
+        pf = swap_policy.restore_progress(state)
+        if pf is not None:
+            self._pf[slot] = pf
+            self.lengths[slot] = 0
+        else:
+            self.lengths[slot] = state["length"]
+            self.backend.set_last_token(slot, state["last_token"])
+            self.budget[slot] = state["budget"]
+        return slot
+
+    # -- driver -------------------------------------------------------------
+
+    def step(self) -> list[Request]:
+        """One scheduler tick: admit / one-or-more prefill chunks / fused
+        decode. Returns the requests that finished this step."""
+        return self.sched.tick(self)
+
+    def run(self, requests: list[Request], max_steps: int = 10_000):
+        """Serve a request list to completion; returns {rid: tokens}."""
+        for r in requests:
+            self.submit(r)
+        done: dict[int, list] = {}
+        steps = 0
+        while self.sched.has_work() and steps < max_steps:
+            for fin in self.step():
+                done[fin.rid] = fin.out
+            steps += 1
+        return done
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        st = self.backend.stats()
+        st["swap"] = self.swap_area.stats()
+        st["sched"] = dataclasses.replace(self.sched.stats)
+        return st

@@ -1,48 +1,38 @@
-"""Continuous-batching engine on the paged KV-cache subsystem.
+"""Single-pool serving backend on the paged KV-cache subsystem.
 
 Replaces the dense slot engine's one ``[max_batch, max_len]`` KV slab with
 the global page pool (repro.kvcache): requests own block tables of
 fixed-size pages, identical prompt prefixes share pages copy-on-write, and
 the DLZS retention policy picks which pages each decode step gathers.
 
-The engine is a thin EXECUTOR: scheduling policy — who admits, which
-prompt prefills its next chunk, who gets preempted under pool pressure —
-lives in ``repro.serving.scheduler``. The engine owns device state (pool
-slabs, block tables, jitted kernels) and exposes the ``exec_*`` primitives
-the scheduler drives:
+Layering (see docs/serving.md):
 
-* Chunked prefill — prompts prefill in page-aligned chunks
-  (``SchedulerCfg.chunk_pages``) that interleave with decode steps, so a
-  long prompt no longer stalls every running sequence and short-request
-  TTFT stays bounded. Chunk 0 reuses the bucketed monolithic prefill;
-  later chunks run ``lm.prefill_chunk_paged`` against the pages earlier
-  chunks wrote. Pages are allocated chunk-by-chunk — admission reserves
-  nothing up front — and chunks fully covered by shared prefix pages skip
-  their compute entirely.
-* Preemption instead of rejection — pool pressure (a chunk allocation or a
-  decode page-grow that cannot be satisfied) preempts the lowest-priority
-  running sequence: its pages are gathered to the host ``SwapArea``
-  (swap mode; resume is a page-in) or dropped and replayed through a
-  chunked prefill of prompt + generated tokens (recompute mode). Requests
-  are only ever refused at ``submit`` when they could never fit the pool.
+* ``repro.serving.scheduler.Scheduler`` — policy: who admits, which
+  prompt prefills next, who is preempted under pool pressure.
+* ``repro.serving.engine_core.EngineCore`` — the executor state machine
+  the scheduler drives: admission binding, chunked + batched varlen
+  prefill (the allocate/dedup/wave-split/commit scaffold lives THERE,
+  once), the fused decode loop, lazy cold-page shedding,
+  preempt/swap-in. Shared with the spatial engine.
+* ``PagedBackend`` (this module) — the device driver EngineCore calls:
+  pool slabs, jitted prefill/chunk/decode/scatter kernels, single-pool
+  allocation and prefix indexing.
+
+``PagedServingEngine`` is the thin composition of the three — construct
+it directly, or (preferred) through ``repro.serving.api.LLM``.
+
+Properties carried by this backend:
+
+* Chunked prefill — prompts prefill in page-aligned chunks that
+  interleave with decode steps. Chunk 0 reuses the bucketed monolithic
+  prefill; later chunks run ``lm.prefill_chunk_paged`` against the pages
+  earlier chunks wrote. Pages are allocated chunk-by-chunk.
 * ``max_len`` is a per-request property; admission is length-bucketed so
   prefill compiles O(log max_len) shapes; decode compiles ONCE — its
   shapes depend only on (max_batch, hot_pages, pool size).
 * Decode gathers at most ``hot_pages`` pages per sequence, DLZS page
   scores ranking the cold pages (exact, token-parity with the dense
   engine, when ``hot_pages`` covers the longest request).
-
-Single-step flow (``step()`` = one scheduler tick):
-  admit   — swap preempted sequences back in, bind waiting requests to
-            free slots (no page allocation yet)
-  prefill — with a ``SchedulerCfg.prefill_tokens`` budget: pack chunks
-            of EVERY prefilling prompt (consecutive chunks merge) into
-            ONE batched varlen dispatch (``exec_prefill_chunk_batch``);
-            legacy path: up to ``prefill_per_step`` one-sequence chunk
-            dispatches. Either way: share/allocate the chunk's pages,
-            compute, scatter into pool
-  decode  — ensure tail pages (COW guard), select hot pages, fused decode;
-            finished sequences are reaped and their pages released
 """
 
 from __future__ import annotations
@@ -56,12 +46,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
-                           SwapArea, bucketing, metrics)
+                           bucketing, metrics)
 from repro.models import lm
-from repro.serving import swap_policy
-from repro.serving.engine import Request
-from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
-from repro.serving.swap_policy import PrefillProgress as _PrefillProgress
+from repro.serving.engine_core import EngineCore
+from repro.serving.scheduler import (NeedPages, SchedulerCfg,
+                                     resolve_prefill_tokens)
+
+__all__ = ["PagedEngineCfg", "PagedBackend", "PagedServingEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,10 +76,11 @@ class PagedEngineCfg:
     # could not fit the window.
 
 
-class PagedServingEngine:
+class PagedBackend:
+    """Single-pool ``engine_core.Backend`` implementation."""
+
     def __init__(self, model_cfg, params, pcfg: PagedEngineCfg,
-                 scfg: Optional[SchedulerCfg] = None,
-                 rng: Optional[jax.Array] = None):
+                 scfg: SchedulerCfg):
         if any(blk.kind != "attn" for blk in model_cfg.pattern):
             raise ValueError("paged engine supports attention-only patterns")
         if model_cfg.enc_layers or not model_cfg.causal:
@@ -96,17 +88,24 @@ class PagedServingEngine:
         self.cfg = model_cfg
         self.pcfg = pcfg
         self.params = params
-        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self.sched = Scheduler(scfg or SchedulerCfg())
+
+        # protocol facts EngineCore reads
+        self.page_size = pcfg.page_size
+        self.max_batch = pcfg.max_batch
+        self.eos_id = pcfg.eos_id
+        self.greedy = pcfg.greedy
+        self.temperature = pcfg.temperature
+        self.bucket_pow2 = pcfg.bucket_pow2
+        self.keep_recent = max(1, pcfg.recent_pages)
 
         # Prefix sharing is exact only if a full page never splits a STAR
         # prefill q-tile (tile selection mixes rows within a tile).
-        self._share = pcfg.share_prefixes and (
+        self.share = pcfg.share_prefixes and (
             model_cfg.star is None
             or pcfg.page_size % model_cfg.star.block_q == 0)
         if (model_cfg.star is not None
-                and self.sched.cfg.chunk_pages is not None
-                and (self.sched.cfg.chunk_pages * pcfg.page_size)
+                and scfg.chunk_pages is not None
+                and (scfg.chunk_pages * pcfg.page_size)
                 % model_cfg.star.block_q != 0):
             raise ValueError(
                 "chunk_pages * page_size must be a multiple of the STAR "
@@ -115,26 +114,17 @@ class PagedServingEngine:
         self.pool = PagePool(pcfg.n_pages, pcfg.page_size)
         self.alloc = PagedAllocator(self.pool,
                                     recent_pages=pcfg.recent_pages)
-        self.swap_area = SwapArea()
-        self.active: dict[int, Request] = {}       # slot -> request
-        self.budget: dict[int, int] = {}           # decode tokens left
-        self.tables: dict[int, list[int]] = {}     # slot -> block table
-        self._pf: dict[int, _PrefillProgress] = {}  # slots mid-prefill
-        self._prefill_done: list[tuple[int, Request]] = []  # finished at
-        #                              prefill (budget 0): reaped next decode
-        self.lengths = np.zeros((pcfg.max_batch,), np.int64)
-        self.free = list(range(pcfg.max_batch))
 
         # batched varlen chunk prefill: fixed flat-buffer width + fixed
         # past-gather window => exactly one prefill compilation
-        scfg_live = self.sched.cfg
-        self._batched = (scfg_live.prefill_tokens is not None
-                         and scfg_live.chunk_pages is not None)
-        if self._batched:
-            self._budget_tokens = bucketing.budget_tokens(
-                scfg_live.prefill_tokens, pcfg.page_size,
-                scfg_live.chunk_pages, pow2=pcfg.bucket_pow2)
-            self._batch_wp = bucketing.bucket_count(
+        max_tokens = resolve_prefill_tokens(scfg, pcfg.page_size)
+        self.batched = max_tokens is not None
+        self.budget_tokens = self.batch_wp = None
+        if self.batched:
+            self.budget_tokens = bucketing.budget_tokens(
+                max_tokens, pcfg.page_size, scfg.chunk_pages,
+                pow2=pcfg.bucket_pow2)
+            self.batch_wp = bucketing.bucket_count(
                 pcfg.batch_past_pages or pcfg.n_pages - 1,
                 pow2=pcfg.bucket_pow2)
 
@@ -214,362 +204,136 @@ class PagedServingEngine:
             lambda pool, rows: pool.at[:, phys].set(rows.astype(pool.dtype)),
             pool_layers, rows_layers)
 
-    # -- queueing -----------------------------------------------------------
-
-    def submit(self, req: Request):
-        if req.max_len is not None and req.max_len <= len(req.prompt):
-            raise ValueError(
-                f"request {req.rid}: max_len {req.max_len} leaves no room "
-                f"after a {len(req.prompt)}-token prompt")
-        total = len(req.prompt) + req.max_tokens
-        if req.max_len is not None:
-            total = min(total, req.max_len)
-        need = -(-total // self.pcfg.page_size)
-        if need > self.pool.n_pages - 1:
-            raise ValueError(
-                f"request {req.rid}: {total} tokens needs {need} pages; "
-                f"pool holds {self.pool.n_pages - 1}")
-        if self._batched and need - 1 > self._batch_wp:
-            raise ValueError(
-                f"request {req.rid}: {need} pages exceeds the batched "
-                f"chunk-prefill past window ({self._batch_wp} pages); "
-                f"raise PagedEngineCfg.batch_past_pages")
-        req.out = []
-        self.sched.submit(req)
-
-    @property
-    def queue(self) -> list[Request]:
-        """Waiting work (fresh + preempted), highest priority first."""
-        return self.sched.queued_requests()
-
     def _pull_scores(self) -> np.ndarray:
         return np.asarray(self._scores(self.cache["layers"]))
 
-    # -- executor protocol: admission --------------------------------------
+    # -- admission ----------------------------------------------------------
 
-    def free_slot_available(self) -> bool:
-        return bool(self.free)
+    def check_capacity(self, rid: int, total: int, need: int) -> None:
+        if need > self.pool.n_pages - 1:
+            raise ValueError(
+                f"request {rid}: {total} tokens needs {need} pages; "
+                f"pool holds {self.pool.n_pages - 1}")
+        if self.batched and need - 1 > self.batch_wp:
+            raise ValueError(
+                f"request {rid}: {need} pages exceeds the batched "
+                f"chunk-prefill past window ({self.batch_wp} pages); "
+                f"raise PagedEngineCfg.batch_past_pages")
 
-    def exec_admit(self, req: Request) -> int:
-        """Bind a request to a slot. Pages come later, chunk by chunk.
+    # -- pool primitives ------------------------------------------------------
 
-        A request carrying prior output is a recompute-resume: its emitted
-        tokens are appended to the prompt and replayed through prefill
-        (exact under greedy decode), with the final sampled token
-        suppressed — it was already emitted before preemption."""
-        slot = self.free.pop(0)
-        out = req.out or []
-        if out:
-            prompt = np.concatenate(
-                [np.asarray(req.prompt, np.int64),
-                 np.asarray(out[:-1], np.int64)])
-        else:
-            prompt = np.asarray(req.prompt, np.int64)
-        spans = bucketing.chunk_spans(
-            len(prompt), self.pcfg.page_size, self.sched.cfg.chunk_pages,
-            pow2=self.pcfg.bucket_pow2)
-        self._pf[slot] = _PrefillProgress(
-            prompt=prompt,
-            toks=tuple(int(x) for x in prompt) if self._share else None,
-            spans=spans, chunk=0, sharing=self._share,
-            suppress_first=bool(out))
-        self.tables[slot] = []
-        self.active[slot] = req
-        self.lengths[slot] = 0
-        return slot
+    def alloc_chunk(self, pf, start_page: int, n_need: int
+                    ) -> tuple[list[int], list[int], bool]:
+        scores = (self._pull_scores()
+                  if self.pool.free_pages() < n_need else None)
+        pages, fresh, _, sharing = self.alloc.admit_chunk(
+            pf.toks if pf.toks is not None else pf.prompt,
+            start_page, n_need, scores, sharing=pf.sharing)
+        fresh_set = set(fresh)
+        fresh_globals = [start_page + i for i, pid in enumerate(pages)
+                         if pid in fresh_set]
+        return pages, fresh_globals, sharing
 
-    def prefill_chunks_left(self, slot: int) -> int:
-        pf = self._pf.get(slot)
-        return 0 if pf is None else len(pf.spans) - pf.chunk
+    def release_pages(self, pages: list[int], start_global: int) -> None:
+        self.alloc.release(pages)
 
-    def held_pages(self, slot: int, shard=None) -> int:
+    def release_table(self, table: list[int]) -> None:
+        self.alloc.release([pid for pid in table if pid >= 0])
+
+    def lookup_prefix(self, g: int, key: tuple) -> Optional[int]:
+        return self.pool.lookup(key)
+
+    def register_prefix(self, g: int, key: tuple, pid: int) -> None:
+        self.pool.register(key, pid)
+
+    def decref_page(self, g: int, pid: int) -> None:
+        self.pool.decref(pid)
+
+    def register_prompt_pages(self, toks, table, fresh_globals,
+                              start_page: int) -> None:
+        page = self.page_size
+        for g in fresh_globals:
+            end = (g + 1) * page
+            if end <= len(toks):
+                self.pool.register(toks[:end], table[g])
+
+    def ref_of(self, table, j: int) -> int:
+        return self.pool.ref(table[j])
+
+    def held_pages(self, table, shard=None) -> int:
         """Pages preempting this slot would actually FREE: prefix-shared
         pages (ref > 1) survive a victim's release, and lazily-shed
         entries (negative sentinel) already left the device. ``shard`` is
-        ignored — this engine runs one pool."""
-        return sum(1 for pid in self.tables.get(slot, ())
+        ignored — this backend runs one pool."""
+        return sum(1 for pid in table
                    if pid >= 0 and self.pool.ref(pid) == 1)
 
-    # -- executor protocol: chunked prefill ---------------------------------
-
-    def exec_prefill_chunk(self, slot: int) -> bool:
-        """Share/allocate + compute + scatter ONE chunk of ``slot``'s
-        prompt. Returns True once the prompt is complete (slot enters
-        decode). Raises NeedPages when the pool cannot supply the chunk."""
-        pf = self._pf[slot]
-        req = self.active[slot]
-        page = self.pcfg.page_size
-        start, end, width = pf.spans[pf.chunk]
-        start_page = start // page
-        n_need = -(-end // page) - start_page
-        scores = (self._pull_scores()
-                  if self.pool.free_pages() < n_need else None)
-        try:
-            pages, fresh, _, sharing = self.alloc.admit_chunk(
-                pf.toks if pf.toks is not None else pf.prompt,
-                start_page, n_need, scores, sharing=pf.sharing)
-        except PoolExhausted:
-            raise NeedPages(slot) from None
-        pf.sharing = sharing
-        table = self.tables[slot]
-        table.extend(pages)
-        t = len(pf.prompt)
-        last = pf.chunk == len(pf.spans) - 1
-
-        logits = None
-        if fresh or last:          # fully-shared middle chunks skip compute
-            toks = bucketing.pad_tokens(pf.prompt[start:end], width)
-            batch = {"tokens": jnp.asarray(toks)[None, :]}
-            last_idx = (t - 1 if last else end - 1) - start
-            if start == 0:
-                logits, cache_one = self._prefill(
-                    self.params, batch, jnp.asarray([last_idx], jnp.int32))
-            else:
-                wp = bucketing.bucket_count(start_page,
-                                            pow2=self.pcfg.bucket_pow2)
-                past_phys = np.full((1, wp), -1, np.int32)
-                past_phys[0, :start_page] = table[:start_page]
-                past_logical = np.full((1, wp), -1, np.int32)
-                past_logical[0, :start_page] = np.arange(start_page)
-                chunk_state = {
-                    "past_phys": jnp.asarray(past_phys),
-                    "past_logical": jnp.asarray(past_logical),
-                    "past_len": jnp.asarray([start], jnp.int32),
-                    "last_index": jnp.asarray([last_idx], jnp.int32)}
-                logits, cache_one = self._prefill_chunk(
-                    self.params, batch, {"layers": self.cache["layers"]},
-                    chunk_state)
-            # chunk page j -> its fresh pool page; shared pages (content
-            # identical by construction) and bucket padding -> scratch
-            fresh_set = set(fresh)
-            phys = np.full((width // page,), SCRATCH, np.int32)
-            for j, pid in enumerate(pages):
-                if pid in fresh_set:
-                    phys[j] = pid
-            self.cache["layers"] = self._scatter(
-                self.cache["layers"], cache_one["layers"],
-                jnp.asarray(phys))
-            if self._share:
-                self.alloc.register_prompt_pages(pf.toks, pages, fresh,
-                                                 start_page)
-        pf.chunk += 1
-        if not last:
-            return False
-
-        # prompt complete: first token, slot enters decode phase
-        if pf.suppress_first:
-            tok = int(req.out[-1])
-        else:
-            tok = int(jnp.argmax(logits[0, :self.cfg.vocab]))
-            req.out.append(tok)
-        del self._pf[slot]
-        self.lengths[slot] = t
-        self.last_token = self.last_token.at[slot, 0].set(tok)
-        self.budget[slot] = req.max_tokens - len(req.out)
-        if self.budget[slot] <= 0:     # e.g. max_tokens=1: done at prefill
-            self.alloc.release(self.tables.pop(slot))
-            del self.active[slot]
-            del self.budget[slot]
-            self.lengths[slot] = 0
-            self.free.append(slot)
-            self._prefill_done.append((slot, req))
+    def page_on_shard(self, j: int, shard=None) -> bool:
         return True
 
-    # -- executor protocol: batched varlen chunk prefill --------------------
+    # -- prefill dispatch ------------------------------------------------------
 
-    def pending_chunk_widths(self, slot: int) -> list[int]:
-        pf = self._pf[slot]
-        return [w for _, _, w in pf.spans[pf.chunk:]]
+    def dispatch_chunk(self, pf, table, start, end, width, last_idx,
+                       pages, fresh_globals) -> np.ndarray:
+        page = self.page_size
+        start_page = start // page
+        toks = bucketing.pad_tokens(pf.prompt[start:end], width)
+        batch = {"tokens": jnp.asarray(toks)[None, :]}
+        if start == 0:
+            logits, cache_one = self._prefill(
+                self.params, batch, jnp.asarray([last_idx], jnp.int32))
+        else:
+            wp = bucketing.bucket_count(start_page,
+                                        pow2=self.pcfg.bucket_pow2)
+            past_phys = np.full((1, wp), -1, np.int32)
+            past_phys[0, :start_page] = table[:start_page]
+            past_logical = np.full((1, wp), -1, np.int32)
+            past_logical[0, :start_page] = np.arange(start_page)
+            chunk_state = {
+                "past_phys": jnp.asarray(past_phys),
+                "past_logical": jnp.asarray(past_logical),
+                "past_len": jnp.asarray([start], jnp.int32),
+                "last_index": jnp.asarray([last_idx], jnp.int32)}
+            logits, cache_one = self._prefill_chunk(
+                self.params, batch, {"layers": self.cache["layers"]},
+                chunk_state)
+        # chunk page j -> its fresh pool page; shared pages (content
+        # identical by construction) and bucket padding -> scratch
+        fresh_set = set(fresh_globals)
+        phys = np.full((width // page,), SCRATCH, np.int32)
+        for j, pid in enumerate(pages):
+            if start_page + j in fresh_set:
+                phys[j] = pid
+        self.cache["layers"] = self._scatter(
+            self.cache["layers"], cache_one["layers"], jnp.asarray(phys))
+        # stays on device: middle chunks' logits are never read, and the
+        # final chunk's row is materialized once by _finish_prefill
+        return logits[0]
 
-    @staticmethod
-    def _merged_span(pf, n: int) -> tuple[int, int, int]:
-        """Span covering the next ``n`` CONSECUTIVE chunks as one varlen
-        piece: non-final chunks are exactly full, so only the tail can
-        pad — merged chunks behave exactly like one larger chunk."""
-        start = pf.spans[pf.chunk][0]
-        end = pf.spans[pf.chunk + n - 1][1]
-        width = sum(w for _, _, w in pf.spans[pf.chunk:pf.chunk + n])
-        return start, end, width
+    def arena_cost(self, past_pages: int) -> list[int]:
+        return [past_pages]
 
-    def exec_prefill_chunk_batch(self, batch: list[tuple[int, int]]
-                                 ) -> list[int]:
-        """Advance every ``(slot, n_chunks)`` entry in ONE compiled
-        varlen dispatch over a fixed ``[1, budget_tokens]`` flat buffer.
-
-        Three phases: (A) allocate each slot's merged-span pages —
-        idempotent via ``pf.pending``, so a NeedPages retry after
-        preemption reuses what already succeeded; (A2) same-tick prefix
-        dedup; (B) pack the spans back to back into the flat buffer
-        (segment ids, absolute positions, and the shared past-page ARENA
-        tagged by owner lane) and dispatch — fully prefix-shared
-        non-final spans need no lanes at all; (C) commit: extend tables,
-        register fresh prompt pages, advance cursors, emit first tokens
-        for completed prompts. Nothing commits before the dispatch
-        succeeds, so a phase-A NeedPages leaves every cursor untouched.
-        In the rare case the packed spans' pasts overflow the fixed
-        arena, phase B splits into several same-shape waves (still one
-        compilation). Returns the slots entering decode."""
-        page = self.pcfg.page_size
-        for slot, n in batch:                  # phase A: allocation
-            pf = self._pf[slot]
-            if pf.pending is not None:
-                continue
-            n = max(1, min(n, len(pf.spans) - pf.chunk))
-            start, end, _ = self._merged_span(pf, n)
-            n_need = -(-end // page) - start // page
-            scores = (self._pull_scores()
-                      if self.pool.free_pages() < n_need else None)
-            try:
-                pages, fresh, _, sharing = self.alloc.admit_chunk(
-                    pf.toks if pf.toks is not None else pf.prompt,
-                    start // page, n_need, scores, sharing=pf.sharing)
-            except PoolExhausted:
-                raise NeedPages(slot) from None
-            pf.sharing = sharing
-            pf.pending = (pages, fresh, n)
-
-        # Phase A2 — same-tick prefix dedup. Batched admission runs many
-        # same-prefix prompts' chunks in ONE tick, so the ordinary
-        # register-after-compute flow would never let them share (each
-        # allocates before any registers). Once every allocation above
-        # succeeded nothing can raise before the dispatch commits, so it
-        # is safe to register fresh full prompt pages NOW and point later
-        # slots in the batch at them — the owning lane's scatter writes
-        # the content within this same dispatch.
-        slots = [s for s, _ in batch]
-        if self._share:
-            for slot in slots:
-                pf = self._pf[slot]
-                if pf.toks is None:
-                    continue
-                pages, fresh, n = pf.pending
-                start_page = pf.spans[pf.chunk][0] // page
-                fresh_set = set(fresh)
-                new_fresh = []
-                for i, pid in enumerate(pages):
-                    if pid not in fresh_set:
-                        continue
-                    end = (start_page + i + 1) * page
-                    if end > len(pf.toks):
-                        new_fresh.append(pid)
-                        continue
-                    hit = self.pool.lookup(pf.toks[:end])
-                    if hit is not None:        # an earlier lane owns it
-                        self.pool.decref(pid)
-                        pages[i] = hit
-                    else:
-                        self.pool.register(pf.toks[:end], pid)
-                        new_fresh.append(pid)
-                pf.pending = (pages, new_fresh, n)
-
-        def is_last(slot):
-            pf = self._pf[slot]
-            return pf.chunk + pf.pending[2] == len(pf.spans)
-
-        compute = [s for s in slots
-                   if self._pf[s].pending[1] or is_last(s)]
-
-        # wave split: spans whose combined past pages (or tokens, after a
-        # pressure retry reshuffled the batch) overflow the fixed buffers
-        # spill to a follow-up dispatch of the SAME compiled shape
-        waves: list[list[int]] = []
-        cur: list[int] = []
-        cur_p = cur_t = 0
-        for slot in compute:
-            pf = self._pf[slot]
-            start, _, width = self._merged_span(pf, pf.pending[2])
-            sp = start // page
-            if cur and (cur_p + sp > self._batch_wp
-                        or cur_t + width > self._budget_tokens):
-                waves.append(cur)
-                cur, cur_p, cur_t = [], 0, 0
-            cur.append(slot)
-            cur_p += sp
-            cur_t += width
-        if cur:
-            waves.append(cur)
-
-        logits_by_slot: dict[int, np.ndarray] = {}
-        for wave in waves:                     # phase B: dispatch(es)
-            self._dispatch_chunk_wave(wave, logits_by_slot)
-
-        done = []
-        for slot in slots:                     # phase C: commit
-            pf = self._pf[slot]
-            pages, fresh, n = pf.pending
-            self.tables[slot].extend(pages)
-            # prefix registration already happened in phase A2 — the
-            # sole registration point, which is what makes same-tick
-            # sharing safe (content lands via this dispatch's scatter)
-            pf.pending = None
-            pf.chunk += n
-            if pf.chunk < len(pf.spans):
-                continue
-            req = self.active[slot]
-            if pf.suppress_first:
-                tok = int(req.out[-1])
-            else:
-                tok = int(np.argmax(
-                    logits_by_slot[slot][:self.cfg.vocab]))
-                req.out.append(tok)
-            del self._pf[slot]
-            self.lengths[slot] = len(pf.prompt)
-            self.last_token = self.last_token.at[slot, 0].set(tok)
-            self.budget[slot] = req.max_tokens - len(req.out)
-            done.append(slot)
-            if self.budget[slot] <= 0:     # done at prefill (max_tokens=1)
-                self.alloc.release(self.tables.pop(slot))
-                del self.active[slot]
-                del self.budget[slot]
-                self.lengths[slot] = 0
-                self.free.append(slot)
-                self._prefill_done.append((slot, req))
-        return done
-
-    def _dispatch_chunk_wave(self, wave: list[int],
-                             logits_by_slot: dict) -> None:
-        """Pack one wave of merged spans into the flat buffer + past
-        arena and run the single compiled dispatch + pool scatter."""
-        page = self.pcfg.page_size
-        b_tok, wp, lanes = self._budget_tokens, self._batch_wp, \
-            self.pcfg.max_batch
-        flat = np.zeros((b_tok,), np.int32)
-        seg = np.full((b_tok,), -1, np.int32)
-        pos = np.zeros((b_tok,), np.int32)
-        phys_sc = np.full((b_tok // page,), SCRATCH, np.int32)
-        past_phys = np.full((wp,), -1, np.int32)
-        past_lane = np.full((wp,), -1, np.int32)
-        past_logical = np.full((wp,), -1, np.int32)
-        past_len = np.zeros((lanes,), np.int32)
-        last_index = np.zeros((lanes,), np.int32)
-        cursor = 0
+    def dispatch_wave(self, flat, seg, pos, past_len, last_index,
+                      lanes) -> dict[int, np.ndarray]:
+        """Fill the single-pool past arena + scatter targets for one wave
+        and run the compiled batched varlen dispatch."""
+        page = self.page_size
+        phys_sc = np.full((self.budget_tokens // page,), SCRATCH, np.int32)
+        past_phys = np.full((self.batch_wp,), -1, np.int32)
+        past_lane = np.full((self.batch_wp,), -1, np.int32)
+        past_logical = np.full((self.batch_wp,), -1, np.int32)
         arena = 0
-        for slot in wave:
-            pf = self._pf[slot]
-            pages, fresh, n = pf.pending
-            start, end, width = self._merged_span(pf, n)
-            start_page = start // page
-            last = pf.chunk + n == len(pf.spans)
-            t = len(pf.prompt)
-            flat[cursor:cursor + width] = bucketing.pad_tokens(
-                pf.prompt[start:end], width)
-            seg[cursor:cursor + width] = slot
-            pos[cursor:cursor + width] = start + np.arange(width)
-            last_index[slot] = cursor + (t - 1 if last else end - 1) \
-                - start
-            past_len[slot] = start
-            table = self.tables[slot]
-            past_phys[arena:arena + start_page] = table[:start_page]
-            past_lane[arena:arena + start_page] = slot
-            past_logical[arena:arena + start_page] = \
-                np.arange(start_page)
-            arena += start_page
-            fresh_set = set(fresh)
-            base = cursor // page
-            for j, pid in enumerate(pages):
-                if pid in fresh_set:
+        for lane in lanes:
+            slot, table = lane["slot"], lane["table"]
+            sp = lane["start_page"]
+            past_phys[arena:arena + sp] = table[:sp]
+            past_lane[arena:arena + sp] = slot
+            past_logical[arena:arena + sp] = np.arange(sp)
+            arena += sp
+            base = lane["base"]
+            for j, pid in enumerate(lane["pages"]):
+                if sp + j in lane["fresh"]:
                     phys_sc[base + j] = pid
-            cursor += width
         pack_state = {
             "seg_ids": jnp.asarray(seg),
             "positions": jnp.asarray(pos),
@@ -585,15 +349,11 @@ class PagedServingEngine:
             self.cache["layers"], cache_flat["layers"],
             jnp.asarray(phys_sc))
         logits_host = np.asarray(logits)
-        for slot in wave:
-            logits_by_slot[slot] = logits_host[slot]
+        return {lane["slot"]: logits_host[lane["slot"]] for lane in lanes}
 
-    # -- executor protocol: decode ------------------------------------------
+    # -- decode ----------------------------------------------------------------
 
-    def _decode_slots(self) -> list[int]:
-        return [s for s in self.active if s not in self._pf]
-
-    def _page_state(self, slots: list[int]) -> dict:
+    def _page_state(self, slots, tables, lengths) -> dict:
         """Assemble block-table rows + write coordinates for this step."""
         b, w = self.pcfg.max_batch, self.pcfg.hot_pages
         page = self.pcfg.page_size
@@ -607,14 +367,13 @@ class PagedServingEngine:
         # sequence growing a page this step (not just when it is empty —
         # the last grower of the step must still evict lowest-score-first)
         growers = sum(1 for s in slots
-                      if int(self.lengths[s]) // page
-                      == len(self.tables[s]))
-        need_scores = (any(len(self.tables[s]) > w for s in slots)
+                      if int(lengths[s]) // page == len(tables[s]))
+        need_scores = (any(len(tables[s]) > w for s in slots)
                        or self.pool.free_pages() < growers)
         scores = self._pull_scores() if need_scores else None
         for slot in slots:
-            table = self.tables[slot]
-            length = int(self.lengths[slot])
+            table = tables[slot]
+            length = int(lengths[slot])
             idx = length // page
             if idx == len(table):          # tail page full: grow
                 try:
@@ -637,55 +396,35 @@ class PagedServingEngine:
                 "write_page": jnp.asarray(write_page),
                 "write_off": jnp.asarray(write_off)}
 
-    def exec_decode(self) -> list[tuple[int, Request]]:
-        slots = self._decode_slots()
-        if not slots:
-            done_early, self._prefill_done = self._prefill_done, []
-            return done_early
-        ps = self._page_state(slots)       # may raise NeedPages — drain
-        # the prefill-finished list only after it cannot raise anymore
-        done_early, self._prefill_done = self._prefill_done, []
-        self.cache["lengths"] = jnp.asarray(self.lengths, jnp.int32)
+    def decode_step(self, slots, tables, lengths):
+        ps = self._page_state(slots, tables, lengths)  # may raise NeedPages
+        self.cache["lengths"] = jnp.asarray(lengths, jnp.int32)
         logits, self.cache = self._decode(self.params, self.last_token,
                                           self.cache, ps)
-        logits = logits[:, :self.cfg.vocab]
-        if self.pcfg.greedy:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            self.rng, sub = jax.random.split(self.rng)
-            nxt = jax.random.categorical(
-                sub, logits / self.pcfg.temperature, axis=-1)
-        self.last_token = nxt[:, None].astype(jnp.int32)
-        nxt_host = np.asarray(nxt)
-        finished = done_early
-        for slot in slots:
-            req = self.active[slot]
-            tok = int(nxt_host[slot])
-            req.out.append(tok)
-            self.lengths[slot] += 1
-            self.budget[slot] -= 1
-            limit = req.max_len
-            done = (tok == self.pcfg.eos_id or self.budget[slot] <= 0
-                    or (limit is not None
-                        and self.lengths[slot] + 1 >= limit))
-            if done:
-                self.alloc.release([pid for pid in self.tables.pop(slot)
-                                    if pid >= 0])
-                self.swap_area.discard(req.rid)   # lazily-shed pages
-                del self.active[slot]
-                del self.budget[slot]
-                self.lengths[slot] = 0
-                self.free.append(slot)
-                finished.append((slot, req))
-        return finished
+        return logits
 
-    # -- executor protocol: preemption / swap -------------------------------
+    def set_last_token(self, slot: int, tok: int) -> None:
+        self.last_token = self.last_token.at[slot, 0].set(tok)
 
-    def _gather_park(self, pids: list[int]):
-        """Pull pages ``pids`` to the host. The gather width is
-        pow2-bucketed for jit-shape stability, but only the real pages
-        are kept — padding would inflate host swap bytes (and the
+    def get_last_token(self, slot: int) -> int:
+        return int(np.asarray(self.last_token[slot, 0]))
+
+    def commit_tokens(self, next_tokens) -> None:
+        self.last_token = next_tokens[:, None].astype(jnp.int32)
+
+    # -- shed / swap -------------------------------------------------------------
+
+    def hot_logical(self, table) -> set[int]:
+        scores = self._pull_scores()
+        _, hot = self.alloc.select_hot(table, self.pcfg.hot_pages, scores)
+        return {int(j) for j in hot if j >= 0}
+
+    def gather_park(self, table, js):
+        """Pull pages ``js`` to the host (flat payload order). The gather
+        width is pow2-bucketed for jit-shape stability, but only the real
+        pages are kept — padding would inflate host swap bytes (and the
         reported swap pressure)."""
+        pids = [table[j] for j in js]
         phys = np.full(
             (bucketing.bucket_count(len(pids),
                                     pow2=self.pcfg.bucket_pow2),),
@@ -696,181 +435,72 @@ class PagedServingEngine:
             lambda r: np.ascontiguousarray(np.asarray(r)[:, :len(pids)]),
             rows)
 
-    @staticmethod
-    def _concat_rows(a, b):
-        """Join two host row trees along the page axis (payload merge)."""
-        return jax.tree.map(
-            lambda x, y: np.concatenate([x, y], axis=1), a, b)
+    def can_hold(self, park_js) -> bool:
+        return (self.pool.free_pages() + len(self.pool.evictable())
+                >= len(park_js))
 
-    def exec_shed_cold(self, slot: int, shard=None) -> int:
-        """Lazy swap: park the slot's DLZS-cold uniquely-owned pages on
-        the host while it KEEPS decoding. Only pages outside both the
-        recent window and the current hot-page selection are shed — pages
-        the decode gather was already skipping — so the victim's hot-set
-        output is unchanged; the pool just gets its cold pages back.
-        Table entries become the SHED sentinel; a later full preemption
-        merges the shed payload into the ordinary swap payload. Returns
-        pages freed (0: mid-prefill, or nothing sheddable)."""
-        if slot in self._pf or slot not in self.tables:
-            return 0                 # prefill still reads its past pages
-        table = self.tables[slot]
-        scores = self._pull_scores()
-        _, hot_logical = self.alloc.select_hot(table, self.pcfg.hot_pages,
-                                               scores)
-        cands = swap_policy.shed_candidates(
-            table, hot_logical, int(self.lengths[slot]),
-            self.pcfg.page_size, lambda j: self.pool.ref(table[j]),
-            keep_recent=self.alloc.recent)
-        if not cands:
-            return 0
-        req = self.active[slot]
-        host = self._gather_park([table[j] for j in cands])
-        state = swap_policy.merge_shed(
-            {"rows": host, "park": list(cands)},
-            self.swap_area.discard(req.rid), self._concat_rows)
-        self.swap_area.put(req.rid, state, sum(
-            leaf.nbytes for leaf in jax.tree.leaves(state["rows"])))
-        for j in cands:
-            self.pool.decref(table[j])
-            table[j] = swap_policy.SHED
-        return len(cands)
-
-    def exec_preempt(self, slot: int, swap: bool) -> bool:
-        """Evict ``slot``. swap=True parks its page contents in the host
-        SwapArea (resume = page-in); otherwise pages are dropped and the
-        sequence recomputes from prompt + emitted tokens on re-admission.
-
-        Shared-prefix-aware parking (swap_policy core): only uniquely-
-        owned (ref-1) pages are gathered to the host. A page some other
-        sequence also references keeps OUR reference while swapped — its
-        content cannot be freed or rewritten underneath us, so resume
-        reuses the same physical page with zero upload. Pages a lazy
-        shed already parked merge into the payload."""
-        req = self.active.pop(slot)
-        table = self.tables.pop(slot)
-        pf = self._pf.pop(slot, None)
-        swap_policy.release_pending(pf, self.alloc.release)
-        swapped = False
-        if swap and table:
-            kept, park, shed = swap_policy.partition_table(
-                table, lambda j: self.pool.ref(table[j]))
-            # gather BEFORE decref: page content is only guaranteed
-            # until the ids return to the free list
-            host = self._gather_park([table[j] for j in park]) \
-                if park else None
-            state = swap_policy.progress_state(
-                req, pf, share=self._share,
-                length=int(self.lengths[slot]),
-                last_token=int(np.asarray(self.last_token[slot, 0])),
-                budget=self.budget.get(slot, 0))
-            state.update(rows=host, park=park, kept=kept,
-                         n_pages=len(table))
-            state = swap_policy.merge_shed(
-                state, self.swap_area.discard(req.rid) if shed else None,
-                self._concat_rows)
-            nbytes = sum(leaf.nbytes
-                         for leaf in jax.tree.leaves(state["rows"])) \
-                if state["rows"] is not None else 0
-            self.swap_area.put(req.rid, state, nbytes)
-            # release ONLY the parked pages; kept (shared) pages retain
-            # this sequence's reference until it resumes
-            self.alloc.release([table[j] for j in park])
-            swapped = True
-        else:
-            self.swap_area.discard(req.rid)    # stale lazy-shed payload
-            self.alloc.release([pid for pid in table if pid >= 0])
-        self.budget.pop(slot, None)
-        self.lengths[slot] = 0
-        self.free.append(slot)
-        return swapped
-
-    def exec_swap_in(self, req: Request) -> Optional[int]:
-        """Page a swapped sequence back in, or None if the pool cannot hold
-        its block table right now.
-
-        Pages kept live at swap-out (shared at the time) are reused as-is.
-        Parked full-prompt pages first retry the prefix index — if an
-        identical prefix is pooled (often our own parked copy, cached at
-        release), the page revives with no upload; only genuine misses
-        allocate a fresh page and upload the parked rows
-        (swap_policy.plan_page_in, rollback on exhaustion)."""
-        state = self.swap_area.peek(req.rid)
-        park = state["park"]
-        # conservative: lookups below can only reduce the real need
-        if self.pool.free_pages() + len(self.pool.evictable()) < len(park):
-            return None
+    def page_in_extend(self, park_js):
         scores = (self._pull_scores()
-                  if self.pool.free_pages() < len(park) else None)
-        plan = swap_policy.plan_page_in(
-            park, state["lookup_toks"], self.pcfg.page_size,
-            lookup=lambda j, key: self.pool.lookup(key),
-            extend=lambda j: self.alloc.extend(scores),
-            rollback=lambda j, pid: self.pool.decref(pid))
-        if plan is None:           # defensive: entry stays put, retry later
-            return None
-        filled, upload = plan
-        state = self.swap_area.take(req.rid)   # committed: pages acquired
-        slot = self.free.pop(0)
-        for j, pid in state["kept"]:
-            filled[j] = pid
-        pages = [filled[j] for j in range(state["n_pages"])]
-        if upload:
-            w = bucketing.bucket_count(len(upload),
-                                       pow2=self.pcfg.bucket_pow2)
-            phys = np.full((w,), SCRATCH, np.int32)
-            phys[:len(upload)] = [pid for _, pid in upload]
-            pos = [p for p, _ in upload]
-            def sub_rows(r):
-                out = np.zeros((r.shape[0], w) + r.shape[2:], r.dtype)
-                out[:, :len(pos)] = r[:, pos]
-                return out
-            self.cache["layers"] = self._page_in(
-                self.cache["layers"],
-                jax.tree.map(sub_rows, state["rows"]), jnp.asarray(phys))
-        self.tables[slot] = pages
-        self.active[slot] = req
-        pf = swap_policy.restore_progress(state)
-        if pf is not None:
-            self._pf[slot] = pf
-            self.lengths[slot] = 0
-        else:
-            self.lengths[slot] = state["length"]
-            self.last_token = self.last_token.at[slot, 0].set(
-                state["last_token"])
-            self.budget[slot] = state["budget"]
-        return slot
+                  if self.pool.free_pages() < len(park_js) else None)
+        return lambda j: self.alloc.extend(scores)
 
-    # -- driver -------------------------------------------------------------
+    def upload_park(self, rows, uploads) -> None:
+        w = bucketing.bucket_count(len(uploads),
+                                   pow2=self.pcfg.bucket_pow2)
+        phys = np.full((w,), SCRATCH, np.int32)
+        phys[:len(uploads)] = [pid for _, _, pid in uploads]
+        pos = [p for p, _, _ in uploads]
+        def sub_rows(r):
+            out = np.zeros((r.shape[0], w) + r.shape[2:], r.dtype)
+            out[:, :len(pos)] = r[:, pos]
+            return out
+        self.cache["layers"] = self._page_in(
+            self.cache["layers"], jax.tree.map(sub_rows, rows),
+            jnp.asarray(phys))
 
-    def step(self) -> list[Request]:
-        """One scheduler tick: admit / one-or-more prefill chunks / fused
-        decode. Returns the requests that finished this step."""
-        return self.sched.tick(self)
-
-    def run(self, requests: list[Request], max_steps: int = 10_000):
-        """Serve a request list to completion; returns {rid: tokens}."""
-        for r in requests:
-            self.submit(r)
-        done: dict[int, list] = {}
-        steps = 0
-        while self.sched.has_work() and steps < max_steps:
-            for fin in self.step():
-                done[fin.rid] = fin.out
-            steps += 1
-        return done
-
-    # -- observability ------------------------------------------------------
+    # -- observability -------------------------------------------------------------
 
     def stats(self) -> dict:
         pool = self.pool.stats()
         per_page = metrics.bytes_per_page(self.cache["layers"])
         return {
             "pool": pool,
-            "swap": self.swap_area.stats(),
-            "sched": dataclasses.replace(self.sched.stats),
             "bytes_per_page": per_page,
             "working_set_bytes": pool.peak_live * per_page,
             "slab_bytes": metrics.tree_bytes(self.cache["layers"]),
             "decode_compiles": self._decode._cache_size(),
             "prefill_batch_compiles": self._prefill_chunk_batch._cache_size(),
         }
+
+
+class PagedServingEngine(EngineCore):
+    """The single-pool serving engine: ``PagedBackend`` under the shared
+    ``EngineCore`` executor. Thin by design — every scheduler-visible
+    behavior lives in engine_core.py."""
+
+    def __init__(self, model_cfg, params, pcfg: PagedEngineCfg,
+                 scfg: Optional[SchedulerCfg] = None,
+                 rng: Optional[jax.Array] = None):
+        scfg = scfg or SchedulerCfg()
+        super().__init__(PagedBackend(model_cfg, params, pcfg, scfg),
+                         scfg, rng)
+
+    @property
+    def pcfg(self) -> PagedEngineCfg:
+        return self.backend.pcfg
+
+    @property
+    def pool(self) -> PagePool:
+        return self.backend.pool
+
+    @property
+    def alloc(self) -> PagedAllocator:
+        return self.backend.alloc
+
+    @property
+    def last_token(self):
+        return self.backend.last_token
+
+    @property
+    def cache(self):
+        return self.backend.cache

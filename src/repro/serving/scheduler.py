@@ -39,7 +39,8 @@ the no-deadlock argument the pressure tests pin down.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Protocol
+import time
+from typing import Optional, Protocol, Union
 
 from repro.kvcache.bucketing import pack_budget
 from repro.serving.engine import Request
@@ -81,7 +82,7 @@ class SchedulerCfg:
     chunk_pages: Optional[int] = 4   # prefill chunk size in pages
     #                                  (None = monolithic, the pre-chunking
     #                                  behavior: one prefill per prompt)
-    prefill_tokens: Optional[int] = None
+    prefill_tokens: Optional[Union[int, str]] = None
     # Per-tick prefill TOKEN budget: each tick packs the next chunk of as
     # many prefilling sequences as fit (padded widths, SJF+aging order)
     # and advances them all in ONE batched varlen dispatch
@@ -90,6 +91,15 @@ class SchedulerCfg:
     # per tick regardless of how many prompts are mid-prefill, which is
     # what closes the chunked-vs-monolithic gap. None (or monolithic
     # chunk_pages=None) keeps the legacy one-dispatch-per-sequence path.
+    # "auto" (the ``api.LLM`` default) sizes the dispatch buffer to
+    # AUTO_PREFILL_CHUNKS chunks and lets a ``BudgetController`` grow/
+    # shrink the per-tick PACKING budget inside that fixed buffer from
+    # observed tick wall-times (compile-safe: the compiled width never
+    # changes, only how much of it a tick fills).
+    autotune_target_s: float = 0.5   # "auto" only: EMA controller keeps
+    #                                  one prefill phase near this wall
+    #                                  time — bounds how long co-resident
+    #                                  decodes stall behind prefill
     prefill_per_step: int = 1        # LEGACY path only: prefill chunks
     #                                  advanced per tick when no token
     #                                  budget is set
@@ -115,6 +125,63 @@ class SchedStats:
     resumes: int = 0
     sheds: int = 0                   # lazy cold-page swaps (victim kept
     #                                  running; not counted as preemptions)
+
+
+AUTO_PREFILL_CHUNKS = 6   # "auto": the compiled dispatch buffer holds up
+#                           to this many chunks; the controller moves the
+#                           packing budget inside it. A wider buffer buys
+#                           deeper packing but pays its padding compute
+#                           every dispatch — 6 chunks is the measured
+#                           knee on the mixed workload
+#                           (BENCH_serving.json batched_prefill)
+
+
+def resolve_prefill_tokens(cfg: SchedulerCfg, page_size: int
+                           ) -> Optional[int]:
+    """The numeric flat-buffer width a ``prefill_tokens`` setting implies
+    (what the engine compiles once). ``"auto"`` sizes the buffer to
+    ``AUTO_PREFILL_CHUNKS`` chunks — the controller's upper bound."""
+    pt = cfg.prefill_tokens
+    if pt is None or cfg.chunk_pages is None:
+        return None
+    if pt == "auto":
+        return AUTO_PREFILL_CHUNKS * cfg.chunk_pages * page_size
+    return int(pt)
+
+
+class BudgetController:
+    """EMA autotuner for the per-tick prefill token budget.
+
+    The dispatch buffer compiles ONCE at ``hi`` tokens; this controller
+    only moves how many tokens a tick may PACK into it — always a
+    multiple of ``quantum`` (page-aligned, so span math never changes)
+    inside ``[lo, hi]``, which is what keeps autotuning compile-safe.
+    Each observed prefill phase updates an EMA of seconds-per-packed-
+    token; the budget is then set so one phase lands near ``target_s``:
+    fast hardware drifts to ``hi`` (throughput), slow or contended
+    hardware shrinks toward ``lo`` so co-resident decodes are not
+    starved behind a fat prefill dispatch.
+    """
+
+    def __init__(self, lo: int, hi: int, quantum: int,
+                 target_s: float = 0.5, alpha: float = 0.4):
+        assert 0 < lo <= hi and quantum > 0 and target_s > 0
+        self.lo, self.hi, self.quantum = lo, hi, quantum
+        self.target_s = target_s
+        self.alpha = alpha
+        self._per_tok: Optional[float] = None
+        self.budget = hi             # optimistic start: shrink on evidence
+
+    def observe(self, wall_s: float, packed_tokens: int) -> None:
+        """Feed one prefill phase's wall time and packed token count."""
+        if packed_tokens <= 0 or wall_s <= 0:
+            return
+        per = wall_s / packed_tokens
+        self._per_tok = per if self._per_tok is None else \
+            (1 - self.alpha) * self._per_tok + self.alpha * per
+        want = int(self.target_s / self._per_tok)
+        want = (want // self.quantum) * self.quantum
+        self.budget = max(self.lo, min(self.hi, want))
 
 
 class Executor(Protocol):
@@ -202,6 +269,30 @@ class Scheduler:
         self._resumed_tick: set[int] = set()
         self._pf_wait: dict[int, int] = {}   # prefill slot -> ticks since
         #                                      its last chunk (aging)
+        self.budget_ctl: Optional[BudgetController] = None
+        self._budget_warm = False    # first batched phase pays the XLA
+        #                              compile: never feed it to the EMA
+        if cfg.prefill_tokens == "auto":
+            # placeholder bounds until the engine attaches real ones
+            # (attach_budget) — an unattached "auto" packs greedily
+            self.budget_ctl = BudgetController(
+                lo=1, hi=1 << 30, quantum=1,
+                target_s=cfg.autotune_target_s)
+
+    def attach_budget(self, lo: int, hi: int, quantum: int) -> None:
+        """Bind the ``"auto"`` budget controller to the engine's compiled
+        dispatch bounds (called by EngineCore once the backend knows its
+        flat-buffer width). No-op unless cfg.prefill_tokens == "auto"."""
+        if self.cfg.prefill_tokens == "auto":
+            self.budget_ctl = BudgetController(
+                lo=lo, hi=hi, quantum=quantum,
+                target_s=self.cfg.autotune_target_s)
+
+    def prefill_budget(self) -> Optional[int]:
+        """Tokens the next batched prefill phase may pack."""
+        if self.budget_ctl is not None:
+            return self.budget_ctl.budget
+        return self.cfg.prefill_tokens
 
     # -- queue --------------------------------------------------------------
 
@@ -322,15 +413,16 @@ class Scheduler:
         so the retry is clean."""
         order = self._prefill_order_key(ex)
         advanced: set[int] = set()
+        t0 = time.perf_counter()
+        packed_tokens = 0
         while True:
             cands = sorted((s for s, st in self.running.items()
                             if st.phase == "prefill"
                             and s not in advanced), key=order)
             if not cands:
-                return advanced
-            batch = pack_budget(
-                [(s, ex.pending_chunk_widths(s)) for s in cands],
-                self.cfg.prefill_tokens)
+                break
+            widths = [(s, ex.pending_chunk_widths(s)) for s in cands]
+            batch = pack_budget(widths, self.prefill_budget())
             try:
                 done = ex.exec_prefill_chunk_batch(batch)
             except NeedPages as e:
@@ -343,10 +435,21 @@ class Scheduler:
                 else:
                     self._preempt(ex, victim)
                 continue
+            by_slot = dict(widths)
+            packed_tokens += sum(sum(by_slot[s][:n]) for s, n in batch)
             advanced.update(s for s, _ in batch)
             for slot in done:
                 self.running[slot].phase = "decode"
-            return advanced
+            break
+        if self.budget_ctl is not None and packed_tokens:
+            # the first dispatch's wall time is dominated by the one-time
+            # XLA compilation (seconds on real hardware) — feeding it to
+            # the EMA would collapse every cold start to the floor budget
+            if self._budget_warm:
+                self.budget_ctl.observe(time.perf_counter() - t0,
+                                        packed_tokens)
+            self._budget_warm = True
+        return advanced
 
     # Phase 3: decode retries after preempting until the batch fits.
     def _decode_phase(self, ex: Executor) -> list[Request]:

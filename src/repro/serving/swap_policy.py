@@ -45,11 +45,12 @@ class PrefillProgress:
     suppress_first: bool         # recompute resume: the final chunk's
     #                              sampled token was already emitted
     pending: Optional[tuple] = None
-    # (pages, fresh, n_chunks) allocated for the next n_chunks merged
-    # chunks by a batched-prefill attempt that has not computed yet —
-    # kept OUT of the block table so a preemption (or a retried batch)
-    # can release/reuse them cleanly. ``fresh`` holds physical ids in
-    # the paged engine and GLOBAL logical indices in the spatial one.
+    # (pages, fresh_globals, n_chunks) allocated for the next n_chunks
+    # merged chunks by a batched-prefill attempt that has not computed
+    # yet — kept OUT of the block table so a preemption (or a retried
+    # batch) can release/reuse them cleanly. ``fresh_globals`` holds
+    # GLOBAL logical page indices (engine_core normalizes every backend
+    # to this addressing).
 
 
 def release_pending(pf: Optional[PrefillProgress],

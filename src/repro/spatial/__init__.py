@@ -26,11 +26,15 @@ architecture:
                      shard attends over its local pages via the paged
                      gather, and the partials merge to the owner. One
                      decode compilation, exact numerics.
-* ``orchestrator`` — the serve loop: QoS/SLA submission, tick driving,
-                     TTFT/latency reporting; reuses the engine-agnostic
-                     ``serving.scheduler`` policy so chunked prefill
-                     interleaves with decode and pool pressure preempts
-                     per shard instead of rejecting.
+* ``orchestrator`` — DEPRECATED shim: the serve loop moved to the
+                     backend-agnostic ``repro.serving.api.LLM`` front
+                     door (QoS/SLA submission, tick driving, streaming,
+                     TTFT/latency metrics). The engine itself is a thin
+                     ``Backend`` under the shared
+                     ``serving.engine_core.EngineCore`` executor, so
+                     chunked/batched prefill, lazy cold-page shedding
+                     and preempt/swap are literally the paged engine's
+                     code paths, shard-tagged.
 
 Context length scales with device count: a prompt that overflows one
 shard's pool (rejected by ``PagedServingEngine.submit``) stripes across
@@ -38,12 +42,14 @@ the mesh and serves normally — the acceptance workload in
 ``tests/test_spatial.py`` and ``benchmarks/serving.py --spatial``.
 """
 
-from repro.spatial.engine import SpatialEngineCfg, SpatialServingEngine
+from repro.spatial.engine import (SpatialBackend, SpatialEngineCfg,
+                                  SpatialServingEngine)
 from repro.spatial.orchestrator import Orchestrator
 from repro.spatial.sharded_pool import ShardedPagePools, ShardPoolExhausted
 from repro.spatial.topology import (ShardTopology, ensure_host_devices,
                                     respawn_with_devices)
 
 __all__ = ["Orchestrator", "ShardPoolExhausted", "ShardTopology",
-           "ShardedPagePools", "SpatialEngineCfg", "SpatialServingEngine",
-           "ensure_host_devices", "respawn_with_devices"]
+           "ShardedPagePools", "SpatialBackend", "SpatialEngineCfg",
+           "SpatialServingEngine", "ensure_host_devices",
+           "respawn_with_devices"]

@@ -1,4 +1,4 @@
-"""SpatialServingEngine — sequence-sharded serving across a device mesh.
+"""Sequence-sharded serving backend across a device mesh.
 
 One request's KV context is STRIPED page-by-page across ``n_shards``
 devices (repro.spatial.topology), so the longest servable prompt — and
@@ -24,12 +24,15 @@ Dataflow per phase (each a single SPMD shard_map dispatch — see
   compiles ONCE: shapes depend only on (max_batch, hot_pages_local,
   n_pages_local).
 
-Scheduling is the SAME engine-agnostic policy as the paged engine: this
-class implements the ``serving.scheduler.Executor`` protocol, so chunked
-prefill interleaves with decode, pool pressure preempts (host swap with
-ref-1-only parking, or recompute) instead of rejecting, and priorities /
-SLA classes carry over unchanged. Pressure is shard-tagged: a starved
-shard picks a victim that actually frees pages THERE.
+The entire executor state machine — admission, chunked + batched varlen
+prefill (the allocate/dedup/wave-split/commit scaffold), decode loop,
+lazy cold-page shedding, preempt/swap — is the SHARED
+``serving.engine_core.EngineCore``; this module only implements the
+``Backend`` protocol over sharded pools and shard_map dispatches.
+Pressure is shard-tagged: a starved shard picks victims (and lazy-shed
+pages) that actually free memory THERE. Because the scaffold is shared,
+the spatial engine gets lazy cold-page shedding, prefill-budget
+autotuning, and every future scheduler feature for free.
 """
 
 from __future__ import annotations
@@ -42,15 +45,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kvcache import (SCRATCH, PoolExhausted, SwapArea, bucketing,
-                           metrics)
+from repro.kvcache import SCRATCH, bucketing, metrics
 from repro.models import lm
-from repro.serving import swap_policy
-from repro.serving.engine import Request
-from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
-from repro.serving.swap_policy import PrefillProgress as _PrefillProgress
+from repro.serving.engine_core import EngineCore
+from repro.serving.scheduler import (NeedPages, SchedulerCfg,
+                                     resolve_prefill_tokens)
 from repro.spatial.sharded_pool import ShardedPagePools, ShardPoolExhausted
 from repro.spatial.topology import ShardTopology
+
+__all__ = ["SpatialEngineCfg", "SpatialBackend", "SpatialServingEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,10 +76,11 @@ class SpatialEngineCfg:
     # exactly once.
 
 
-class SpatialServingEngine:
-    def __init__(self, model_cfg, params, scfg_engine: SpatialEngineCfg,
-                 scfg: Optional[SchedulerCfg] = None,
-                 rng: Optional[jax.Array] = None):
+class SpatialBackend:
+    """Sharded-pool + shard_map ``engine_core.Backend`` implementation."""
+
+    def __init__(self, model_cfg, params, pcfg: SpatialEngineCfg,
+                 scfg: SchedulerCfg):
         if any(blk.kind != "attn" for blk in model_cfg.pattern):
             raise ValueError("spatial engine supports attention-only "
                              "patterns")
@@ -88,43 +92,40 @@ class SpatialServingEngine:
                 "spatial engine serves dense-attention configs; sparsity "
                 "comes from per-shard DLZS hot-page retention at decode")
         self.cfg = model_cfg
-        self.pcfg = scfg_engine
+        self.pcfg = pcfg
         self.params = params
-        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self.sched = Scheduler(scfg or SchedulerCfg())
-        self.topo = ShardTopology(scfg_engine.n_shards)
+        self.topo = ShardTopology(pcfg.n_shards)
         self.mesh = self.topo.make_mesh()
         self.pools = ShardedPagePools(
-            self.topo, scfg_engine.n_pages_local, scfg_engine.page_size,
-            recent_pages=scfg_engine.recent_pages)
-        self._share = scfg_engine.share_prefixes
-        self.swap_area = SwapArea()
+            self.topo, pcfg.n_pages_local, pcfg.page_size,
+            recent_pages=pcfg.recent_pages)
 
-        self.active: dict[int, Request] = {}
-        self.budget: dict[int, int] = {}
-        self.tables: dict[int, list[int]] = {}     # slot -> striped table:
-        #                                            entry j = local phys id
-        #                                            on shard owner(j)
-        self._pf: dict[int, _PrefillProgress] = {}
-        self._prefill_done: list[tuple[int, Request]] = []
-        self.lengths = np.zeros((scfg_engine.max_batch,), np.int64)
-        self.free = list(range(scfg_engine.max_batch))
+        # protocol facts EngineCore reads
+        self.page_size = pcfg.page_size
+        self.max_batch = pcfg.max_batch
+        self.eos_id = pcfg.eos_id
+        self.greedy = pcfg.greedy
+        self.temperature = pcfg.temperature
+        self.bucket_pow2 = pcfg.bucket_pow2
+        self.share = pcfg.share_prefixes
+        # a shed must keep the newest local page window of EVERY shard
+        # resident: striping maps the newest r locals per shard onto the
+        # newest ~r*n_shards global pages
+        self.keep_recent = max(1, pcfg.recent_pages) * pcfg.n_shards
 
         # batched varlen chunk prefill (one shard_map dispatch per tick):
         # fixed flat width + fixed per-shard past window => one compile
-        scfg_live = self.sched.cfg
-        self._batched = (scfg_live.prefill_tokens is not None
-                         and scfg_live.chunk_pages is not None)
-        if self._batched:
-            self._budget_tokens = bucketing.budget_tokens(
-                scfg_live.prefill_tokens, scfg_engine.page_size,
-                scfg_live.chunk_pages, pow2=scfg_engine.bucket_pow2)
-            self._batch_wp = bucketing.bucket_count(
-                scfg_engine.batch_past_pages
-                or scfg_engine.n_pages_local - 1,
-                pow2=scfg_engine.bucket_pow2)
+        max_tokens = resolve_prefill_tokens(scfg, pcfg.page_size)
+        self.batched = max_tokens is not None
+        self.budget_tokens = self.batch_wp = None
+        if self.batched:
+            self.budget_tokens = bucketing.budget_tokens(
+                max_tokens, pcfg.page_size, scfg.chunk_pages,
+                pow2=pcfg.bucket_pow2)
+            self.batch_wp = bucketing.bucket_count(
+                pcfg.batch_past_pages or pcfg.n_pages_local - 1,
+                pow2=pcfg.bucket_pow2)
 
-        mesh, axis = self.mesh, self.topo.axis
         self._prefill_chunk = jax.jit(functools.partial(
             self._prefill_chunk_fn), donate_argnums=(2,))
         self._prefill_chunk_batch = jax.jit(functools.partial(
@@ -140,25 +141,25 @@ class SpatialServingEngine:
         # [L, 1, page, nkv, dh] becomes [n_shards, L, P_local, page, nkv,
         # dh], sharded over the mesh axis (one slab stack per device).
         from jax.sharding import NamedSharding, PartitionSpec as P
-        probe = {"tokens": jnp.zeros((1, scfg_engine.page_size), jnp.int32)}
+        probe = {"tokens": jnp.zeros((1, pcfg.page_size), jnp.int32)}
         _, cache_one = jax.jit(lambda p, b: lm.prefill(
             p, model_cfg, b, last_index=jnp.zeros((1,), jnp.int32)))(
                 params, probe)
-        spec = NamedSharding(mesh, P(axis))
+        spec = NamedSharding(self.mesh, P(self.topo.axis))
         def slab(leaf):
             shape = (self.topo.n_shards, leaf.shape[0],
-                     scfg_engine.n_pages_local) + leaf.shape[2:]
+                     pcfg.n_pages_local) + leaf.shape[2:]
             return jax.device_put(jnp.zeros(shape, leaf.dtype), spec)
         self.cache = {
             "layers": jax.tree.map(slab, cache_one["layers"]),
-            "lengths": jnp.zeros((scfg_engine.max_batch,), jnp.int32),
+            "lengths": jnp.zeros((pcfg.max_batch,), jnp.int32),
         }
         # committed-replicated so the decode signature never flips between
         # the first call (fresh buffer) and later ones (jit outputs) —
         # keeps the one-decode-compilation invariant
         self.last_token = jax.device_put(
-            jnp.zeros((scfg_engine.max_batch, 1), jnp.int32),
-            NamedSharding(mesh, P()))
+            jnp.zeros((pcfg.max_batch, 1), jnp.int32),
+            NamedSharding(self.mesh, P()))
 
     # -- jitted kernels -----------------------------------------------------
 
@@ -202,74 +203,66 @@ class SpatialServingEngine:
             lambda slab, r: jax.vmap(put)(slab, r, phys),
             pool_layers, rows_layers)
 
-    # -- queueing -----------------------------------------------------------
-
-    def submit(self, req: Request):
-        if req.max_len is not None and req.max_len <= len(req.prompt):
-            raise ValueError(
-                f"request {req.rid}: max_len {req.max_len} leaves no room "
-                f"after a {len(req.prompt)}-token prompt")
-        total = len(req.prompt) + req.max_tokens
-        if req.max_len is not None:
-            total = min(total, req.max_len)
-        need = -(-total // self.pcfg.page_size)
-        if not self.pools.fits(need):
-            raise ValueError(
-                f"request {req.rid}: {total} tokens needs {need} striped "
-                f"pages; {self.topo.n_shards} shards x "
-                f"{self.pcfg.n_pages_local - 1} pages cannot hold them")
-        if self._batched and self.topo.max_local_count(need) \
-                > self._batch_wp:
-            raise ValueError(
-                f"request {req.rid}: {need} striped pages exceeds the "
-                f"batched chunk-prefill past window ({self._batch_wp} "
-                f"pages/shard); raise SpatialEngineCfg.batch_past_pages")
-        req.out = []
-        self.sched.submit(req)
-
-    @property
-    def queue(self) -> list[Request]:
-        return self.sched.queued_requests()
-
     def _pull_scores(self) -> np.ndarray:
         """Per-shard DLZS page scores [n_shards, n_pages_local]."""
         return np.asarray(self._scores(self.cache["layers"]))
 
-    # -- executor protocol: admission ---------------------------------------
+    # -- admission ----------------------------------------------------------
 
-    def free_slot_available(self) -> bool:
-        return bool(self.free)
+    def check_capacity(self, rid: int, total: int, need: int) -> None:
+        if not self.pools.fits(need):
+            raise ValueError(
+                f"request {rid}: {total} tokens needs {need} striped "
+                f"pages; {self.topo.n_shards} shards x "
+                f"{self.pcfg.n_pages_local - 1} pages cannot hold them")
+        if self.batched and self.topo.max_local_count(need) > self.batch_wp:
+            raise ValueError(
+                f"request {rid}: {need} striped pages exceeds the "
+                f"batched chunk-prefill past window ({self.batch_wp} "
+                f"pages/shard); raise SpatialEngineCfg.batch_past_pages")
 
-    def exec_admit(self, req: Request) -> int:
-        slot = self.free.pop(0)
-        out = req.out or []
-        if out:        # recompute-resume: replay prompt + emitted tokens
-            prompt = np.concatenate(
-                [np.asarray(req.prompt, np.int64),
-                 np.asarray(out[:-1], np.int64)])
-        else:
-            prompt = np.asarray(req.prompt, np.int64)
-        spans = bucketing.chunk_spans(
-            len(prompt), self.pcfg.page_size, self.sched.cfg.chunk_pages,
-            pow2=self.pcfg.bucket_pow2)
-        self._pf[slot] = _PrefillProgress(
-            prompt=prompt,
-            toks=tuple(int(x) for x in prompt) if self._share else None,
-            spans=spans, chunk=0, sharing=self._share,
-            suppress_first=bool(out))
-        self.tables[slot] = []
-        self.active[slot] = req
-        self.lengths[slot] = 0
-        return slot
+    # -- pool primitives -----------------------------------------------------
 
-    def prefill_chunks_left(self, slot: int) -> int:
-        pf = self._pf.get(slot)
-        return 0 if pf is None else len(pf.spans) - pf.chunk
+    def alloc_chunk(self, pf, start_page: int, n_need: int
+                    ) -> tuple[list[int], list[int], bool]:
+        scores = self._pull_scores() \
+            if any(self.pools.free_pages(s) < n_need
+                   for s in range(self.topo.n_shards)) else None
+        return self.pools.admit_chunk(pf.toks, start_page, n_need,
+                                      scores, sharing=pf.sharing)
 
-    def held_pages(self, slot: int, shard: Optional[int] = None) -> int:
-        return self.pools.held_pages(self.tables.get(slot, ()), shard)
+    def release_pages(self, pages: list[int], start_global: int) -> None:
+        for i, pid in enumerate(pages):
+            self.pools.pools[self.topo.owner(start_global + i)].decref(pid)
 
-    # -- executor protocol: chunked prefill ---------------------------------
+    def release_table(self, table: list[int]) -> None:
+        for j, pid in enumerate(table):
+            if pid >= 0:
+                self.pools.pools[self.topo.owner(j)].decref(pid)
+
+    def lookup_prefix(self, g: int, key: tuple) -> Optional[int]:
+        return self.pools.pools[self.topo.owner(g)].lookup(key)
+
+    def register_prefix(self, g: int, key: tuple, pid: int) -> None:
+        self.pools.pools[self.topo.owner(g)].register(key, pid)
+
+    def decref_page(self, g: int, pid: int) -> None:
+        self.pools.pools[self.topo.owner(g)].decref(pid)
+
+    def register_prompt_pages(self, toks, table, fresh_globals,
+                              start_page: int) -> None:
+        self.pools.register_prompt_pages(toks, table, fresh_globals)
+
+    def ref_of(self, table, j: int) -> int:
+        return self.pools.pools[self.topo.owner(j)].ref(table[j])
+
+    def held_pages(self, table, shard: Optional[int] = None) -> int:
+        return self.pools.held_pages(table, shard)
+
+    def page_on_shard(self, j: int, shard: Optional[int] = None) -> bool:
+        return shard is None or self.topo.owner(j) == shard
+
+    # -- prefill dispatch -----------------------------------------------------
 
     def _past_state(self, table: list[int], start_page: int
                     ) -> tuple[np.ndarray, np.ndarray]:
@@ -288,277 +281,69 @@ class SpatialServingEngine:
             logical[s, 0, :len(globals_)] = globals_
         return phys, logical
 
-    def exec_prefill_chunk(self, slot: int) -> bool:
-        pf = self._pf[slot]
-        req = self.active[slot]
-        page = self.pcfg.page_size
-        start, end, width = pf.spans[pf.chunk]
+    def dispatch_chunk(self, pf, table, start, end, width, last_idx,
+                       pages, fresh_globals) -> np.ndarray:
+        page = self.page_size
         start_page = start // page
-        n_need = -(-end // page) - start_page
-        scores = self._pull_scores() \
-            if any(self.pools.free_pages(s) < n_need
-                   for s in range(self.topo.n_shards)) else None
-        try:
-            pages, fresh_globals, sharing = self.pools.admit_chunk(
-                pf.toks, start_page, n_need, scores, sharing=pf.sharing)
-        except ShardPoolExhausted as e:
-            raise NeedPages(slot, e.shard) from None
-        pf.sharing = sharing
-        table = self.tables[slot]
-        table.extend(pages)
-        t = len(pf.prompt)
-        last = pf.chunk == len(pf.spans) - 1
+        toks = bucketing.pad_tokens(pf.prompt[start:end], width)
+        batch = {"tokens": jnp.asarray(toks)[None, :]}
+        # chunk page targets: the owner shard scatters fresh pages,
+        # everything else (shared content, bucket padding) -> scratch
+        n = self.topo.n_shards
+        fresh_set = set(fresh_globals)
+        chunk_phys = np.full((n, 1, width // page), SCRATCH, np.int32)
+        for cj in range(len(pages)):
+            g = start_page + cj
+            if g in fresh_set:
+                chunk_phys[self.topo.owner(g), 0, cj] = table[g]
+        past_phys, past_logical = self._past_state(table, start_page)
+        chunk_state = {
+            "past_phys": jnp.asarray(past_phys),
+            "past_logical": jnp.asarray(past_logical),
+            "chunk_phys": jnp.asarray(chunk_phys),
+            "past_len": jnp.asarray([start], jnp.int32),
+            "last_index": jnp.asarray([last_idx], jnp.int32)}
+        logits, new_cache = self._prefill_chunk(
+            self.params, batch, {"layers": self.cache["layers"]},
+            chunk_state)
+        self.cache["layers"] = new_cache["layers"]
+        # stays on device: middle chunks' logits are never read, and the
+        # final chunk's row is materialized once by _finish_prefill
+        return logits[0]
 
-        logits = None
-        if fresh_globals or last:   # fully-shared middle chunks skip compute
-            toks = bucketing.pad_tokens(pf.prompt[start:end], width)
-            batch = {"tokens": jnp.asarray(toks)[None, :]}
-            last_idx = (t - 1 if last else end - 1) - start
-            # chunk page targets: the owner shard scatters fresh pages,
-            # everything else (shared content, bucket padding) -> scratch
-            n = self.topo.n_shards
-            fresh_set = set(fresh_globals)
-            chunk_phys = np.full((n, 1, width // page), SCRATCH, np.int32)
-            for cj in range(n_need):
-                g = start_page + cj
-                if g in fresh_set:
-                    chunk_phys[self.topo.owner(g), 0, cj] = table[g]
-            past_phys, past_logical = self._past_state(table, start_page)
-            chunk_state = {
-                "past_phys": jnp.asarray(past_phys),
-                "past_logical": jnp.asarray(past_logical),
-                "chunk_phys": jnp.asarray(chunk_phys),
-                "past_len": jnp.asarray([start], jnp.int32),
-                "last_index": jnp.asarray([last_idx], jnp.int32)}
-            logits, new_cache = self._prefill_chunk(
-                self.params, batch, {"layers": self.cache["layers"]},
-                chunk_state)
-            self.cache["layers"] = new_cache["layers"]
-            if self._share and pf.toks is not None:
-                self.pools.register_prompt_pages(pf.toks, table,
-                                                 fresh_globals)
-        pf.chunk += 1
-        if not last:
-            return False
+    def arena_cost(self, past_pages: int) -> list[int]:
+        # striping puts ~past_pages/n past slots on each shard's arena
+        return [self.topo.local_count(past_pages, s)
+                for s in range(self.topo.n_shards)]
 
-        if pf.suppress_first:
-            tok = int(req.out[-1])
-        else:
-            tok = int(jnp.argmax(logits[0, :self.cfg.vocab]))
-            req.out.append(tok)
-        del self._pf[slot]
-        self.lengths[slot] = t
-        self.last_token = self.last_token.at[slot, 0].set(tok)
-        self.budget[slot] = req.max_tokens - len(req.out)
-        if self.budget[slot] <= 0:
-            self.pools.release(self.tables.pop(slot))
-            del self.active[slot]
-            del self.budget[slot]
-            self.lengths[slot] = 0
-            self.free.append(slot)
-            self._prefill_done.append((slot, req))
-        return True
-
-    # -- executor protocol: batched varlen chunk prefill --------------------
-
-    def pending_chunk_widths(self, slot: int) -> list[int]:
-        pf = self._pf[slot]
-        return [w for _, _, w in pf.spans[pf.chunk:]]
-
-    @staticmethod
-    def _merged_span(pf, n: int) -> tuple[int, int, int]:
-        start = pf.spans[pf.chunk][0]
-        end = pf.spans[pf.chunk + n - 1][1]
-        width = sum(w for _, _, w in pf.spans[pf.chunk:pf.chunk + n])
-        return start, end, width
-
-    def _release_from(self, pages: list[int], start_global: int) -> None:
-        """Decref chunk pages whose global indices start at
-        ``start_global`` (pending pages are not in the table yet)."""
-        for i, pid in enumerate(pages):
-            self.pools.pools[self.topo.owner(start_global + i)].decref(pid)
-
-    def exec_prefill_chunk_batch(self, batch: list[tuple[int, int]]
-                                 ) -> list[int]:
-        """Advance every ``(slot, n_chunks)`` entry in ONE shard_map
-        dispatch — the spatial twin of the paged engine's batched path.
-
-        Same phases (allocate with ``pf.pending`` idempotence; same-tick
-        prefix dedup; pack; commit after the dispatch), except the past
-        ARENA and the chunk scatter targets are per-SHARD: shard s
-        gathers its local slices of every lane's past pages and scatters
-        the flat buffer's pages it owns, with the cross-shard softmax
-        merged through the usual pmax/psum tree. Raises shard-tagged
-        NeedPages from the allocation phase, before anything commits."""
-        page = self.pcfg.page_size
-        n_sh = self.topo.n_shards
-        for slot, n in batch:                  # phase A: allocation
-            pf = self._pf[slot]
-            if pf.pending is not None:
-                continue
-            n = max(1, min(n, len(pf.spans) - pf.chunk))
-            start, end, _ = self._merged_span(pf, n)
-            start_page = start // page
-            n_need = -(-end // page) - start_page
-            scores = self._pull_scores() \
-                if any(self.pools.free_pages(s) < n_need
-                       for s in range(n_sh)) else None
-            try:
-                pages, fresh_globals, sharing = self.pools.admit_chunk(
-                    pf.toks, start_page, n_need, scores,
-                    sharing=pf.sharing)
-            except ShardPoolExhausted as e:
-                raise NeedPages(slot, e.shard) from None
-            pf.sharing = sharing
-            pf.pending = (pages, fresh_globals, n)
-
-        # Phase A2 — same-tick prefix dedup (see the paged engine): with
-        # every allocation committed, fresh full prompt pages register on
-        # their owner shard now, and later slots in the batch share them
-        # — the owning lane scatters the content this same dispatch.
-        slots = [s for s, _ in batch]
-        if self._share:
-            for slot in slots:
-                pf = self._pf[slot]
-                if pf.toks is None:
-                    continue
-                pages, fresh_globals, n = pf.pending
-                start_page = pf.spans[pf.chunk][0] // page
-                fresh_set = set(fresh_globals)
-                new_fresh = []
-                for cj, pid in enumerate(pages):
-                    g = start_page + cj
-                    if g not in fresh_set:
-                        continue
-                    end = (g + 1) * page
-                    if end > len(pf.toks):
-                        new_fresh.append(g)
-                        continue
-                    s = self.topo.owner(g)
-                    key = tuple(pf.toks[:end])
-                    hit = self.pools.pools[s].lookup(key)
-                    if hit is not None:        # an earlier lane owns it
-                        self.pools.pools[s].decref(pid)
-                        pages[cj] = hit
-                    else:
-                        self.pools.pools[s].register(key, pid)
-                        new_fresh.append(g)
-                pf.pending = (pages, new_fresh, n)
-
-        def is_last(slot):
-            pf = self._pf[slot]
-            return pf.chunk + pf.pending[2] == len(pf.spans)
-
-        compute = [s for s in slots
-                   if self._pf[s].pending[1] or is_last(s)]
-
-        # wave split on the per-shard arena (striping puts ~start_page/n
-        # past slots on each shard) and the token buffer
-        waves: list[list[int]] = []
-        cur: list[int] = []
-        cur_p = [0] * n_sh
-        cur_t = 0
-        for slot in compute:
-            pf = self._pf[slot]
-            start, _, width = self._merged_span(pf, pf.pending[2])
-            sp = start // page
-            local = [self.topo.local_count(sp, s) for s in range(n_sh)]
-            if cur and (cur_t + width > self._budget_tokens
-                        or any(cur_p[s] + local[s] > self._batch_wp
-                               for s in range(n_sh))):
-                waves.append(cur)
-                cur, cur_p, cur_t = [], [0] * n_sh, 0
-            cur.append(slot)
-            cur_p = [cur_p[s] + local[s] for s in range(n_sh)]
-            cur_t += width
-        if cur:
-            waves.append(cur)
-
-        logits_by_slot: dict[int, np.ndarray] = {}
-        for wave in waves:                     # phase B: dispatch(es)
-            self._dispatch_chunk_wave(wave, logits_by_slot)
-
-        done = []
-        for slot in slots:                     # phase C: commit
-            pf = self._pf[slot]
-            pages, fresh_globals, n = pf.pending
-            self.tables[slot].extend(pages)
-            # prefix registration already happened in phase A2 — the
-            # sole registration point (see the paged engine)
-            pf.pending = None
-            pf.chunk += n
-            if pf.chunk < len(pf.spans):
-                continue
-            req = self.active[slot]
-            if pf.suppress_first:
-                tok = int(req.out[-1])
-            else:
-                tok = int(np.argmax(
-                    logits_by_slot[slot][:self.cfg.vocab]))
-                req.out.append(tok)
-            del self._pf[slot]
-            self.lengths[slot] = len(pf.prompt)
-            self.last_token = self.last_token.at[slot, 0].set(tok)
-            self.budget[slot] = req.max_tokens - len(req.out)
-            done.append(slot)
-            if self.budget[slot] <= 0:
-                self.pools.release(self.tables.pop(slot))
-                del self.active[slot]
-                del self.budget[slot]
-                self.lengths[slot] = 0
-                self.free.append(slot)
-                self._prefill_done.append((slot, req))
-        return done
-
-    def _dispatch_chunk_wave(self, wave: list[int],
-                             logits_by_slot: dict) -> None:
-        """Pack one wave into the flat buffer + per-shard past arenas
-        and run the single compiled shard_map dispatch."""
-        page = self.pcfg.page_size
-        n_sh = self.topo.n_shards
-        b_tok, wp, lanes = self._budget_tokens, self._batch_wp, \
-            self.pcfg.max_batch
-        flat = np.zeros((b_tok,), np.int32)
-        seg = np.full((b_tok,), -1, np.int32)
-        pos = np.zeros((b_tok,), np.int32)
+    def dispatch_wave(self, flat, seg, pos, past_len, last_index,
+                      lanes) -> dict[int, np.ndarray]:
+        """Fill the per-SHARD past arenas + chunk scatter targets for one
+        wave and run the single compiled shard_map dispatch, cross-shard
+        softmax merged through the usual pmax/psum tree."""
+        page, n_sh = self.page_size, self.topo.n_shards
+        b_tok, wp = self.budget_tokens, self.batch_wp
         chunk_phys = np.full((n_sh, 1, b_tok // page), SCRATCH, np.int32)
         past_phys = np.full((n_sh, wp), -1, np.int32)
         past_lane = np.full((n_sh, wp), -1, np.int32)
         past_logical = np.full((n_sh, wp), -1, np.int32)
-        past_len = np.zeros((lanes,), np.int32)
-        last_index = np.zeros((lanes,), np.int32)
-        cursor = 0
         arena = [0] * n_sh
-        for slot in wave:
-            pf = self._pf[slot]
-            pages, fresh_globals, n = pf.pending
-            start, end, width = self._merged_span(pf, n)
-            start_page = start // page
-            last = pf.chunk + n == len(pf.spans)
-            t = len(pf.prompt)
-            flat[cursor:cursor + width] = bucketing.pad_tokens(
-                pf.prompt[start:end], width)
-            seg[cursor:cursor + width] = slot
-            pos[cursor:cursor + width] = start + np.arange(width)
-            last_index[slot] = cursor + (t - 1 if last else end - 1) \
-                - start
-            past_len[slot] = start
-            table = self.tables[slot]
+        for lane in lanes:
+            slot, table = lane["slot"], lane["table"]
+            sp = lane["start_page"]
             for s in range(n_sh):
-                globals_ = list(range(s, start_page, n_sh))
+                globals_ = list(range(s, sp, n_sh))
                 a = arena[s]
                 past_phys[s, a:a + len(globals_)] = \
                     [table[j] for j in globals_]
                 past_lane[s, a:a + len(globals_)] = slot
                 past_logical[s, a:a + len(globals_)] = globals_
                 arena[s] = a + len(globals_)
-            fresh_set = set(fresh_globals)
-            base = cursor // page
-            for cj, pid in enumerate(pages):
-                g = start_page + cj
-                if g in fresh_set:
+            base = lane["base"]
+            for cj, pid in enumerate(lane["pages"]):
+                g = sp + cj
+                if g in lane["fresh"]:
                     chunk_phys[self.topo.owner(g), 0, base + cj] = pid
-            cursor += width
         pack_state = {
             "seg_ids": jnp.asarray(seg),
             "positions": jnp.asarray(pos),
@@ -573,22 +358,11 @@ class SpatialServingEngine:
             {"layers": self.cache["layers"]}, pack_state)
         self.cache["layers"] = new_cache["layers"]
         logits_host = np.asarray(logits)
-        for slot in wave:
-            logits_by_slot[slot] = logits_host[slot]
+        return {lane["slot"]: logits_host[lane["slot"]] for lane in lanes}
 
-    def exec_shed_cold(self, slot: int, shard: Optional[int] = None
-                       ) -> int:
-        """Lazy cold-page swap is not wired for the sharded pools yet
-        (ROADMAP follow-up) — report nothing sheddable so the scheduler
-        falls back to an ordinary full preemption."""
-        return 0
+    # -- decode ----------------------------------------------------------------
 
-    # -- executor protocol: decode ------------------------------------------
-
-    def _decode_slots(self) -> list[int]:
-        return [s for s in self.active if s not in self._pf]
-
-    def _page_state(self, slots: list[int]) -> dict:
+    def _page_state(self, slots, tables, lengths) -> dict:
         n = self.topo.n_shards
         b, w = self.pcfg.max_batch, self.pcfg.hot_pages_local
         page = self.pcfg.page_size
@@ -598,20 +372,19 @@ class SpatialServingEngine:
         write_off = np.zeros((n, b), np.int32)
 
         growers = [slot for slot in slots
-                   if int(self.lengths[slot]) // page
-                   == len(self.tables[slot])]
+                   if int(lengths[slot]) // page == len(tables[slot])]
         grow_by_shard = [0] * n
         for slot in growers:
-            grow_by_shard[self.topo.owner(len(self.tables[slot]))] += 1
+            grow_by_shard[self.topo.owner(len(tables[slot]))] += 1
         need_scores = (
-            any(self.topo.max_local_count(len(self.tables[s])) > w
+            any(self.topo.max_local_count(len(tables[s])) > w
                 for s in slots)
             or any(self.pools.free_pages(s) < grow_by_shard[s]
                    for s in range(n)))
         scores = self._pull_scores() if need_scores else None
         for slot in slots:
-            table = self.tables[slot]
-            length = int(self.lengths[slot])
+            table = tables[slot]
+            length = int(lengths[slot])
             idx = length // page
             if idx == len(table):              # tail page full: grow
                 try:
@@ -636,195 +409,105 @@ class SpatialServingEngine:
                 "write_page": jnp.asarray(write_page),
                 "write_off": jnp.asarray(write_off)}
 
-    def exec_decode(self) -> list[tuple[int, Request]]:
-        slots = self._decode_slots()
-        if not slots:
-            done_early, self._prefill_done = self._prefill_done, []
-            return done_early
-        ps = self._page_state(slots)       # may raise NeedPages
-        done_early, self._prefill_done = self._prefill_done, []
-        self.cache["lengths"] = jnp.asarray(self.lengths, jnp.int32)
+    def decode_step(self, slots, tables, lengths):
+        ps = self._page_state(slots, tables, lengths)  # may raise NeedPages
+        self.cache["lengths"] = jnp.asarray(lengths, jnp.int32)
         logits, self.cache = self._decode(self.params, self.last_token,
                                           self.cache, ps)
-        logits = logits[:, :self.cfg.vocab]
-        if self.pcfg.greedy:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            self.rng, sub = jax.random.split(self.rng)
-            nxt = jax.random.categorical(
-                sub, logits / self.pcfg.temperature, axis=-1)
-        self.last_token = nxt[:, None].astype(jnp.int32)
-        nxt_host = np.asarray(nxt)
-        finished = done_early
-        for slot in slots:
-            req = self.active[slot]
-            tok = int(nxt_host[slot])
-            req.out.append(tok)
-            self.lengths[slot] += 1
-            self.budget[slot] -= 1
-            limit = req.max_len
-            done = (tok == self.pcfg.eos_id or self.budget[slot] <= 0
-                    or (limit is not None
-                        and self.lengths[slot] + 1 >= limit))
-            if done:
-                self.pools.release(self.tables.pop(slot))
-                del self.active[slot]
-                del self.budget[slot]
-                self.lengths[slot] = 0
-                self.free.append(slot)
-                finished.append((slot, req))
-        return finished
+        return logits
 
-    # -- executor protocol: preemption / swap -------------------------------
+    def set_last_token(self, slot: int, tok: int) -> None:
+        self.last_token = self.last_token.at[slot, 0].set(tok)
 
-    def exec_preempt(self, slot: int, swap: bool) -> bool:
-        """Evict ``slot`` with the same shared-prefix-aware parking as the
-        paged engine (swap_policy core): ref-1 pages are gathered per
-        shard into the host SwapArea; shared pages keep this sequence's
-        reference (and stay resident on their shard) until it resumes."""
-        req = self.active.pop(slot)
-        table = self.tables.pop(slot)
-        pf = self._pf.pop(slot, None)
-        swap_policy.release_pending(
-            pf, lambda pgs: self._release_from(pgs, len(table)))
-        swapped = False
-        if swap and table:
-            n = self.topo.n_shards
-            kept, park, _ = swap_policy.partition_table(
-                table,
-                lambda j: self.pools.pools[self.topo.owner(j)].ref(
-                    table[j]))
-            park_by_shard = [[j for j in park if self.topo.owner(j) == s]
-                             for s in range(n)]
-            host = None
-            nbytes = 0
-            if park:
-                max_park = max(len(p) for p in park_by_shard)
-                wpad = bucketing.bucket_count(max_park,
-                                              pow2=self.pcfg.bucket_pow2)
-                phys = np.full((n, wpad), SCRATCH, np.int32)
-                for s in range(n):
-                    phys[s, :len(park_by_shard[s])] = \
-                        [table[j] for j in park_by_shard[s]]
-                rows = self._gather_pages(self.cache["layers"],
-                                          jnp.asarray(phys))
-                # the gather width is pow2-bucketed for jit-shape
-                # stability, but only the real pages are parked — copy
-                # out of the padded buffer so host swap memory matches
-                # the reported swap pressure
-                host = jax.tree.map(
-                    lambda r: np.ascontiguousarray(
-                        np.asarray(r)[:, :, :max_park]), rows)
-                nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(host))
-            state = swap_policy.progress_state(
-                req, pf, share=self._share,
-                length=int(self.lengths[slot]),
-                last_token=int(np.asarray(self.last_token[slot, 0])),
-                budget=self.budget.get(slot, 0))
-            state.update(rows=host, park_by_shard=park_by_shard,
-                         kept=kept, n_pages=len(table))
-            self.swap_area.put(req.rid, state, nbytes)
-            for s in range(n):
-                for j in park_by_shard[s]:
-                    self.pools.pools[s].decref(table[j])
-            swapped = True
-        else:
-            self.pools.release(table)
-        self.budget.pop(slot, None)
-        self.lengths[slot] = 0
-        self.free.append(slot)
-        return swapped
+    def get_last_token(self, slot: int) -> int:
+        return int(np.asarray(self.last_token[slot, 0]))
 
-    def exec_swap_in(self, req: Request) -> Optional[int]:
-        state = self.swap_area.peek(req.rid)
+    def commit_tokens(self, next_tokens) -> None:
+        self.last_token = next_tokens[:, None].astype(jnp.int32)
+
+    # -- shed / swap -----------------------------------------------------------
+
+    def hot_logical(self, table) -> set[int]:
+        """Union of every shard's DLZS hot selection (global indices)."""
+        scores = self._pull_scores()
+        hot: set[int] = set()
+        for s in range(self.topo.n_shards):
+            _, lg = self.pools.select_hot(
+                table, s, self.pcfg.hot_pages_local, scores)
+            hot.update(int(j) for j in lg if j >= 0)
+        return hot
+
+    def gather_park(self, table, js):
+        """Pull global pages ``js`` to the host in flat payload order —
+        the gather runs per shard (pow2-padded local widths for jit-shape
+        stability), then the real pages are re-flattened so the payload
+        layout matches the single-pool backend's exactly."""
         n = self.topo.n_shards
-        park_by_shard = state["park_by_shard"]
-        if any(self.pools.reclaimable(s) < len(park_by_shard[s])
-               for s in range(n)):
-            return None
+        by_shard = [[j for j in js if self.topo.owner(j) == s]
+                    for s in range(n)]
+        wpad = bucketing.bucket_count(
+            max(1, max(len(b) for b in by_shard)),
+            pow2=self.pcfg.bucket_pow2)
+        phys = np.full((n, wpad), SCRATCH, np.int32)
+        for s in range(n):
+            phys[s, :len(by_shard[s])] = [table[j] for j in by_shard[s]]
+        rows = self._gather_pages(self.cache["layers"], jnp.asarray(phys))
+        pos_of = {j: (s, k) for s in range(n)
+                  for k, j in enumerate(by_shard[s])}
+        def flatten(r):
+            r = np.asarray(r)                   # [n_sh, L, wpad, ...]
+            out = np.empty((r.shape[1], len(js)) + r.shape[3:], r.dtype)
+            for p, j in enumerate(js):
+                s, k = pos_of[j]
+                out[:, p] = r[s, :, k]
+            return out
+        return jax.tree.map(flatten, rows)
+
+    def can_hold(self, park_js) -> bool:
+        counts = [0] * self.topo.n_shards
+        for j in park_js:
+            counts[self.topo.owner(j)] += 1
+        return all(self.pools.reclaimable(s) >= counts[s]
+                   for s in range(self.topo.n_shards))
+
+    def page_in_extend(self, park_js):
+        counts = [0] * self.topo.n_shards
+        for j in park_js:
+            counts[self.topo.owner(j)] += 1
         scores = self._pull_scores() \
-            if any(self.pools.free_pages(s) < len(park_by_shard[s])
-                   for s in range(n)) else None
-        # one flat shard-major plan: the prefix re-lookup / allocate /
-        # rollback loop is the shared swap core, with each page routed to
-        # its owner shard's pool
-        park_flat = [j for s in range(n) for j in park_by_shard[s]]
-        plan = swap_policy.plan_page_in(
-            park_flat, state["lookup_toks"], self.pcfg.page_size,
-            lookup=lambda j, key:
-                self.pools.pools[self.topo.owner(j)].lookup(key),
-            extend=lambda j: self.pools.allocs[self.topo.owner(j)].extend(
-                scores[self.topo.owner(j)] if scores is not None
-                else None),
-            rollback=lambda j, pid:
-                self.pools.pools[self.topo.owner(j)].decref(pid))
-        if plan is None:             # defensive: entry stays put
-            return None
-        filled, upload_flat = plan
-        # flat park order is shard-major, so a flat position maps back to
-        # (shard, within-shard position) for the row upload
-        upload: list[tuple[int, int, int]] = []   # (shard, park pos, phys)
-        for pos, pid in upload_flat:
-            j = park_flat[pos]
+            if any(self.pools.free_pages(s) < counts[s]
+                   for s in range(self.topo.n_shards)) else None
+        def extend(j):
             s = self.topo.owner(j)
-            upload.append((s, park_by_shard[s].index(j), pid))
-        state = self.swap_area.take(req.rid)
-        slot = self.free.pop(0)
-        for j, pid in state["kept"]:
-            filled[j] = pid
-        table = [filled[j] for j in range(state["n_pages"])]
-        if upload:
-            per_shard = [[(pos, pid) for s2, pos, pid in upload if s2 == s]
-                         for s in range(n)]
-            wpad = bucketing.bucket_count(
-                max(1, max(len(u) for u in per_shard)),
-                pow2=self.pcfg.bucket_pow2)
-            phys = np.full((n, wpad), SCRATCH, np.int32)
+            return self.pools.allocs[s].extend(
+                scores[s] if scores is not None else None)
+        return extend
+
+    def upload_park(self, rows, uploads) -> None:
+        """Regroup flat payload rows by owner shard and write them back
+        through the per-shard page-in scatter."""
+        n = self.topo.n_shards
+        per_shard: list[list[tuple[int, int]]] = [[] for _ in range(n)]
+        for pos, j, pid in uploads:
+            per_shard[self.topo.owner(j)].append((pos, pid))
+        wpad = bucketing.bucket_count(
+            max(1, max(len(u) for u in per_shard)),
+            pow2=self.pcfg.bucket_pow2)
+        phys = np.full((n, wpad), SCRATCH, np.int32)
+        for s in range(n):
+            phys[s, :len(per_shard[s])] = [pid for _, pid in per_shard[s]]
+        def sub_rows(r):                        # r: [L, n_park, ...] flat
+            out = np.zeros((n, r.shape[0], wpad) + r.shape[2:], r.dtype)
             for s in range(n):
-                phys[s, :len(per_shard[s])] = [pid for _, pid
-                                               in per_shard[s]]
-            def sub_rows(r):
-                out = np.zeros((n, r.shape[1], wpad) + r.shape[3:],
-                               r.dtype)
-                for s in range(n):
-                    pos = [p for p, _ in per_shard[s]]
-                    if pos:
-                        out[s, :, :len(pos)] = r[s][:, pos]
-                return out
-            self.cache["layers"] = self._page_in(
-                self.cache["layers"],
-                jax.tree.map(sub_rows, state["rows"]), jnp.asarray(phys))
-        self.tables[slot] = table
-        self.active[slot] = req
-        pf = swap_policy.restore_progress(state)
-        if pf is not None:
-            self._pf[slot] = pf
-            self.lengths[slot] = 0
-        else:
-            self.lengths[slot] = state["length"]
-            self.last_token = self.last_token.at[slot, 0].set(
-                state["last_token"])
-            self.budget[slot] = state["budget"]
-        return slot
+                pos = [p for p, _ in per_shard[s]]
+                if pos:
+                    out[s, :, :len(pos)] = r[:, pos]
+            return out
+        self.cache["layers"] = self._page_in(
+            self.cache["layers"], jax.tree.map(sub_rows, rows),
+            jnp.asarray(phys))
 
-    # -- driver -------------------------------------------------------------
-
-    def step(self) -> list[Request]:
-        return self.sched.tick(self)
-
-    def run(self, requests: list[Request], max_steps: int = 10_000):
-        """Serve a request list to completion; returns {rid: tokens}."""
-        for r in requests:
-            self.submit(r)
-        done: dict[int, list] = {}
-        steps = 0
-        while self.sched.has_work() and steps < max_steps:
-            for fin in self.step():
-                done[fin.rid] = fin.out
-            steps += 1
-        return done
-
-    # -- observability ------------------------------------------------------
+    # -- observability -----------------------------------------------------------
 
     def stats(self) -> dict:
         pools = self.pools.stats()
@@ -833,11 +516,47 @@ class SpatialServingEngine:
         return {
             "pools": pools,
             "n_shards": self.topo.n_shards,
-            "swap": self.swap_area.stats(),
-            "sched": dataclasses.replace(self.sched.stats),
             "bytes_per_page": per_page,
             "working_set_bytes": pools["peak_live"] * per_page,
             "slab_bytes": metrics.tree_bytes(self.cache["layers"]),
             "decode_compiles": self._decode._cache_size(),
             "prefill_batch_compiles": self._prefill_chunk_batch._cache_size(),
         }
+
+
+class SpatialServingEngine(EngineCore):
+    """The sequence-sharded serving engine: ``SpatialBackend`` under the
+    shared ``EngineCore`` executor. Thin by design — every scheduler-
+    visible behavior (including lazy cold-page shedding) lives in
+    engine_core.py and is identical to the paged engine's."""
+
+    def __init__(self, model_cfg, params, scfg_engine: SpatialEngineCfg,
+                 scfg: Optional[SchedulerCfg] = None,
+                 rng: Optional[jax.Array] = None):
+        scfg = scfg or SchedulerCfg()
+        super().__init__(SpatialBackend(model_cfg, params, scfg_engine,
+                                        scfg), scfg, rng)
+
+    @property
+    def pcfg(self) -> SpatialEngineCfg:
+        return self.backend.pcfg
+
+    @property
+    def pools(self) -> ShardedPagePools:
+        return self.backend.pools
+
+    @property
+    def topo(self) -> ShardTopology:
+        return self.backend.topo
+
+    @property
+    def mesh(self):
+        return self.backend.mesh
+
+    @property
+    def last_token(self):
+        return self.backend.last_token
+
+    @property
+    def cache(self):
+        return self.backend.cache

@@ -1,144 +1,39 @@
-"""Execution orchestration over a serving engine (paged or spatial).
+"""DEPRECATED — ``Orchestrator`` became ``repro.serving.api.LLM``.
 
-The scheduler (serving/scheduler.py) decides what happens inside one
-engine tick; the orchestrator runs the ticks and owns everything around
-them — the layer launch/serve.py and the benchmarks drive:
-
-* QoS submission — requests enter with an SLA class ("interactive" |
-  "standard" | "batch") that the scheduler maps onto ``Request.priority``
-  (admitted first, preempted last), so external service tiers steer the
-  same preemption machinery the pressure tests pin down.
-* interleaving — each tick advances at most ``prefill_per_step`` prefill
-  chunks and one fused decode across every decode-phase slot; for the
-  spatial engine that is one SPMD dispatch per phase over the shard mesh.
-  The orchestrator simply keeps ticking while work exists, which is what
-  interleaves a long prompt's chunk stream with running decodes.
-* observability — per-request TTFT / completion latency and a final
-  report (tok/s, preemption counters, pool stats) without every driver
-  re-implementing the measurement loop.
-
-Engine-agnostic by construction: anything exposing ``submit / step /
-queue / active / stats`` works (``PagedServingEngine``,
-``SpatialServingEngine``).
+The tick-loop / QoS-submission / TTFT-reporting layer that lived here is
+now the backend-agnostic serving front door (``LLM``), shared by the
+dense, paged and spatial runtimes. This module remains for one PR as a
+thin shim: ``Orchestrator(engine)`` still works (it subclasses ``LLM``),
+``submit`` still returns a plain rid and ``report()`` still exists, but
+new code should construct ``LLM`` (or ``LLM.from_config``) directly.
+See the migration note in docs/serving.md.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Optional
+import warnings
 
-import numpy as np
+from repro.serving.api import LLM, RequestRecord  # noqa: F401 (re-export)
 
-from repro.serving.engine import Request
+__all__ = ["Orchestrator", "RequestRecord"]
 
 
-@dataclasses.dataclass
-class RequestRecord:
-    req: Request
-    submit_t: float
-    first_token_t: Optional[float] = None
-    done_t: Optional[float] = None
+class Orchestrator(LLM):
+    """Deprecated alias of ``repro.serving.api.LLM``.
 
-    @property
-    def ttft(self) -> Optional[float]:
-        return None if self.first_token_t is None \
-            else self.first_token_t - self.submit_t
+    Differences kept for the one-PR migration window: ``submit``
+    returns the rid (not a ``RequestHandle``) and ``report()`` aliases
+    ``metrics()``."""
 
-    @property
-    def latency(self) -> Optional[float]:
-        return None if self.done_t is None else self.done_t - self.submit_t
-
-
-class Orchestrator:
     def __init__(self, engine):
-        self.engine = engine
-        self.records: dict[int, RequestRecord] = {}
-        self._pending: dict[int, RequestRecord] = {}   # not yet finished:
-        #                         the only records a tick has to touch, so
-        #                         a long-lived serve loop stays O(active)
-        #                         per tick, not O(all-time requests)
-        self._next_rid = 0
+        warnings.warn(
+            "repro.spatial.Orchestrator is deprecated; use "
+            "repro.serving.api.LLM (LLM.from_config builds the engine "
+            "too)", DeprecationWarning, stacklevel=2)
+        super().__init__(engine)
 
-    # -- submission ----------------------------------------------------------
-
-    def submit(self, prompt, max_tokens: int = 32, *,
-               sla: Optional[str] = None, priority: Optional[int] = None,
-               max_len: Optional[int] = None, rid: Optional[int] = None
-               ) -> int:
-        """Queue one request; returns its rid. ``sla`` is the QoS input —
-        the scheduler maps it to a priority at submit (an explicit
-        ``priority`` wins)."""
-        if rid is None:
-            rid = self._next_rid
-        self._next_rid = max(self._next_rid, rid + 1)
-        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
-                      max_tokens=max_tokens, max_len=max_len,
-                      sla=None if priority is not None else sla,
-                      priority=priority or 0)
-        rec = RequestRecord(req, time.perf_counter())
-        self.records[rid] = rec
-        self._pending[rid] = rec
-        self.engine.submit(req)
-        return rid
-
-    # -- the serve loop ------------------------------------------------------
-
-    def tick(self) -> list[Request]:
-        """One engine step; stamps TTFT / completion times."""
-        finished = self.engine.step() or []
-        now = time.perf_counter()
-        for rec in self._pending.values():
-            if rec.first_token_t is None and rec.req.out:
-                rec.first_token_t = now
-        for fin in finished:
-            rec = self._pending.pop(fin.rid)
-            rec.done_t = now
-        return finished
-
-    def has_work(self) -> bool:
-        return bool(self.engine.queue or self.engine.active)
-
-    def run(self, max_steps: int = 100_000) -> dict[int, list]:
-        """Drain every queued request; returns {rid: tokens}."""
-        done: dict[int, list] = {}
-        steps = 0
-        while self.has_work() and steps < max_steps:
-            for fin in self.tick():
-                done[fin.rid] = fin.out
-            steps += 1
-        return done
-
-    def clear_finished(self) -> None:
-        """Drop finished records (typically after ``report()``) so a
-        persistent server's history does not grow without bound."""
-        self.records = {rid: rec for rid, rec in self.records.items()
-                        if rec.done_t is None}
-
-    # -- reporting -----------------------------------------------------------
+    def submit(self, prompt, max_tokens: int = 32, **kw) -> int:  # type: ignore[override]
+        return super().submit(prompt, max_tokens, **kw).rid
 
     def report(self) -> dict:
-        recs = [r for r in self.records.values() if r.done_t is not None]
-        if not recs:
-            return {"requests": 0}
-        t0 = min(r.submit_t for r in recs)
-        t1 = max(r.done_t for r in recs)
-        n_tok = sum(len(r.req.out) for r in recs)
-        ttfts = sorted(r.ttft for r in recs if r.ttft is not None)
-        by_sla: dict[str, list] = {}
-        for r in recs:
-            by_sla.setdefault(r.req.sla or "default", []).append(r)
-        return {
-            "requests": len(recs),
-            "tokens": n_tok,
-            "wall_s": round(t1 - t0, 4),
-            "tok_s": round(n_tok / max(t1 - t0, 1e-9), 1),
-            "ttft_p50_ms": round(1e3 * ttfts[len(ttfts) // 2], 1),
-            "ttft_mean_ms": round(1e3 * float(np.mean(ttfts)), 1),
-            "per_sla": {
-                k: {"requests": len(v),
-                    "ttft_mean_ms": round(1e3 * float(np.mean(
-                        [r.ttft for r in v if r.ttft is not None])), 1)}
-                for k, v in sorted(by_sla.items())},
-            "engine": self.engine.stats(),
-        }
+        return self.metrics()

@@ -1,0 +1,250 @@
+"""Backend-conformance scenarios for the shared EngineCore executor.
+
+One scenario set, driven ONLY through the ``repro.serving.api.LLM``
+front door, that every pool-backed serving backend must pass:
+
+* admission + token parity with the dense oracle (sequential chunked,
+  batched varlen, and ``prefill_tokens="auto"`` budget-controller paths)
+  with the one-compile invariants;
+* pool pressure: preempt/swap/page-in keeps token parity with an
+  unpressured run of the same backend (batched path);
+* recompute-mode preemption parity;
+* lazy cold-page shedding: under pressure with ``lazy_swap`` victims
+  park DLZS-cold ref-1 pages and KEEP decoding — sheds happen, full
+  preemptions do not, every request completes;
+* max_tokens=1 and submit-time capacity rejection semantics.
+
+Runners supply a ``make_llm(max_batch, pages, hot, scfg, ...)`` factory
+(``pages``/``hot`` are per-pool-shard for sharded backends — the same
+numbers the per-engine tests historically used) plus a params dict from
+``BACKEND_PARAMS``. ``tests/test_engine_core.py`` runs the paged backend
+in-process; ``tests/spatial_progs/conformance_prog.py`` runs the spatial
+backend on a fake-device mesh in a subprocess.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving import EngineCfg, LLM, SchedulerCfg, ServingEngine
+
+MIXED_LENGTHS = (5, 8, 17, 33, 40)
+PRESSURE_LENGTHS = (16, 17, 16, 18)
+
+# scenario sizing per backend kind (pages are per pool shard)
+BACKEND_PARAMS = {
+    "paged": {
+        "pressure_pages": 7,
+        "shed": dict(pages=9, hot=3, prompt_len=40, gen=48),
+    },
+    "spatial2": {
+        "pressure_pages": 5,
+        "shed": dict(pages=6, hot=2, prompt_len=80, gen=48),
+    },
+    "spatial4": {
+        "pressure_pages": 3,
+        "shed": dict(pages=6, hot=2, prompt_len=160, gen=64),
+    },
+}
+
+
+def _prompts(cfg, lengths):
+    return [(np.arange(l, dtype=np.int32) * 7 + i) % cfg.vocab
+            for i, l in enumerate(lengths)]
+
+
+def _run_llm(llm: LLM, prompts, max_tokens=5, max_steps=4000):
+    handles = [llm.submit(p, max_tokens=max_tokens, rid=i)
+               for i, p in enumerate(prompts)]
+    done = llm.run_until_done(max_steps=max_steps)
+    assert all(h.done for h in handles), "run_until_done left work behind"
+    return done
+
+
+def _dense_oracle(cfg, params, prompts, max_tokens=5):
+    dense = LLM(ServingEngine(cfg, params,
+                              EngineCfg(max_batch=2, max_len=64,
+                                        eos_id=-1)))
+    return _run_llm(dense, prompts, max_tokens)
+
+
+def scenario_parity_sequential(make_llm, cfg, params, bp) -> str:
+    """Mixed-length chunked prefill through LLM == dense oracle,
+    token-for-token, with exactly one decode compilation."""
+    prompts = _prompts(cfg, MIXED_LENGTHS)
+    want = _dense_oracle(cfg, params, prompts)
+    llm = make_llm(max_batch=2, pages=32, hot=4,
+                   scfg=SchedulerCfg(chunk_pages=1))
+    got = _run_llm(llm, prompts)
+    assert got == want, f"sequential parity broke:\n{got}\n{want}"
+    assert llm.stats()["decode_compiles"] == 1
+    return "parity-sequential"
+
+
+def scenario_parity_batched(make_llm, cfg, params, bp) -> str:
+    """Batched varlen chunk prefill (one token-budget dispatch per tick)
+    == dense oracle, with ONE batched-prefill compile and one decode
+    compile."""
+    prompts = _prompts(cfg, MIXED_LENGTHS)
+    want = _dense_oracle(cfg, params, prompts)
+    llm = make_llm(max_batch=2, pages=32, hot=4,
+                   scfg=SchedulerCfg(chunk_pages=1, prefill_tokens=48))
+    got = _run_llm(llm, prompts)
+    assert got == want, f"batched parity broke:\n{got}\n{want}"
+    st = llm.stats()
+    assert st["prefill_batch_compiles"] == 1, st["prefill_batch_compiles"]
+    assert st["decode_compiles"] == 1, st["decode_compiles"]
+    return "parity-batched"
+
+
+def scenario_parity_auto_budget(make_llm, cfg, params, bp) -> str:
+    """``prefill_tokens="auto"``: the EMA budget controller must stay
+    compile-safe (one batched compile) and keep first-token parity with
+    the fixed-budget path on every request."""
+    prompts = _prompts(cfg, MIXED_LENGTHS)
+    want = _dense_oracle(cfg, params, prompts)
+    llm = make_llm(max_batch=2, pages=32, hot=4,
+                   scfg=SchedulerCfg(chunk_pages=1, prefill_tokens="auto"))
+    got = _run_llm(llm, prompts)
+    assert set(got) == set(want)
+    for rid in want:
+        assert len(got[rid]) == len(want[rid])
+        assert got[rid][0] == want[rid][0], f"rid {rid} first token"
+    assert got == want, f"auto-budget parity broke:\n{got}\n{want}"
+    st = llm.stats()
+    assert st["prefill_batch_compiles"] == 1, st["prefill_batch_compiles"]
+    ctl = llm.engine.sched.budget_ctl
+    assert ctl is not None and ctl.lo <= ctl.budget <= ctl.hi
+    return "parity-auto-budget"
+
+
+def scenario_pressure_swap(make_llm, cfg, params, bp) -> str:
+    """Batched prefill under pool pressure: preemption (swap + page-in,
+    including pending-chunk rollback) keeps token parity with an
+    unpressured run of the same backend."""
+    prompts = _prompts(cfg, PRESSURE_LENGTHS)
+    scfg = lambda: SchedulerCfg(chunk_pages=1, prefill_tokens=64,
+                                swap=True)
+    big = make_llm(max_batch=4, pages=64, hot=4, scfg=scfg())
+    want = _run_llm(big, prompts, max_tokens=20)
+    tiny = make_llm(max_batch=4, pages=bp["pressure_pages"], hot=4,
+                    scfg=scfg())
+    got = _run_llm(tiny, prompts, max_tokens=20)
+    st = tiny.stats()
+    assert got == want, f"pressure parity broke:\n{got}\n{want}"
+    assert st["sched"].preemptions > 0, "pool pressure never hit"
+    assert st["swap"].swap_ins == st["swap"].swap_outs
+    assert st["swap"].entries == 0, "payload left behind"
+    assert tiny.metrics()["preemptions"] == st["sched"].preemptions
+    return f"pressure-swap ({st['sched'].preemptions} preemptions)"
+
+
+def scenario_recompute(make_llm, cfg, params, bp) -> str:
+    """Recompute-mode preemption (drop pages, replay prompt + emitted
+    tokens) keeps token parity — greedy replay is exact."""
+    prompts = _prompts(cfg, PRESSURE_LENGTHS)
+    big = make_llm(max_batch=4, pages=64, hot=4,
+                   scfg=SchedulerCfg(chunk_pages=1, swap=False))
+    want = _run_llm(big, prompts, max_tokens=20)
+    tiny = make_llm(max_batch=4, pages=bp["pressure_pages"], hot=4,
+                    scfg=SchedulerCfg(chunk_pages=1, swap=False))
+    got = _run_llm(tiny, prompts, max_tokens=20)
+    st = tiny.stats()
+    assert got == want, f"recompute parity broke:\n{got}\n{want}"
+    assert st["sched"].preemptions > 0
+    assert st["sched"].recomputes == st["sched"].preemptions
+    assert st["swap"].swap_outs == 0
+    return f"recompute ({st['sched'].recomputes} replays)"
+
+
+def scenario_shed(make_llm, cfg, params, bp) -> str:
+    """Lazy cold-page swap: under decode-time pool pressure with
+    ``lazy_swap`` victims park only DLZS-cold ref-1 pages (pages the
+    hot-set gather was already skipping) and KEEP decoding — requests
+    finish with sheds instead of full preemptions, and the shed payloads
+    are dropped at finish."""
+    sp = bp["shed"]
+    llm = make_llm(max_batch=2, pages=sp["pages"], hot=sp["hot"],
+                   scfg=SchedulerCfg(chunk_pages=1, swap=True,
+                                     lazy_swap=True))
+    prompts = [(np.arange(sp["prompt_len"], dtype=np.int32) + i)
+               % cfg.vocab for i in range(2)]
+    done = _run_llm(llm, prompts, max_tokens=sp["gen"])
+    st = llm.stats()
+    assert all(len(v) == sp["gen"] for v in done.values()), done
+    assert st["sched"].sheds > 0, "nothing was shed"
+    assert st["sched"].preemptions == 0, \
+        f"shedding should have avoided full preemption " \
+        f"({st['sched'].preemptions} preemptions)"
+    assert st["swap"].entries == 0   # shed payloads dropped at finish
+    pool = st.get("pool")
+    live = pool.live if pool is not None else st["pools"]["live"]
+    assert live == 0
+    return f"shed ({st['sched'].sheds} sheds, 0 preemptions)"
+
+
+def scenario_admission(make_llm, cfg, params, bp) -> str:
+    """max_tokens=1 finishes at prefill without a decode step (pages
+    released); an impossible request is rejected at submit; max_len <=
+    prompt is rejected."""
+    llm = make_llm(max_batch=2, pages=32, hot=4,
+                   scfg=SchedulerCfg(chunk_pages=1))
+    want = _dense_oracle(cfg, params,
+                         [np.arange(5, dtype=np.int32)], max_tokens=1)
+    done = _run_llm(llm, [np.arange(5, dtype=np.int32)], max_tokens=1)
+    assert done == want and len(done[0]) == 1
+    st = llm.stats()
+    pool = st.get("pool")
+    live = pool.live if pool is not None else st["pools"]["live"]
+    assert live == 0, "pages not released at prefill-finish"
+    try:
+        llm.submit(np.arange(8, dtype=np.int32), max_tokens=10_000_000)
+        raise AssertionError("over-capacity request was admitted")
+    except ValueError:
+        pass
+    try:
+        llm.submit(np.arange(32, dtype=np.int32), max_tokens=4,
+                   max_len=16)
+        raise AssertionError("max_len <= prompt was admitted")
+    except ValueError:
+        pass
+    return "admission"
+
+
+def scenario_streaming(make_llm, cfg, params, bp) -> str:
+    """RequestHandle streaming: iterating a handle yields exactly the
+    request's tokens while co-resident requests keep being served, and
+    metrics() reports the run."""
+    llm = make_llm(max_batch=2, pages=32, hot=4,
+                   scfg=SchedulerCfg(chunk_pages=1))
+    h0 = llm.submit(np.arange(20, dtype=np.int32), max_tokens=6,
+                    sla="interactive")
+    h1 = llm.submit(np.arange(9, dtype=np.int32), max_tokens=4,
+                    sla="batch")
+    streamed = list(h0)
+    assert streamed == h0.tokens and len(streamed) == 6
+    assert h1.result() == h1.tokens and len(h1.tokens) == 4
+    m = llm.metrics()
+    assert m["requests"] == 2 and m["tokens"] == 10
+    assert set(m["per_sla"]) == {"interactive", "batch"}
+    assert m["ttft_p50_ms"] > 0 and m["tok_s"] > 0
+    assert m["occupancy"] is not None
+    return "streaming"
+
+
+SCENARIOS = (
+    scenario_parity_sequential,
+    scenario_parity_batched,
+    scenario_parity_auto_budget,
+    scenario_pressure_swap,
+    scenario_recompute,
+    scenario_shed,
+    scenario_admission,
+    scenario_streaming,
+)
+
+
+def run_all(make_llm, cfg, params, bp, log=print) -> None:
+    for scenario in SCENARIOS:
+        log(f"conformance[{scenario.__name__}]: "
+            f"{scenario(make_llm, cfg, params, bp)} OK")

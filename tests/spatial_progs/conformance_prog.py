@@ -1,0 +1,45 @@
+"""Subprocess program: the shared backend-conformance scenarios
+(tests/engine_core_scenarios.py) against SpatialServingEngine on N fake
+devices — the same suite the paged backend passes in-process, driven
+through the ``LLM`` front door. Includes the shed-under-pressure
+scenario: with ``lazy_swap`` the sharded pools must shed DLZS-cold
+ref-1 pages (via the shared EngineCore path) without full preemption.
+
+argv[1] = shard count. Prints CONFORMANCE_OK on success.
+"""
+
+import os
+import sys
+
+N_SHARDS = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+os.environ["XLA_FLAGS"] = \
+    f"--xla_force_host_platform_device_count={N_SHARDS}"
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, ".."))               # scenarios
+sys.path.insert(0, os.path.join(_HERE, "..", "..", "src"))
+
+import dataclasses
+
+import jax
+
+import engine_core_scenarios as scen
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import LLM
+from repro.spatial import SpatialEngineCfg, SpatialServingEngine
+
+cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+params = lm.init(jax.random.PRNGKey(1), cfg)
+
+
+def make_llm(*, max_batch, pages, hot, scfg, recent=2):
+    return LLM(SpatialServingEngine(cfg, params, SpatialEngineCfg(
+        n_shards=N_SHARDS, max_batch=max_batch, page_size=16,
+        n_pages_local=pages, hot_pages_local=hot, recent_pages=recent,
+        eos_id=-1), scfg))
+
+
+bp = scen.BACKEND_PARAMS[f"spatial{N_SHARDS}"]
+scen.run_all(make_llm, cfg, params, bp,
+             log=lambda m: print(f"[{N_SHARDS} shards] {m}"))
+print("CONFORMANCE_OK")

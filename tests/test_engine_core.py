@@ -1,0 +1,65 @@
+"""Backend-conformance suite: the SAME admission / prefill-parity /
+pressure / shed / swap scenarios run against every serving backend
+through the ``LLM`` front door (tests/engine_core_scenarios.py).
+
+The paged backend runs in-process; the spatial backend needs a
+multi-device mesh, so it runs on 2- and 4-shard fake-device meshes in a
+subprocess (tests/spatial_progs/conformance_prog.py — the parent's XLA
+device count is fixed at first jax init). This file replaces the
+per-engine copies of these scenarios that used to live in
+tests/test_kvcache.py and tests/spatial_progs/engine_prog.py.
+"""
+
+import dataclasses
+import pathlib
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import LLM, PagedEngineCfg, PagedServingEngine
+
+import engine_core_scenarios as scen
+
+PROGS = pathlib.Path(__file__).parent / "spatial_progs"
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+    params = lm.init(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+def _paged_factory(cfg, params):
+    def make_llm(*, max_batch, pages, hot, scfg, recent=2):
+        return LLM(PagedServingEngine(cfg, params, PagedEngineCfg(
+            max_batch=max_batch, page_size=16, n_pages=pages,
+            hot_pages=hot, recent_pages=recent, eos_id=-1), scfg))
+    return make_llm
+
+
+@pytest.mark.parametrize("scenario", scen.SCENARIOS,
+                         ids=lambda s: s.__name__)
+def test_paged_backend_conformance(smoke_lm, scenario):
+    cfg, params = smoke_lm
+    scenario(_paged_factory(cfg, params), cfg, params,
+             scen.BACKEND_PARAMS["paged"])
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_spatial_backend_conformance(n_shards):
+    """The identical scenario set on a sequence-sharded fake-device mesh
+    — including the shed-under-pressure scenario that pins the spatial
+    engine's lazy cold-page swap (ROADMAP spatial-shed follow-up)."""
+    out = subprocess.run(
+        [sys.executable, str(PROGS / "conformance_prog.py"),
+         str(n_shards)],
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, \
+        f"conformance_prog failed:\nSTDOUT:{out.stdout}\n" \
+        f"STDERR:{out.stderr[-3000:]}"
+    assert "CONFORMANCE_OK" in out.stdout

@@ -1,6 +1,8 @@
 """Paged KV-cache subsystem: pool mechanics, paged attention numerics,
-DLZS retention policy, and engine-level token parity with the dense slot
-engine."""
+DLZS retention policy, and paged-engine specifics (prefix-sharing
+internals, swap occupancy, priority preemption). The engine-level
+parity/pressure/shed scenarios every backend must pass moved to the
+shared conformance suite in tests/test_engine_core.py."""
 
 import dataclasses
 
@@ -14,8 +16,8 @@ from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
                            bucketing, metrics)
 from repro.kvcache import paged_attention as pa
 from repro.models import lm
-from repro.serving import (EngineCfg, PagedEngineCfg, PagedServingEngine,
-                           Request, SchedulerCfg, ServingEngine)
+from repro.serving import (PagedEngineCfg, PagedServingEngine, Request,
+                           SchedulerCfg)
 
 jax.config.update("jax_enable_x64", False)
 
@@ -269,22 +271,6 @@ def _reqs(cfg, lengths, max_tokens=5):
             for i, l in enumerate(lengths)]
 
 
-def test_paged_engine_token_parity_mixed_lengths(smoke_lm):
-    """Acceptance: paged == dense greedy outputs token-for-token on a
-    mixed-length batch, with exactly one decode compilation."""
-    cfg, params = smoke_lm
-    lengths = (5, 8, 17, 33, 40)
-    dense = ServingEngine(cfg, params,
-                          EngineCfg(max_batch=2, max_len=64, eos_id=-1))
-    want = dense.run(_reqs(cfg, lengths))
-    paged = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=2, page_size=16, n_pages=32, hot_pages=4, recent_pages=2,
-        eos_id=-1))
-    got = paged.run(_reqs(cfg, lengths))
-    assert got == want
-    # variable-length admission never recompiled decode
-    assert paged.stats()["decode_compiles"] == 1
-
 
 def test_paged_engine_prefix_sharing_not_duplicated(smoke_lm):
     cfg, params = smoke_lm
@@ -333,69 +319,8 @@ def test_paged_engine_per_request_max_len(smoke_lm):
                            max_tokens=4, max_len=16))
 
 
-def test_engines_respect_max_tokens_one(smoke_lm):
-    """max_tokens=1 means exactly one token (the prefill argmax) — the
-    slot must not take a decode step. Both engines agree."""
-    cfg, params = smoke_lm
-    reqs = lambda: [Request(rid=0, prompt=np.arange(5, dtype=np.int32),
-                            max_tokens=1)]
-    dense = ServingEngine(cfg, params,
-                          EngineCfg(max_batch=2, max_len=64, eos_id=-1))
-    d = dense.run(reqs())
-    paged = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=2, page_size=16, n_pages=32, hot_pages=4, eos_id=-1))
-    p = paged.run(reqs())
-    assert len(d[0]) == 1 and p == d
-    assert paged.pool.live_pages() == 0          # pages released at prefill
 
 
-def test_paged_engine_pool_backpressure(smoke_lm):
-    """More concurrent demand than pages: admission defers, all finish."""
-    cfg, params = smoke_lm
-    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=4, page_size=16, n_pages=9, hot_pages=4, eos_id=-1))
-    done = eng.run(_reqs(cfg, (20, 24, 28, 30, 22), max_tokens=4))
-    assert set(done) == {0, 1, 2, 3, 4}
-    assert all(len(v) == 4 for v in done.values())
-
-
-def test_paged_engine_chunked_prefill_parity(smoke_lm):
-    """Chunked prefill (1-page chunks, interleaved with decode) emits the
-    exact same greedy tokens as the dense engine, still with one decode
-    compilation."""
-    cfg, params = smoke_lm
-    lengths = (5, 8, 17, 33, 40)
-    dense = ServingEngine(cfg, params,
-                          EngineCfg(max_batch=2, max_len=64, eos_id=-1))
-    want = dense.run(_reqs(cfg, lengths))
-    paged = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=2, page_size=16, n_pages=32, hot_pages=4, recent_pages=2,
-        eos_id=-1), SchedulerCfg(chunk_pages=1))
-    got = paged.run(_reqs(cfg, lengths))
-    assert got == want
-    assert paged.stats()["decode_compiles"] == 1
-
-
-def test_paged_engine_batched_chunk_prefill_parity(smoke_lm):
-    """Token-exact parity between the batched varlen chunk-prefill path
-    (one token-budget dispatch per tick, SchedulerCfg.prefill_tokens) and
-    the per-sequence path on mixed prompt lengths — with exactly ONE
-    batched-prefill compilation and one decode compilation."""
-    cfg, params = smoke_lm
-    lengths = (5, 8, 17, 33, 40, 62)
-    seq = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=4, page_size=16, n_pages=32, hot_pages=8,
-        recent_pages=2, eos_id=-1), SchedulerCfg(chunk_pages=1))
-    want = seq.run(_reqs(cfg, lengths))
-    bat = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=4, page_size=16, n_pages=32, hot_pages=8,
-        recent_pages=2, eos_id=-1),
-        SchedulerCfg(chunk_pages=1, prefill_tokens=64))
-    got = bat.run(_reqs(cfg, lengths))
-    assert got == want
-    st = bat.stats()
-    assert st["prefill_batch_compiles"] == 1
-    assert st["decode_compiles"] == 1
 
 
 def test_paged_engine_batched_prefill_shares_same_tick_prefixes(smoke_lm):
@@ -420,75 +345,7 @@ def test_paged_engine_batched_prefill_shares_same_tick_prefixes(smoke_lm):
     assert bat.pool.stats().shared_hits >= 6
 
 
-def test_paged_engine_batched_prefill_preempt_parity(smoke_lm):
-    """Batched chunk prefill under pool pressure: preemption (swap +
-    page-in, including pending-chunk rollback) keeps token parity with an
-    unpressured batched run."""
-    cfg, params = smoke_lm
-    lengths = (20, 21, 20, 22)
-    scfg = lambda: SchedulerCfg(chunk_pages=1, prefill_tokens=64,
-                                swap=True)
-    big = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=4, page_size=16, n_pages=64, hot_pages=4, eos_id=-1),
-        scfg())
-    want = big.run(_reqs(cfg, lengths, max_tokens=16))
-    tiny = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=4, page_size=16, n_pages=7, hot_pages=4, eos_id=-1),
-        scfg())
-    got = tiny.run(_reqs(cfg, lengths, max_tokens=16), max_steps=3000)
-    st = tiny.stats()
-    assert got == want
-    assert st["sched"].preemptions > 0               # pressure actually hit
-    assert st["swap"].entries == 0                   # nothing left behind
 
-
-def test_paged_engine_lazy_shed_relieves_pressure(smoke_lm):
-    """Lazy cold-page swap on the real engine: under decode-time pool
-    pressure with ``lazy_swap`` the victim parks only DLZS-cold ref-1
-    pages (pages its hot-set gather was already skipping) and KEEPS
-    decoding — requests finish with sheds instead of full preemptions."""
-    cfg, params = smoke_lm
-    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=2, page_size=16, n_pages=9, hot_pages=3,
-        recent_pages=2, eos_id=-1),
-        SchedulerCfg(chunk_pages=1, swap=True, lazy_swap=True))
-    reqs = [Request(rid=i, prompt=(np.arange(40, dtype=np.int32) + i)
-                    % cfg.vocab, max_tokens=48) for i in range(2)]
-    done = eng.run(reqs, max_steps=4000)
-    st = eng.stats()
-    assert all(len(v) == 48 for v in done.values())
-    assert st["sched"].sheds > 0
-    assert st["swap"].entries == 0       # shed payloads dropped at finish
-    assert eng.pool.live_pages() == 0
-
-
-def test_paged_engine_preempt_resume_parity(smoke_lm):
-    """Oversubscribed pool (4 slots x 3 pages needed, 8 usable pages):
-    decode-time growth must preempt. Both preemption flavors — host swap
-    with page-in resume, and recompute-from-prompt replay — must (a) not
-    deadlock, (b) finish every admitted request, (c) keep token parity
-    with the dense engine since hot_pages covers every sequence."""
-    cfg, params = smoke_lm
-    lengths = (16, 17, 16, 18)                   # ~1 page each, then growth
-    dense = ServingEngine(cfg, params,
-                          EngineCfg(max_batch=2, max_len=64, eos_id=-1))
-    want = dense.run(_reqs(cfg, lengths, max_tokens=20))
-    for swap in (True, False):
-        eng = PagedServingEngine(cfg, params, PagedEngineCfg(
-            max_batch=4, page_size=16, n_pages=9, hot_pages=4, eos_id=-1),
-            SchedulerCfg(chunk_pages=1, swap=swap))
-        got = eng.run(_reqs(cfg, lengths, max_tokens=20), max_steps=500)
-        st = eng.stats()
-        assert got == want, f"swap={swap} diverged"
-        assert st["sched"].preemptions > 0       # pressure actually hit
-        if swap:
-            assert st["swap"].swap_outs > 0
-            assert st["swap"].swap_ins == st["swap"].swap_outs
-            assert st["swap"].entries == 0       # nothing left behind
-        else:
-            assert st["sched"].recomputes == st["sched"].preemptions
-    # no sequence left running, every page returned
-    assert not eng.active and eng.pool.live_pages() == 0
 
 
 def test_paged_swap_stable_occupancy_same_prefix(smoke_lm):

@@ -7,8 +7,9 @@ import pytest
 from repro.kvcache import SwapArea
 from repro.kvcache import paged_attention as pa
 from repro.serving import Request
-from repro.serving.scheduler import (NeedPages, Scheduler, SchedulerCfg,
-                                     sla_priority)
+from repro.serving.scheduler import (AUTO_PREFILL_CHUNKS, BudgetController,
+                                     NeedPages, Scheduler, SchedulerCfg,
+                                     resolve_prefill_tokens, sla_priority)
 
 
 class FakeEngine:
@@ -454,6 +455,69 @@ def test_scheduler_shard_tagged_pressure_picks_shard_victim():
     assert all(h > 0 for h in ex.preempt_held)
     # every shard-tagged preemption freed pages on the starved shard
     assert ex.victim_shards_ok and all(ex.victim_shards_ok)
+
+
+def test_budget_controller_tracks_tick_times():
+    """The ``prefill_tokens="auto"`` EMA controller: fast ticks grow the
+    packing budget toward the compiled buffer width, slow ticks shrink
+    it toward one chunk — always quantized and inside [lo, hi]."""
+    ctl = BudgetController(lo=32, hi=256, quantum=16, target_s=0.1)
+    assert ctl.budget == 256                 # optimistic start
+    for _ in range(8):                       # very slow hardware:
+        ctl.observe(1.0, 64)                 # 1 s for 64 tokens
+        assert ctl.lo <= ctl.budget <= ctl.hi
+        assert ctl.budget % 16 == 0
+    assert ctl.budget == 32                  # clamped to the floor
+    for _ in range(16):                      # very fast hardware
+        ctl.observe(0.0001, 64)
+    assert ctl.budget == 256                 # back to the ceiling
+    # EMA smooths: one 100x OS-stall outlier must not collapse the budget
+    ctl.observe(0.01, 64)
+    assert ctl.budget == 256
+    # degenerate observations are ignored
+    b = ctl.budget
+    ctl.observe(0.5, 0)
+    ctl.observe(-1.0, 64)
+    assert ctl.budget == b
+
+
+def test_budget_controller_steers_to_target():
+    """At a stable per-token cost the budget converges to ~target_s
+    worth of tokens (quantized)."""
+    ctl = BudgetController(lo=16, hi=4096, quantum=16, target_s=0.1)
+    for _ in range(32):
+        ctl.observe(0.001 * ctl.budget, ctl.budget)   # 1 ms per token
+    assert ctl.budget == 96                  # 0.1 s / 1 ms -> 100 -> 96
+
+
+def test_prefill_tokens_auto_resolution_and_scheduler_wiring():
+    """"auto" resolves to an AUTO_PREFILL_CHUNKS-chunk buffer; the
+    scheduler self-installs a controller (with placeholder bounds until
+    the engine attaches real ones) and a full fake-engine run completes
+    with the controller live."""
+    assert resolve_prefill_tokens(
+        SchedulerCfg(chunk_pages=2, prefill_tokens="auto"), 16) \
+        == AUTO_PREFILL_CHUNKS * 2 * 16
+    assert resolve_prefill_tokens(
+        SchedulerCfg(chunk_pages=2, prefill_tokens=48), 16) == 48
+    assert resolve_prefill_tokens(
+        SchedulerCfg(chunk_pages=None, prefill_tokens="auto"), 16) is None
+    assert resolve_prefill_tokens(
+        SchedulerCfg(chunk_pages=2, prefill_tokens=None), 16) is None
+
+    ex = BatchFakeEngine(capacity=100, slots=4,
+                         chunks={0: 2, 1: 2, 2: 2, 3: 2},
+                         decode_steps={r: 2 for r in range(4)})
+    sched = Scheduler(SchedulerCfg(chunk_pages=1, prefill_tokens="auto"))
+    assert sched.budget_ctl is not None
+    sched.attach_budget(lo=16, hi=64, quantum=16)
+    assert sched.prefill_budget() == 64
+    for rid in range(4):
+        sched.submit(_req(rid))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2, 3}
+    # the controller saw real tick observations and stayed in bounds
+    assert 16 <= sched.budget_ctl.budget <= 64
 
 
 def test_swap_area_bookkeeping():

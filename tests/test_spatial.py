@@ -140,10 +140,10 @@ def _run(prog: str, *args) -> str:
 
 @pytest.mark.parametrize("n_shards", [2, 4])
 def test_spatial_engine_acceptance(n_shards):
-    """Token parity with the paged engine on mixed-length batches, an
-    ultra-long prompt only the spatial engine admits, preemption parity
-    under per-shard pressure, batched-vs-per-sequence chunk prefill
-    parity (one token-budget shard_map dispatch per tick, one compile),
-    cross-shard prefix sharing — on a fake-device mesh."""
+    """Spatial-specific acceptance on a fake-device mesh: token parity
+    with the paged engine on mixed-length batches, an ultra-long prompt
+    only the spatial engine admits, and cross-shard prefix sharing.
+    (Backend-agnostic pressure/batched/shed scenarios run in the shared
+    conformance suite — tests/test_engine_core.py.)"""
     out = _run("engine_prog.py", n_shards)
     assert "ALL_OK" in out

@@ -1,25 +1,35 @@
-"""Serving smoke for CI: paged engine end-to-end on a tiny LM.
+"""Serving smoke for CI: every backend end-to-end through the unified
+``LLM`` front door on a tiny LM.
 
 Run:  PYTHONPATH=src python tools/smoke_serve.py
 
-Four scenarios, ~30s each on CPU:
+Scenarios (~30s each on CPU):
 
-1. Basic: a small mixed-length batch through the paged KV-cache engine —
-   every request completes with valid tokens, variable-length admission
-   compiled decode exactly once, prefix sharing kicked in.
+1. Basic: a small mixed-length batch through dense AND paged backends
+   via ``LLM`` — every request completes with valid tokens, variable-
+   length admission compiled decode exactly once, prefix sharing kicked
+   in, metrics() reports the run.
 2. Overload: queued demand ~4x pool capacity (benchmarks.serving.overload)
    — the chunked-prefill + preemption scheduler must finish every request
-   with ZERO rejections, swapping under pressure. The scenario's metrics
-   refresh the ``overload`` entry of BENCH_serving.json so the trajectory
-   (docs/benchmarks.md) tracks preemption behavior across PRs.
+   with ZERO rejections, swapping under pressure. Refreshes the
+   ``overload`` entry of BENCH_serving.json.
 3. Batched prefill: one token-budget varlen dispatch per tick
    (benchmarks.serving.batched_prefill) must serve at least as fast as
    the per-sequence chunked path; refreshes the ``batched_prefill``
    entry of BENCH_serving.json.
-4. Spatial: the sequence-sharded engine on a 2-shard fake-device mesh in
-   a subprocess (tools/smoke_spatial_prog.py — the parent's XLA device
-   count is fixed at first jax init): token parity with the paged engine
-   and an ultra-long prompt only the sharded engine can admit.
+4. EngineCore front door (benchmarks.serving.engine_core): the same
+   workload through ``LLM`` only must hold batched-prefill + decode
+   throughput within 5% of the directly-driven engine (the PR-4-style
+   baseline refreshed in step 3), and the ``prefill_tokens="auto"``
+   budget controller must match or beat the fixed-budget short-TTFT
+   p50. Refreshes the ``engine_core`` entry of BENCH_serving.json.
+5. Spatial: the sequence-sharded backend on a 2-shard fake-device mesh
+   in a subprocess (tools/smoke_spatial_prog.py): front-door parity with
+   the paged backend, the ultra-long admit, lazy cold-page shedding on
+   the sharded pools, and front-door throughput within 5% of the direct
+   engine (merged into the ``engine_core`` entry).
+6. Deprecation shims: the old ``Orchestrator`` entry point still
+   imports, warns, and serves.
 
 Exits non-zero on any failure.
 """
@@ -28,9 +38,11 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
+import re
 import subprocess
 import sys
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -40,34 +52,41 @@ sys.path.insert(0, str(REPO))          # for the benchmarks package
 
 from repro.configs import get_smoke_config
 from repro.models import lm
-from repro.serving import PagedEngineCfg, PagedServingEngine, Request
+from repro.serving import LLM, PagedEngineCfg, PagedServingEngine
 
 
 def basic(cfg, params) -> bool:
     t0 = time.time()
-    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
-        max_batch=2, page_size=16, n_pages=24, hot_pages=3, eos_id=-1))
-
+    llm = LLM.from_config(cfg, backend="paged", params=params,
+                          engine_cfg=PagedEngineCfg(
+                              max_batch=2, page_size=16, n_pages=24,
+                              hot_pages=3, eos_id=-1))
     system = np.arange(16, dtype=np.int32)          # one shared full page
-    reqs = [Request(rid=i,
-                    prompt=np.concatenate(
-                        [system, np.arange(2 + 3 * i, dtype=np.int32) + i]),
-                    max_tokens=4)
-            for i in range(5)]
-    done = eng.run(reqs)
+    for i in range(5):
+        llm.submit(np.concatenate(
+            [system, np.arange(2 + 3 * i, dtype=np.int32) + i]),
+            max_tokens=4, rid=i)
+    done = llm.run_until_done()
 
-    st = eng.stats()
+    st = llm.stats()
+    m = llm.metrics()
+    # the dense backend answers through the same front door
+    dense = LLM.from_config(cfg, backend="dense", params=params)
+    d = dense.submit(np.arange(12, dtype=np.int32), max_tokens=4).result()
     ok = (set(done) == {0, 1, 2, 3, 4}
           and all(len(v) == 4 for v in done.values())
           and all(0 <= t < cfg.vocab for v in done.values() for t in v)
           and st["decode_compiles"] == 1
-          and st["pool"].shared_hits >= 4)
+          and st["pool"].shared_hits >= 4
+          and m["requests"] == 5 and m["tokens"] == 20
+          and len(d) == 4)
     dt = time.time() - t0
     print(f"smoke_serve[basic]: {len(done)} requests, "
-          f"{sum(len(v) for v in done.values())} tokens, "
-          f"peak {st['pool'].peak_live} pages, "
+          f"{sum(len(v) for v in done.values())} tokens via LLM, "
+          f"{st['pool'].peak_live} peak pages, "
           f"{st['pool'].shared_hits} prefix hits, "
-          f"{st['decode_compiles']} decode compile(s), {dt:.1f}s "
+          f"{st['decode_compiles']} decode compile(s), "
+          f"dense={len(d)} tokens, {dt:.1f}s "
           f"-> {'PASS' if ok else 'FAIL'}")
     return ok
 
@@ -94,17 +113,18 @@ def overload(cfg, params) -> bool:
     return ok
 
 
-def batched(cfg, params) -> bool:
+def batched(cfg, params) -> dict | None:
     """Batched varlen chunk prefill must never serve slower than the
     per-sequence chunked path (and keeps the chunked TTFT win); refreshes
-    the ``batched_prefill`` entry of BENCH_serving.json."""
+    the ``batched_prefill`` entry of BENCH_serving.json. Returns the
+    metrics (the engine_core scenario's baseline) or None on failure."""
     from benchmarks import serving as bench_serving
     t0 = time.time()
     try:
         m = bench_serving.batched_prefill(cfg, params)
     except AssertionError as e:
         print(f"smoke_serve[batched]: FAIL ({e})")
-        return False
+        return None
     ok = m["batched"]["tok_s"] >= m["sequential"]["tok_s"]
     if ok:      # never let a failing run overwrite the committed baseline
         bench_serving.write_json(str(REPO / "BENCH_serving.json"),
@@ -116,10 +136,33 @@ def batched(cfg, params) -> bool:
           f"{m['batched_vs_monolithic_gap']}x; short TTFT p50 "
           f"{m['batched']['ttft_p50_short_ms']}ms), {dt:.1f}s "
           f"-> {'PASS' if ok else 'FAIL'}")
-    return ok
+    return m if ok else None
 
 
-def spatial() -> bool:
+def engine_core(cfg, params, baseline: dict | None) -> dict | None:
+    """The unified-API no-regression check (see benchmarks.serving
+    .engine_core): LLM front door within 5% of the just-measured direct
+    baseline, auto budget controller matches/beats fixed TTFT p50."""
+    from benchmarks import serving as bench_serving
+    t0 = time.time()
+    try:
+        m = bench_serving.engine_core(cfg, params, baseline)
+    except AssertionError as e:
+        print(f"smoke_serve[engine_core]: FAIL ({e})")
+        return None
+    dt = time.time() - t0
+    print(f"smoke_serve[engine_core]: LLM {m['fixed']['tok_s']} tok/s "
+          f"(gap {m.get('vs_batched_gap', '-')}x vs direct), auto-budget "
+          f"{m['auto']['tok_s']} tok/s / "
+          f"{m['auto']['ttft_p50_short_ms']}ms TTFT p50 (fixed "
+          f"{m['fixed']['ttft_p50_short_ms']}ms, budget "
+          f"{m['auto']['budget_tokens']} tokens), {dt:.1f}s -> PASS")
+    return m
+
+
+def spatial() -> dict | None:
+    """2-shard subprocess smoke; returns the direct-vs-LLM throughput
+    numbers for the ``engine_core`` entry (None on failure)."""
     t0 = time.time()
     prog = pathlib.Path(__file__).parent / "smoke_spatial_prog.py"
     out = subprocess.run([sys.executable, str(prog)],
@@ -130,16 +173,58 @@ def spatial() -> bool:
         else out.stderr[-300:]
     print(f"smoke_serve[spatial]: {detail} ({dt:.1f}s) "
           f"-> {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        return None
+    match = re.search(r"SPATIAL_TOKS direct=([\d.]+) llm=([\d.]+)",
+                      out.stdout)
+    if not match:
+        return None
+    direct, llm = float(match.group(1)), float(match.group(2))
+    return {"direct_tok_s": direct, "llm_tok_s": llm,
+            "gap": round(direct / max(llm, 1e-9), 3)}
+
+
+def shims(cfg, params) -> bool:
+    """The one-PR deprecation shims must still import and serve: the old
+    ``Orchestrator(engine)`` entry point warns but works."""
+    t0 = time.time()
+    from repro.spatial import Orchestrator     # import path kept alive
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        orch = Orchestrator(PagedServingEngine(cfg, params, PagedEngineCfg(
+            max_batch=2, page_size=16, n_pages=24, hot_pages=3,
+            eos_id=-1)))
+        warned = any(issubclass(w.category, DeprecationWarning)
+                     for w in caught)
+    rid = orch.submit(np.arange(10, dtype=np.int32), max_tokens=3)
+    done = orch.run()
+    rep = orch.report()
+    ok = (warned and rid == 0 and len(done[0]) == 3
+          and rep["requests"] == 1)
+    dt = time.time() - t0
+    print(f"smoke_serve[shims]: Orchestrator warned={warned}, served "
+          f"{rep.get('tokens', 0)} tokens, {dt:.1f}s "
+          f"-> {'PASS' if ok else 'FAIL'}")
     return ok
 
 
 def main() -> int:
+    from benchmarks import serving as bench_serving
     cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
     params = lm.init(jax.random.PRNGKey(0), cfg)
     ok = basic(cfg, params)
     ok = overload(cfg, params) and ok
-    ok = batched(cfg, params) and ok
-    ok = spatial() and ok
+    baseline = batched(cfg, params)
+    ok = (baseline is not None) and ok
+    core = engine_core(cfg, params, baseline)
+    ok = (core is not None) and ok
+    sp = spatial()
+    ok = (sp is not None) and ok
+    if core is not None and sp is not None:
+        core["spatial"] = sp
+        bench_serving.write_json(str(REPO / "BENCH_serving.json"),
+                                 {"engine_core": core})
+    ok = shims(cfg, params) and ok
     return 0 if ok else 1
 
 
