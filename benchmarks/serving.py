@@ -31,6 +31,12 @@ Scenarios (CSV rows to stdout, optionally merged into a
   throughput stays within 5% of the directly-driven engine and that the
   ``prefill_tokens="auto"`` EMA budget controller matches or beats the
   fixed budget's short-request TTFT p50.
+* ``phase_breakdown`` (also standalone via ``--phase``) — stage-resolved
+  tick cost from the telemetry tracer (``repro.obs``): per-tick
+  milliseconds in admit / prefill / decode / swap / host for the paged
+  engine under pool pressure and the 2-shard spatial engine (fake-device
+  subprocess), measured on a warmed engine from one traced pass. The
+  entry future PRs cite to prove WHICH stage they sped up.
 * ``--spatial`` — the spatial-runtime acceptance (runs INSTEAD of the
   three above): a batch of ultra-long prompts against the sequence-
   sharded engine at 1/2/4 shards with a FIXED per-shard pool. At 1 shard
@@ -59,6 +65,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro import obs
 from repro.configs import get_smoke_config
 from repro.kvcache import metrics
 from repro.models import lm
@@ -202,9 +209,9 @@ def _mixed_ttft(cfg, params, results):
         for name, chunk_pages in variants:
             done, wall, n_tok, ttft = _drive(engines[name],
                                              _mixed_requests(cfg))
-            p50 = 1e3 * float(np.median([ttft[r] for r in short_rids]))
-            p50_long = 1e3 * float(np.median(
-                [ttft[r] for r in range(len(LONG_TAILS))]))
+            p50 = 1e3 * obs.percentile([ttft[r] for r in short_rids], 50)
+            p50_long = 1e3 * obs.percentile(
+                [ttft[r] for r in range(len(LONG_TAILS))], 50)
             out[name] = {"tok_s": round(n_tok / wall, 1),
                          "ttft_p50_short_ms": round(p50, 1),
                          "ttft_p50_long_ms": round(p50_long, 1),
@@ -288,9 +295,9 @@ def batched_prefill(cfg, params) -> dict:
         for name, chunk_pages, prefill_tokens in variants:
             done, wall, n_tok, ttft = _drive(engines[name],
                                              _mixed_requests(cfg))
-            p50 = 1e3 * float(np.median([ttft[r] for r in short_rids]))
-            p50_long = 1e3 * float(np.median(
-                [ttft[r] for r in range(len(LONG_TAILS))]))
+            p50 = 1e3 * obs.percentile([ttft[r] for r in short_rids], 50)
+            p50_long = 1e3 * obs.percentile(
+                [ttft[r] for r in range(len(LONG_TAILS))], 50)
             out[name] = {"tok_s": round(n_tok / wall, 1),
                          "ttft_p50_short_ms": round(p50, 1),
                          "ttft_p50_long_ms": round(p50_long, 1),
@@ -398,7 +405,7 @@ def engine_core(cfg, params, baseline: dict | None = None) -> dict:
         for name, llm in llms.items():
             done, wall, n_tok, ttft = _drive_llm(llm,
                                                  _mixed_requests(cfg))
-            p50 = 1e3 * float(np.median([ttft[r] for r in short_rids]))
+            p50 = 1e3 * obs.percentile([ttft[r] for r in short_rids], 50)
             cur[name] = {"tok_s": round(n_tok / wall, 1),
                          "ttft_p50_short_ms": round(p50, 1)}
         if out is None:
@@ -493,6 +500,111 @@ def _overload(cfg, params, results):
          f"preemptions={m['preemptions']};swap_outs={m['swap_outs']};"
          f"swap_ins={m['swap_ins']};resumes={m['resumes']}")
     results["overload"] = m
+
+
+# phase_breakdown workload: the overload shape (pool pressure keeps the
+# swap bucket non-zero) at a size small enough to trace in a few seconds
+PHASE_N_PAGES = 9
+PHASE_GEN = 16
+PHASE_REQS = 8
+
+
+def _phase_requests(cfg, rid0: int, seed: int = 3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid0 + i,
+                    prompt=rng.integers(0, cfg.vocab, size=32,
+                                        dtype=np.int32),
+                    max_tokens=PHASE_GEN)
+            for i in range(PHASE_REQS)]
+
+
+def _phase_measure(cfg, eng) -> dict:
+    """Warm the engine, clear the trace, serve one traced pass, and
+    reduce the trace to the stored phase table."""
+    tel = obs.Telemetry()
+    eng.attach_telemetry(tel)
+    eng.run(_phase_requests(cfg, 0), max_steps=20_000)       # warmup
+    tel.tracer.clear()
+    done = eng.run(_phase_requests(cfg, 100), max_steps=20_000)
+    assert all(len(v) == PHASE_GEN for v in done.values())
+    s = obs.phase_summary(tel.tracer.events)
+    return {"ticks": s["ticks"], "wall_ms": s["wall_ms"],
+            "per_tick_ms": s["per_tick_ms"], "totals_ms": s["totals_ms"],
+            "compile_ms": s["compile_ms"], "counts": s["counts"]}
+
+
+def phase_breakdown_paged(cfg, params) -> dict:
+    """Stage-resolved tick cost of the paged engine under pool pressure:
+    per-tick milliseconds in admit/prefill/decode/swap/host from one
+    traced steady-state pass (the engine is warmed first, so
+    ``compile_ms`` ~ 0 is part of the measurement's sanity)."""
+    eng = PagedServingEngine(cfg, params, PagedEngineCfg(
+        max_batch=4, page_size=16, n_pages=PHASE_N_PAGES, hot_pages=4,
+        recent_pages=2, eos_id=-1),
+        SchedulerCfg(chunk_pages=1, swap=True))
+    return _phase_measure(cfg, eng)
+
+
+def phase_spatial_child(out_path: str) -> None:
+    """Child half of ``phase_breakdown``: the 2-shard engine under the
+    same pressure workload, run in a process whose fake-device mesh the
+    parent set up. Writes the phase table to ``out_path``."""
+    from repro.spatial import SpatialEngineCfg, SpatialServingEngine
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    # per-shard pool ~half the single-pool size: aggregate capacity is
+    # comparable and the swap bucket stays exercised on both backends
+    eng = SpatialServingEngine(cfg, params, SpatialEngineCfg(
+        n_shards=2, max_batch=4, page_size=16,
+        n_pages_local=6, hot_pages_local=4,
+        recent_pages=2, eos_id=-1),
+        SchedulerCfg(chunk_pages=1, swap=True))
+    m = _phase_measure(cfg, eng)
+    with open(out_path, "w") as f:
+        json.dump(m, f)
+
+
+def phase_breakdown_spatial() -> dict:
+    """Run the 2-shard phase measurement in a fake-device subprocess
+    (the parent's XLA device count is already fixed)."""
+    import subprocess
+    import tempfile
+    from repro.spatial.topology import FORCE_FLAG
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        out_path = f.name
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"{env.get('XLA_FLAGS', '')} " \
+                       f"{FORCE_FLAG}=2".strip()
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.serving",
+             "--phase-spatial", out_path],
+            cwd=repo, env=env, capture_output=True, text=True,
+            timeout=900)
+        assert proc.returncode == 0, \
+            f"spatial phase child failed:\n{proc.stderr[-800:]}"
+        with open(out_path) as f:
+            return json.load(f)
+    finally:
+        os.unlink(out_path)
+
+
+def phase_breakdown(cfg, params) -> dict:
+    return {"paged": phase_breakdown_paged(cfg, params),
+            "spatial_2shard": phase_breakdown_spatial()}
+
+
+def _phase_breakdown(cfg, params, results):
+    m = phase_breakdown(cfg, params)
+    for backend, v in m.items():
+        per = v["per_tick_ms"]
+        emit(f"serving_phase_{backend}", v["wall_ms"] * 1e3 / v["ticks"],
+             f"ticks={v['ticks']};"
+             f"prefill_ms={per['prefill']};decode_ms={per['decode']};"
+             f"swap_ms={per['swap']};host_ms={per['host']};"
+             f"admit_ms={per['admit']};compile_ms={v['compile_ms']}")
+    results["phase_breakdown"] = m
 
 
 SPATIAL_SHARDS = (1, 2, 4)
@@ -620,6 +732,16 @@ def write_json(path: str, results: dict) -> None:
         f.write("\n")
 
 
+def run_phase(json_path: str | None = None) -> dict:
+    cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    results: dict = {}
+    _phase_breakdown(cfg, params, results)
+    if json_path:
+        write_json(json_path, results)
+    return results
+
+
 def run(json_path: str | None = None) -> dict:
     cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
     params = lm.init(jax.random.PRNGKey(0), cfg)
@@ -629,6 +751,7 @@ def run(json_path: str | None = None) -> dict:
     _batched_prefill(cfg, params, results)
     _engine_core(cfg, params, results)
     _overload(cfg, params, results)
+    _phase_breakdown(cfg, params, results)
     if json_path:
         write_json(json_path, results)
     return results
@@ -645,7 +768,17 @@ if __name__ == "__main__":
                          "instead of the single-device scenarios; "
                          "respawns itself with fake host devices if the "
                          "process has fewer than 4")
+    ap.add_argument("--phase", action="store_true",
+                    help="run ONLY the phase_breakdown scenario (traced "
+                         "per-tick stage costs for paged + 2-shard "
+                         "spatial; the spatial half runs in a "
+                         "fake-device subprocess)")
+    ap.add_argument("--phase-spatial", metavar="PATH", default=None,
+                    help=argparse.SUPPRESS)   # internal child entrypoint
     args = ap.parse_args()
+    if args.phase_spatial:
+        phase_spatial_child(args.phase_spatial)
+        sys.exit(0)
     if args.spatial and len(jax.devices()) < max(SPATIAL_SHARDS):
         from repro.spatial import respawn_with_devices
         repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -653,7 +786,9 @@ if __name__ == "__main__":
             (["--json", os.path.abspath(args.json)] if args.json else [])
         sys.exit(respawn_with_devices(max(SPATIAL_SHARDS), argv, cwd=repo))
     print("name,us_per_call,derived")
-    if args.spatial:
+    if args.phase:
+        run_phase(json_path=args.json)
+    elif args.spatial:
         run_spatial(json_path=args.json)
     else:
         run(json_path=args.json)

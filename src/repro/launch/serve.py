@@ -18,6 +18,18 @@ Requests carry an SLA class (``--sla-mix`` cycles interactive / standard
 / batch) that the scheduler maps onto priorities: interactive traffic is
 admitted first and preempted last. Smoke configs serve on CPU; ``--full
 --mesh`` builds the production mesh exactly as the dry-run does.
+
+Telemetry (``repro.obs``, see docs/observability.md) is on by default:
+
+* ``--trace PATH`` exports a Perfetto/Chrome trace of the run
+  (``.jsonl`` suffix streams JSONL, anything else writes Chrome JSON)
+  and prints the per-phase time table (``tools/trace_summary.py``);
+* ``--metrics TARGET`` writes the Prometheus text exposition of the
+  run's ``MetricsRegistry`` — ``-`` for stdout, else a file path (point
+  a node_exporter textfile collector at it);
+* ``--no-telemetry`` serves with the no-op ``NULL_TELEMETRY`` (the
+  library default), dropping per-token timestamps and the surfaces
+  above.
 """
 
 from __future__ import annotations
@@ -48,6 +60,16 @@ def _parse_args(argv=None):
     ap.add_argument("--sla-mix", action="store_true",
                     help="cycle requests through interactive/standard/"
                          "batch SLA classes")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="export a Perfetto/Chrome trace of the run "
+                         "(.jsonl streams JSONL) and print the per-phase "
+                         "time table")
+    ap.add_argument("--metrics", metavar="TARGET", default=None,
+                    help="Prometheus text exposition after the run: "
+                         "'-' for stdout, else a file path")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="serve with the no-op telemetry (the library "
+                         "default); --trace/--metrics are ignored")
     return ap.parse_args(argv)
 
 
@@ -65,10 +87,12 @@ def main(argv=None):
                 + (argv if argv is not None else sys.argv[1:])))
 
     import dataclasses
+    import pathlib
 
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.configs import ARCHS, get_config, get_smoke_config
     from repro.models import lm
     from repro.serving import LLM, EngineCfg, PagedEngineCfg
@@ -98,8 +122,12 @@ def main(argv=None):
             n_shards=args.shards, max_batch=args.slots,
             page_size=args.page_size, n_pages_local=args.pages,
             hot_pages_local=args.max_len // args.page_size, eos_id=-1)
+    tel = None if args.no_telemetry else obs.Telemetry(
+        {"launcher": "repro.launch.serve", "engine": args.engine,
+         "arch": args.arch})
     llm = LLM.from_config(cfg, backend=args.engine, params=params,
-                          shards=args.shards, engine_cfg=engine_cfg)
+                          shards=args.shards, engine_cfg=engine_cfg,
+                          telemetry=tel)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -127,6 +155,34 @@ def main(argv=None):
           f"{args.engine}{shards}): {len(done)} requests, {n_tok} tokens, "
           f"{n_tok / dt:.1f} tok/s, star={'on' if cfg.star else 'off'}"
           f"{extra}")
+
+    if args.trace:
+        if tel is None:
+            print("[serve] --trace ignored (telemetry disabled)")
+        else:
+            path = pathlib.Path(args.trace)
+            if path.parent != pathlib.Path("."):
+                path.parent.mkdir(parents=True, exist_ok=True)
+            if path.suffix == ".jsonl":
+                tel.tracer.export_jsonl(str(path))
+            else:
+                tel.tracer.export_chrome(str(path))
+            print(obs.format_table(obs.phase_summary(tel.tracer.events),
+                                   title=args.engine))
+            print(f"[serve] trace -> {path} "
+                  f"(load at https://ui.perfetto.dev)")
+
+    if args.metrics:
+        if tel is None:
+            print("[serve] --metrics ignored (telemetry disabled)")
+        else:
+            text = tel.metrics.render_prometheus()
+            if args.metrics == "-":
+                sys.stdout.write(text)
+            else:
+                pathlib.Path(args.metrics).write_text(text)
+                print(f"[serve] metrics -> {args.metrics} "
+                      f"({len(text.splitlines())} lines)")
 
 
 if __name__ == "__main__":

@@ -19,38 +19,38 @@ state. The paged/spatial backends default to the batched varlen prefill
 with ``prefill_tokens="auto"`` — the scheduler's EMA controller sizes
 the per-tick prefill budget from observed tick wall-times.
 
-``repro.spatial.Orchestrator`` is the deprecated predecessor of this
-class and now subclasses it (one-PR migration shim).
+Observability (docs/observability.md): every record is a full
+``obs.RequestTimeline`` (submit → admit → first chunk → TTFT →
+per-token → done/preempted). Pass ``telemetry=obs.Telemetry()`` to
+``from_config`` (or the constructor) to additionally capture tick-phase
+trace spans and the serving metrics registry; the default is the
+zero-cost ``NULL_TELEMETRY``.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Iterator, Optional
 
 import numpy as np
 
+from repro import obs
+from repro.obs import NULL_TELEMETRY
 from repro.serving.engine import Request
 
 BACKENDS = ("dense", "paged", "spatial")
 
 
-@dataclasses.dataclass
-class RequestRecord:
-    req: Request
-    submit_t: float
-    first_token_t: Optional[float] = None
-    done_t: Optional[float] = None
+class RequestRecord(obs.RequestTimeline):
+    """One request's lifecycle record: the ``obs.RequestTimeline`` the
+    engine stamps, plus the request itself. ``LLM.records`` maps rid to
+    these; handles read tokens and timing through them."""
 
-    @property
-    def ttft(self) -> Optional[float]:
-        return None if self.first_token_t is None \
-            else self.first_token_t - self.submit_t
+    __slots__ = ("req",)
 
-    @property
-    def latency(self) -> Optional[float]:
-        return None if self.done_t is None else self.done_t - self.submit_t
+    def __init__(self, req: Request, submit_t: float):
+        super().__init__(req.rid, sla=req.sla, submit_t=submit_t)
+        self.req = req
 
 
 class RequestHandle:
@@ -81,6 +81,12 @@ class RequestHandle:
     @property
     def ttft_s(self) -> Optional[float]:
         return self._record.ttft
+
+    @property
+    def timeline(self) -> obs.RequestTimeline:
+        """The request's lifecycle timeline (``.epochs()`` for the
+        time-sorted event list, ``.tpots`` for inter-token gaps)."""
+        return self._record
 
     def __iter__(self) -> Iterator[int]:
         sent = 0
@@ -113,8 +119,12 @@ class LLM:
     (``PagedServingEngine``, ``SpatialServingEngine``, the dense
     ``ServingEngine``)."""
 
-    def __init__(self, engine):
+    def __init__(self, engine, telemetry=None):
         self.engine = engine
+        if telemetry is not None and hasattr(engine, "attach_telemetry"):
+            engine.attach_telemetry(telemetry)
+        self.tel = telemetry or getattr(engine, "tel", None) \
+            or NULL_TELEMETRY
         self.records: dict[int, RequestRecord] = {}
         self._pending: dict[int, RequestRecord] = {}   # not yet finished:
         #                         the only records a tick has to touch, so
@@ -130,7 +140,7 @@ class LLM:
     @classmethod
     def from_config(cls, model_cfg, *, backend: str = "paged",
                     params=None, shards: int = 2, engine_cfg=None,
-                    sched_cfg=None, rng=None) -> "LLM":
+                    sched_cfg=None, rng=None, telemetry=None) -> "LLM":
         """Build params (if not given), the backend engine, and the LLM.
 
         ``backend`` picks the runtime: ``"dense"`` (slot baseline,
@@ -142,6 +152,7 @@ class LLM:
         the backend's default config; ``sched_cfg`` the scheduler's
         (default: batched prefill with the ``prefill_tokens="auto"``
         budget controller). ``rng`` seeds both param init and sampling.
+        ``telemetry`` (an ``obs.Telemetry``) enables tracing + metrics.
         """
         import jax
 
@@ -159,7 +170,7 @@ class LLM:
         if backend == "dense":
             eng = ServingEngine(model_cfg, params,
                                 engine_cfg or EngineCfg(), rng=rng)
-            return cls(eng)
+            return cls(eng, telemetry=telemetry)
         scfg = sched_cfg or SchedulerCfg(prefill_tokens="auto")
         if backend == "paged":
             eng = PagedServingEngine(model_cfg, params,
@@ -172,7 +183,7 @@ class LLM:
                 model_cfg, params,
                 engine_cfg or SpatialEngineCfg(n_shards=shards),
                 scfg, rng=rng)
-        return cls(eng)
+        return cls(eng, telemetry=telemetry)
 
     # -- submission ----------------------------------------------------------
 
@@ -190,10 +201,20 @@ class LLM:
                       max_tokens=max_tokens, max_len=max_len,
                       sla=None if priority is not None else sla,
                       priority=priority or 0)
-        # submit first: a capacity rejection (ValueError) must not leave
-        # a phantom never-finishing record behind in a long-lived server
-        self.engine.submit(req)
         rec = RequestRecord(req, time.perf_counter())
+        if self.tel.enabled:
+            # pre-register so the engine's timeline(rid) lookups stamp
+            # THIS record (record and timeline are one object)
+            self.tel.timelines[rid] = rec
+        try:
+            # submit before keeping the record: a capacity rejection
+            # (ValueError) must not leave a phantom never-finishing
+            # record behind in a long-lived server
+            self.engine.submit(req)
+        except Exception:
+            if self.tel.enabled:
+                self.tel.timelines.pop(rid, None)
+            raise
         self.records[rid] = rec
         self._pending[rid] = rec
         return RequestHandle(self, rid)
@@ -203,9 +224,12 @@ class LLM:
     def tick(self) -> list[Request]:
         """One engine step; stamps TTFT / completion times."""
         if self._dense:
-            self.engine.admit()
-            finished = list(self.engine.step() or ())
+            span = self.tel.tracer.span("tick")
+            with span:
+                self.engine.admit()
+                finished = list(self.engine.step() or ())
         else:
+            # core engines trace their own tick span inside step()
             finished = self.engine.step() or []
         now = time.perf_counter()
         for rec in self._pending.values():
@@ -213,7 +237,11 @@ class LLM:
                 rec.first_token_t = now
         for fin in finished:
             rec = self._pending.pop(fin.rid)
-            rec.done_t = now
+            if rec.done_t is None:      # engine telemetry may have stamped
+                rec.done_t = now
+            rec.n_tokens = len(fin.out or ())
+            if rec.outcome is None:
+                rec.outcome = "done"
         return finished
 
     def has_work(self) -> bool:
@@ -229,7 +257,7 @@ class LLM:
             steps += 1
         return done
 
-    # kept as the Orchestrator-era name
+    # kept as the pre-LLM entry-point name some callers still use
     run = run_until_done
 
     def clear_finished(self) -> None:
@@ -237,6 +265,10 @@ class LLM:
         persistent server's history does not grow without bound."""
         self.records = {rid: rec for rid, rec in self.records.items()
                         if rec.done_t is None}
+        if self.tel.enabled:
+            self.tel.timelines = {
+                rid: tl for rid, tl in self.tel.timelines.items()
+                if tl.done_t is None}
 
     # -- observability -------------------------------------------------------
 
@@ -245,8 +277,10 @@ class LLM:
 
     def metrics(self) -> dict:
         """Serving snapshot: request/token counts, wall time, tok/s,
-        TTFT percentiles, per-SLA TTFT, pool occupancy and preemption
-        counters — everything the launchers and benchmarks report."""
+        TTFT/TPOT percentiles (``obs.percentile``, linear interpolation),
+        per-SLA TTFT + goodput, pool occupancy and preemption counters —
+        everything the launchers and benchmarks report. With live
+        telemetry the registry snapshot rides along under ``counters``."""
         st = self.stats()
         occupancy = None
         pool = st.get("pool") or st.get("pools")
@@ -263,6 +297,12 @@ class LLM:
             "resumes": getattr(sched, "resumes", 0),
             "engine": st,
         }
+        if self.tel.enabled:
+            out["counters"] = self.tel.metrics.snapshot()
+            if hasattr(self.engine, "dlzs_hot_fraction"):
+                # point-in-time snapshot (device sync — metrics() is an
+                # endpoint call, never the hot path)
+                out["dlzs_hot_fraction"] = self.engine.dlzs_hot_fraction()
         recs = [r for r in self.records.values() if r.done_t is not None]
         if not recs:
             out["requests"] = 0
@@ -270,21 +310,49 @@ class LLM:
         t0 = min(r.submit_t for r in recs)
         t1 = max(r.done_t for r in recs)
         n_tok = sum(len(r.req.out) for r in recs)
-        ttfts = sorted(r.ttft for r in recs if r.ttft is not None)
+        ttfts = [r.ttft for r in recs if r.ttft is not None]
+        tpots = [g for r in recs for g in r.tpots]
+        if not tpots:
+            # telemetry off: no per-token stamps — approximate each
+            # request's TPOT by its decode-time mean
+            for r in recs:
+                n = len(r.req.out or ())
+                if n > 1 and r.ttft is not None and r.latency is not None:
+                    tpots.append((r.latency - r.ttft) / (n - 1))
         by_sla: dict[str, list] = {}
         for r in recs:
             by_sla.setdefault(r.req.sla or "default", []).append(r)
+
+        def pct_ms(xs, q):
+            v = obs.percentile(xs, q)
+            return None if v is None else round(1e3 * v, 2)
+
+        per_sla = {}
+        for k, v in sorted(by_sla.items()):
+            g_ttfts = [r.ttft for r in v if r.ttft is not None]
+            g_tok = sum(len(r.req.out) for r in v)
+            g_span = max(r.done_t for r in v) - min(r.submit_t for r in v)
+            per_sla[k] = {
+                "requests": len(v),
+                "ttft_mean_ms": round(
+                    1e3 * sum(g_ttfts) / len(g_ttfts), 1)
+                if g_ttfts else None,
+                "goodput_tok_s": round(g_tok / g_span, 1)
+                if g_span > 0 else None,
+            }
         out.update({
             "requests": len(recs),
             "tokens": n_tok,
             "wall_s": round(t1 - t0, 4),
             "tok_s": round(n_tok / max(t1 - t0, 1e-9), 1),
-            "ttft_p50_ms": round(1e3 * ttfts[len(ttfts) // 2], 1),
-            "ttft_mean_ms": round(1e3 * float(np.mean(ttfts)), 1),
-            "per_sla": {
-                k: {"requests": len(v),
-                    "ttft_mean_ms": round(1e3 * float(np.mean(
-                        [r.ttft for r in v if r.ttft is not None])), 1)}
-                for k, v in sorted(by_sla.items())},
+            "ttft_p50_ms": pct_ms(ttfts, 50),
+            "ttft_p95_ms": pct_ms(ttfts, 95),
+            "ttft_p99_ms": pct_ms(ttfts, 99),
+            "ttft_mean_ms": round(1e3 * sum(ttfts) / len(ttfts), 1)
+            if ttfts else None,
+            "tpot_p50_ms": pct_ms(tpots, 50),
+            "tpot_p95_ms": pct_ms(tpots, 95),
+            "tpot_p99_ms": pct_ms(tpots, 99),
+            "per_sla": per_sla,
         })
         return out

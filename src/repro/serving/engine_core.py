@@ -37,6 +37,7 @@ Most callers should not touch this class directly — the front-door
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Protocol, runtime_checkable
 
 import jax
@@ -44,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache import PoolExhausted, SwapArea, bucketing
+from repro.obs import NULL_TELEMETRY
 from repro.serving import swap_policy
 from repro.serving.engine import Request
 from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
@@ -214,9 +216,22 @@ class EngineCore:
         self.lengths = np.zeros((backend.max_batch,), np.int64)
         self.free = list(range(backend.max_batch))
 
+        self.tel = getattr(backend, "tel", None) or NULL_TELEMETRY
+        self._tick_no = 0
+        self._compiled: set = set()       # dispatch kinds seen (compile
+        #                                   detection via first-call timing)
+        self._sched_seen: dict[str, int] = {}  # last counter sync values
+
     @property
     def params(self):
         return self.backend.params
+
+    def attach_telemetry(self, tel) -> None:
+        """Share one ``obs.Telemetry`` across the core, the scheduler,
+        and the backend (backends emit shard-tagged arena events)."""
+        self.tel = tel
+        self.sched.tel = tel
+        self.backend.tel = tel
 
     # -- queueing -----------------------------------------------------------
 
@@ -231,6 +246,8 @@ class EngineCore:
         need = -(-total // self.backend.page_size)
         self.backend.check_capacity(req.rid, total, need)
         req.out = []
+        if self.tel.enabled:
+            self.tel.timeline(req.rid, sla=getattr(req, "sla", None))
         self.sched.submit(req)
 
     @property
@@ -270,6 +287,15 @@ class EngineCore:
         self.tables[slot] = []
         self.active[slot] = req
         self.lengths[slot] = 0
+        if self.tel.enabled:
+            tl = self.tel.timeline(req.rid)
+            now = time.perf_counter()
+            if out:                        # recompute-mode resume
+                tl.resume_ts.append(now)
+            elif tl.admit_t is None:
+                tl.admit_t = now
+            self.tel.tracer.instant("admit", rid=req.rid, slot=slot,
+                                    resume=bool(out))
         return slot
 
     def prefill_chunks_left(self, slot: int) -> int:
@@ -288,7 +314,15 @@ class EngineCore:
         try:
             return self.backend.alloc_chunk(pf, start_page, n_need)
         except PoolExhausted as e:
-            raise NeedPages(slot, getattr(e, "shard", None)) from None
+            shard = getattr(e, "shard", None)
+            if self.tel.enabled:
+                self.tel.tracer.instant("need_pages", slot=slot,
+                                        where="prefill", shard=shard,
+                                        pages=n_need)
+                self.tel.metrics.counter(
+                    "engine_need_pages_total",
+                    "pool-pressure signals raised").inc(where="prefill")
+            raise NeedPages(slot, shard) from None
 
     def _finish_prefill(self, slot: int, pf, logits_row, done_out=None
                         ) -> None:
@@ -304,6 +338,10 @@ class EngineCore:
         self.lengths[slot] = len(pf.prompt)
         self.backend.set_last_token(slot, tok)
         self.budget[slot] = req.max_tokens - len(req.out)
+        if self.tel.enabled and not pf.suppress_first:
+            tl = self.tel.timeline(req.rid)
+            if tl.first_token_t is None:
+                tl.first_token_t = time.perf_counter()
         if done_out is not None:
             done_out.append(slot)
         if self.budget[slot] <= 0:     # e.g. max_tokens=1: done at prefill
@@ -313,6 +351,27 @@ class EngineCore:
             self.lengths[slot] = 0
             self.free.append(slot)
             self._prefill_done.append((slot, req))
+            if self.tel.enabled:
+                self._stamp_done(req, "done")
+
+    def _stamp_done(self, req: Request, outcome: str) -> None:
+        """Close a request's timeline and bump the finish counters."""
+        tl = self.tel.timeline(req.rid)
+        tl.done_t = time.perf_counter()
+        tl.n_tokens = len(req.out or ())
+        tl.outcome = outcome
+        sla = getattr(req, "sla", None) or "default"
+        self.tel.metrics.counter(
+            "engine_requests_finished_total",
+            "requests completed").inc(sla=sla)
+        self.tel.metrics.counter(
+            "engine_tokens_total",
+            "tokens emitted by finished requests").inc(tl.n_tokens,
+                                                       sla=sla)
+        if tl.ttft is not None:
+            self.tel.metrics.histogram(
+                "engine_ttft_seconds",
+                "time to first token").observe(tl.ttft, sla=sla)
 
     def exec_prefill_chunk(self, slot: int) -> bool:
         """Share/allocate + compute + scatter ONE chunk of ``slot``'s
@@ -330,13 +389,22 @@ class EngineCore:
         table.extend(pages)
         t = len(pf.prompt)
         last = pf.chunk == len(pf.spans) - 1
+        if self.tel.enabled and pf.chunk == 0:
+            tl = self.tel.timeline(self.active[slot].rid)
+            if tl.first_chunk_t is None:
+                tl.first_chunk_t = time.perf_counter()
 
         logits = None
         if fresh_globals or last:  # fully-shared middle chunks skip compute
             last_idx = (t - 1 if last else end - 1) - start
-            logits = self.backend.dispatch_chunk(
-                pf, table, start, end, width, last_idx, pages,
-                fresh_globals)
+            kind = ("chunk", width)
+            with self.tel.tracer.span("prefill.chunk", slot=slot,
+                                      width=width,
+                                      compile=kind not in self._compiled):
+                logits = self.backend.dispatch_chunk(
+                    pf, table, start, end, width, last_idx, pages,
+                    fresh_globals)
+            self._compiled.add(kind)
             if self.backend.share and pf.toks is not None:
                 self.backend.register_prompt_pages(pf.toks, table,
                                                    fresh_globals,
@@ -382,6 +450,8 @@ class EngineCore:
         waves (still one compilation). Returns the slots entering
         decode."""
         page = self.backend.page_size
+        pack_span = self.tel.tracer.span("prefill.pack", slots=len(batch))
+        pack_span.__enter__()
         for slot, n in batch:                  # phase A: allocation
             pf = self._pf[slot]
             if pf.pending is not None:
@@ -390,10 +460,18 @@ class EngineCore:
             start, end, _ = self._merged_span(pf, n)
             start_page = start // page
             n_need = -(-end // page) - start_page
-            pages, fresh_globals, sharing = self._alloc_chunk(
-                slot, pf, start_page, n_need)
+            try:
+                pages, fresh_globals, sharing = self._alloc_chunk(
+                    slot, pf, start_page, n_need)
+            except NeedPages:
+                pack_span.__exit__(None, None, None)
+                raise
             pf.sharing = sharing
             pf.pending = (pages, fresh_globals, n)
+            if self.tel.enabled and pf.chunk == 0:
+                tl = self.tel.timeline(self.active[slot].rid)
+                if tl.first_chunk_t is None:
+                    tl.first_chunk_t = time.perf_counter()
 
         # Phase A2 — same-tick prefix dedup. Batched admission runs many
         # same-prefix prompts' chunks in ONE tick, so the ordinary
@@ -461,25 +539,37 @@ class EngineCore:
             cur_t += width
         if cur:
             waves.append(cur)
+        pack_span.args["waves"] = len(waves)
+        pack_span.__exit__(None, None, None)
+        if len(waves) > 1:
+            self.tel.metrics.counter(
+                "engine_wave_splits_total",
+                "batched prefills split into extra waves").inc(
+                len(waves) - 1)
 
         logits_by_slot: dict[int, np.ndarray] = {}
-        for wave in waves:                     # phase B: dispatch(es)
-            self._dispatch_chunk_wave(wave, logits_by_slot)
+        for i, wave in enumerate(waves):       # phase B: dispatch(es)
+            first = "wave" not in self._compiled
+            with self.tel.tracer.span("prefill.dispatch", wave=i,
+                                      lanes=len(wave), compile=first):
+                self._dispatch_chunk_wave(wave, logits_by_slot)
+            self._compiled.add("wave")
 
         done: list[int] = []
-        for slot in slots:                     # phase C: commit
-            pf = self._pf[slot]
-            pages, fresh_globals, n = pf.pending
-            self.tables[slot].extend(pages)
-            # prefix registration already happened in phase A2 — the
-            # sole registration point, which is what makes same-tick
-            # sharing safe (content lands via this dispatch's scatter)
-            pf.pending = None
-            pf.chunk += n
-            if pf.chunk < len(pf.spans):
-                continue
-            self._finish_prefill(slot, pf, logits_by_slot.get(slot),
-                                 done_out=done)
+        with self.tel.tracer.span("prefill.commit", slots=len(slots)):
+            for slot in slots:                 # phase C: commit
+                pf = self._pf[slot]
+                pages, fresh_globals, n = pf.pending
+                self.tables[slot].extend(pages)
+                # prefix registration already happened in phase A2 — the
+                # sole registration point, which is what makes same-tick
+                # sharing safe (content lands via this dispatch's scatter)
+                pf.pending = None
+                pf.chunk += n
+                if pf.chunk < len(pf.spans):
+                    continue
+                self._finish_prefill(slot, pf, logits_by_slot.get(slot),
+                                     done_out=done)
         return done
 
     def _dispatch_chunk_wave(self, wave: list[int],
@@ -529,25 +619,46 @@ class EngineCore:
             done_early, self._prefill_done = self._prefill_done, []
             return done_early
         # may raise NeedPages (tail-page growth) — drain the
-        # prefill-finished list only once nothing can raise anymore
-        logits = self.backend.decode_step(slots, self.tables, self.lengths)
-        done_early, self._prefill_done = self._prefill_done, []
-        logits = logits[:, :self.cfg.vocab]
-        if self.backend.greedy:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            self.rng, sub = jax.random.split(self.rng)
-            nxt = jax.random.categorical(
-                sub, logits / self.backend.temperature, axis=-1)
-        self.backend.commit_tokens(nxt)
-        nxt_host = np.asarray(nxt)
+        # prefill-finished list only once nothing can raise anymore.
+        # The span covers dispatch THROUGH the host sync (np.asarray):
+        # jit dispatch is async, so device time only shows at the sync.
+        first = "decode" not in self._compiled
+        with self.tel.tracer.span("decode.step", lanes=len(slots),
+                                  compile=first):
+            try:
+                logits = self.backend.decode_step(slots, self.tables,
+                                                  self.lengths)
+            except NeedPages as e:
+                if self.tel.enabled:
+                    self.tel.tracer.instant("need_pages", slot=e.slot,
+                                            where="decode",
+                                            shard=e.shard)
+                    self.tel.metrics.counter(
+                        "engine_need_pages_total",
+                        "pool-pressure signals raised").inc(where="decode")
+                raise
+            done_early, self._prefill_done = self._prefill_done, []
+            logits = logits[:, :self.cfg.vocab]
+            if self.backend.greedy:
+                nxt = jnp.argmax(logits, axis=-1)
+            else:
+                self.rng, sub = jax.random.split(self.rng)
+                nxt = jax.random.categorical(
+                    sub, logits / self.backend.temperature, axis=-1)
+            self.backend.commit_tokens(nxt)
+            nxt_host = np.asarray(nxt)
+        self._compiled.add("decode")
         finished = done_early
+        tel_on = self.tel.enabled
+        now = time.perf_counter() if tel_on else 0.0
         for slot in slots:
             req = self.active[slot]
             tok = int(nxt_host[slot])
             req.out.append(tok)
             self.lengths[slot] += 1
             self.budget[slot] -= 1
+            if tel_on:
+                self.tel.timeline(req.rid).token_ts.append(now)
             limit = req.max_len
             done = (tok == self.backend.eos_id or self.budget[slot] <= 0
                     or (limit is not None
@@ -560,6 +671,8 @@ class EngineCore:
                 self.lengths[slot] = 0
                 self.free.append(slot)
                 finished.append((slot, req))
+                if tel_on:
+                    self._stamp_done(req, "done")
         return finished
 
     # -- executor protocol: lazy shed / preemption / swap -------------------
@@ -589,14 +702,21 @@ class EngineCore:
         if not cands:
             return 0
         req = self.active[slot]
-        host = self.backend.gather_park(table, cands)
-        state = swap_policy.merge_shed(
-            {"rows": host, "park": list(cands)},
-            self.swap_area.discard(req.rid), concat_rows)
-        self.swap_area.put(req.rid, state, _rows_bytes(state["rows"]))
-        for j in cands:
-            self.backend.decref_page(j, table[j])
-            table[j] = swap_policy.SHED
+        with self.tel.tracer.span("shed", slot=slot, rid=req.rid,
+                                  pages=len(cands), shard=shard):
+            host = self.backend.gather_park(table, cands)
+            state = swap_policy.merge_shed(
+                {"rows": host, "park": list(cands)},
+                self.swap_area.discard(req.rid), concat_rows)
+            self.swap_area.put(req.rid, state, _rows_bytes(state["rows"]))
+            for j in cands:
+                self.backend.decref_page(j, table[j])
+                table[j] = swap_policy.SHED
+        if self.tel.enabled:
+            self.tel.metrics.counter(
+                "engine_pages_swapped_total",
+                "pages moved between pool and host").inc(
+                len(cands), dir="out", kind="shed")
         return len(cands)
 
     def exec_preempt(self, slot: int, swap: bool) -> bool:
@@ -613,6 +733,9 @@ class EngineCore:
         req = self.active.pop(slot)
         table = self.tables.pop(slot)
         pf = self._pf.pop(slot, None)
+        span = self.tel.tracer.span("preempt", slot=slot, rid=req.rid,
+                                    swap=swap)
+        span.__enter__()
         swap_policy.release_pending(
             pf, lambda pgs: self.backend.release_pages(pgs, len(table)))
         swapped = False
@@ -621,7 +744,10 @@ class EngineCore:
                 table, lambda j: self.backend.ref_of(table, j))
             # gather BEFORE decref: page content is only guaranteed
             # until the ids return to the free list
-            host = self.backend.gather_park(table, park) if park else None
+            with self.tel.tracer.span("swap_out", rid=req.rid,
+                                      pages=len(park)):
+                host = self.backend.gather_park(table, park) \
+                    if park else None
             state = swap_policy.progress_state(
                 req, pf, share=self.backend.share,
                 length=int(self.lengths[slot]),
@@ -638,12 +764,23 @@ class EngineCore:
             for j in park:
                 self.backend.decref_page(j, table[j])
             swapped = True
+            if self.tel.enabled and park:
+                self.tel.metrics.counter(
+                    "engine_pages_swapped_total",
+                    "pages moved between pool and host").inc(
+                    len(park), dir="out", kind="preempt")
         else:
             self.swap_area.discard(req.rid)    # stale lazy-shed payload
             self.backend.release_table(table)
         self.budget.pop(slot, None)
         self.lengths[slot] = 0
         self.free.append(slot)
+        if self.tel.enabled:
+            tl = self.tel.timeline(req.rid)
+            tl.preempt_ts.append(time.perf_counter())
+            tl.outcome = "preempted"
+        span.args["swapped"] = swapped
+        span.__exit__(None, None, None)
         return swapped
 
     def exec_swap_in(self, req: Request) -> Optional[int]:
@@ -672,23 +809,34 @@ class EngineCore:
         filled, upload = plan
         state = self.swap_area.take(req.rid)   # committed: pages acquired
         slot = self.free.pop(0)
-        for j, pid in state["kept"]:
-            filled[j] = pid
-        pages = [filled[j] for j in range(state["n_pages"])]
-        if upload:
-            self.backend.upload_park(
-                state["rows"],
-                [(pos, park[pos], pid) for pos, pid in upload])
-        self.tables[slot] = pages
-        self.active[slot] = req
-        pf = swap_policy.restore_progress(state)
-        if pf is not None:
-            self._pf[slot] = pf
-            self.lengths[slot] = 0
-        else:
-            self.lengths[slot] = state["length"]
-            self.backend.set_last_token(slot, state["last_token"])
-            self.budget[slot] = state["budget"]
+        with self.tel.tracer.span("swap_in", rid=req.rid, slot=slot,
+                                  uploads=len(upload)):
+            for j, pid in state["kept"]:
+                filled[j] = pid
+            pages = [filled[j] for j in range(state["n_pages"])]
+            if upload:
+                self.backend.upload_park(
+                    state["rows"],
+                    [(pos, park[pos], pid) for pos, pid in upload])
+            self.tables[slot] = pages
+            self.active[slot] = req
+            pf = swap_policy.restore_progress(state)
+            if pf is not None:
+                self._pf[slot] = pf
+                self.lengths[slot] = 0
+            else:
+                self.lengths[slot] = state["length"]
+                self.backend.set_last_token(slot, state["last_token"])
+                self.budget[slot] = state["budget"]
+        if self.tel.enabled:
+            tl = self.tel.timeline(req.rid)
+            tl.resume_ts.append(time.perf_counter())
+            tl.outcome = None                  # back in flight
+            if upload:
+                self.tel.metrics.counter(
+                    "engine_pages_swapped_total",
+                    "pages moved between pool and host").inc(
+                    len(upload), dir="in", kind="resume")
         return slot
 
     # -- driver -------------------------------------------------------------
@@ -696,7 +844,74 @@ class EngineCore:
     def step(self) -> list[Request]:
         """One scheduler tick: admit / one-or-more prefill chunks / fused
         decode. Returns the requests that finished this step."""
-        return self.sched.tick(self)
+        if not self.tel.enabled:
+            return self.sched.tick(self)
+        with self.tel.tracer.span("tick", n=self._tick_no):
+            fin = self.sched.tick(self)
+        self._tick_no += 1
+        self._sync_metrics()
+        return fin
+
+    def _sync_metrics(self) -> None:
+        """Fold scheduler stat deltas and pool occupancy into the
+        registry (host-side state only; NO device syncs)."""
+        reg = self.tel.metrics
+        st = self.sched.stats
+        for field in ("preemptions", "swap_outs", "recomputes",
+                      "resumes", "sheds"):
+            cur = getattr(st, field)
+            delta = cur - self._sched_seen.get(field, 0)
+            if delta > 0:
+                reg.counter(f"engine_{field}_total",
+                            f"scheduler {field}").inc(delta)
+            self._sched_seen[field] = cur
+        reg.counter("engine_ticks_total", "scheduler ticks").inc()
+        bst = self.backend.stats()
+        pool = bst.get("pool")
+        if pool is not None:
+            reg.gauge("engine_pool_pages_live",
+                      "pool pages currently referenced").set(pool.live)
+            reg.gauge("engine_pool_pages_capacity",
+                      "pool page capacity").set(pool.capacity)
+        pools = bst.get("pools")
+        if isinstance(pools, dict) and "per_shard" in pools:
+            for s, p in enumerate(pools["per_shard"]):
+                live = p.live if hasattr(p, "live") else p["live"]
+                cap = p.capacity if hasattr(p, "capacity") \
+                    else p["capacity"]
+                reg.gauge("engine_pool_pages_live",
+                          "pool pages currently referenced").set(
+                    live, shard=s)
+                reg.gauge("engine_pool_pages_capacity",
+                          "pool page capacity").set(cap, shard=s)
+        if self.sched.budget_ctl is not None:
+            reg.gauge("engine_prefill_budget_tokens",
+                      "autotuned prefill token budget").set(
+                self.sched.budget_ctl.budget)
+        swap = self.swap_area.stats()
+        reg.gauge("engine_swap_area_bytes",
+                  "host bytes held by parked pages").set(swap.bytes)
+        reg.gauge("engine_swap_area_entries",
+                  "sequences parked on the host").set(swap.entries)
+
+    def dlzs_hot_fraction(self) -> Optional[float]:
+        """Fraction of decode-phase live pages inside the DLZS hot set —
+        a point-in-time snapshot for metrics() / the exposition endpoint.
+        Pulls page scores from the device, so NEVER call per tick."""
+        live = 0
+        hot_n = 0
+        for slot in self._decode_slots():
+            table = self.tables.get(slot)
+            if not table:
+                continue
+            hot = self.backend.hot_logical(table)
+            for j, pid in enumerate(table):
+                if pid is None or pid < 0:     # SHED sentinel
+                    continue
+                live += 1
+                if j in hot:
+                    hot_n += 1
+        return round(hot_n / live, 4) if live else None
 
     def run(self, requests: list[Request], max_steps: int = 10_000):
         """Serve a request list to completion; returns {rid: tokens}."""

@@ -48,6 +48,7 @@ import numpy as np
 from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
                            bucketing, metrics)
 from repro.models import lm
+from repro.obs import NULL_TELEMETRY
 from repro.serving.engine_core import EngineCore
 from repro.serving.scheduler import (NeedPages, SchedulerCfg,
                                      resolve_prefill_tokens)
@@ -114,6 +115,7 @@ class PagedBackend:
         self.pool = PagePool(pcfg.n_pages, pcfg.page_size)
         self.alloc = PagedAllocator(self.pool,
                                     recent_pages=pcfg.recent_pages)
+        self.tel = NULL_TELEMETRY    # shared via EngineCore.attach_telemetry
 
         # batched varlen chunk prefill: fixed flat-buffer width + fixed
         # past-gather window => exactly one prefill compilation
@@ -334,6 +336,13 @@ class PagedBackend:
             for j, pid in enumerate(lane["pages"]):
                 if sp + j in lane["fresh"]:
                     phys_sc[base + j] = pid
+        if self.tel.enabled:
+            self.tel.tracer.instant("arena.fill", used=int(arena),
+                                    cap=self.batch_wp,
+                                    lanes=len(lanes))
+            self.tel.metrics.gauge(
+                "engine_arena_pages_used",
+                "past-arena slots filled by the last wave").set(int(arena))
         pack_state = {
             "seg_ids": jnp.asarray(seg),
             "positions": jnp.asarray(pos),

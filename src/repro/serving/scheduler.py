@@ -43,6 +43,7 @@ import time
 from typing import Optional, Protocol, Union
 
 from repro.kvcache.bucketing import pack_budget
+from repro.obs import NULL_TELEMETRY
 from repro.serving.engine import Request
 
 
@@ -272,6 +273,7 @@ class Scheduler:
         self.budget_ctl: Optional[BudgetController] = None
         self._budget_warm = False    # first batched phase pays the XLA
         #                              compile: never feed it to the EMA
+        self.tel = NULL_TELEMETRY    # shared via EngineCore.attach_telemetry
         if cfg.prefill_tokens == "auto":
             # placeholder bounds until the engine attaches real ones
             # (attach_budget) — an unattached "auto" packs greedily
@@ -314,9 +316,17 @@ class Scheduler:
 
     def tick(self, ex: Executor) -> list[Request]:
         self._resumed_tick.clear()
-        self._admit_phase(ex)
-        self._prefill_phase(ex)
-        return self._decode_phase(ex)
+        if not self.tel.enabled:
+            self._admit_phase(ex)
+            self._prefill_phase(ex)
+            return self._decode_phase(ex)
+        tr = self.tel.tracer
+        with tr.span("phase.admit"):
+            self._admit_phase(ex)
+        with tr.span("phase.prefill"):
+            self._prefill_phase(ex)
+        with tr.span("phase.decode"):
+            return self._decode_phase(ex)
 
     # Phase 1: swapped sequences outrank fresh arrivals of equal priority
     # (smaller seqno); a swap-in that does not fit blocks lower-ranked
@@ -446,9 +456,22 @@ class Scheduler:
             # XLA compilation (seconds on real hardware) — feeding it to
             # the EMA would collapse every cold start to the floor budget
             if self._budget_warm:
+                before = self.budget_ctl.budget
                 self.budget_ctl.observe(time.perf_counter() - t0,
                                         packed_tokens)
+                if self.tel.enabled and self.budget_ctl.budget != before:
+                    self.tel.tracer.instant(
+                        "budget.update", tokens=self.budget_ctl.budget,
+                        was=before)
+                    self.tel.metrics.counter(
+                        "engine_budget_updates_total",
+                        "autotuner budget changes").inc()
             self._budget_warm = True
+        if self.tel.enabled and packed_tokens:
+            self.tel.metrics.counter(
+                "engine_prefill_tokens_total",
+                "tokens packed into batched prefill dispatches").inc(
+                packed_tokens)
         return advanced
 
     # Phase 3: decode retries after preempting until the batch fits.

@@ -26,15 +26,14 @@ architecture:
                      shard attends over its local pages via the paged
                      gather, and the partials merge to the owner. One
                      decode compilation, exact numerics.
-* ``orchestrator`` — DEPRECATED shim: the serve loop moved to the
-                     backend-agnostic ``repro.serving.api.LLM`` front
-                     door (QoS/SLA submission, tick driving, streaming,
-                     TTFT/latency metrics). The engine itself is a thin
-                     ``Backend`` under the shared
-                     ``serving.engine_core.EngineCore`` executor, so
-                     chunked/batched prefill, lazy cold-page shedding
-                     and preempt/swap are literally the paged engine's
-                     code paths, shard-tagged.
+The serve loop lives in the backend-agnostic ``repro.serving.api.LLM``
+front door (QoS/SLA submission, tick driving, streaming, TTFT/latency
+metrics); the engine here is a thin ``Backend`` under the shared
+``serving.engine_core.EngineCore`` executor, so chunked/batched prefill,
+lazy cold-page shedding and preempt/swap are literally the paged
+engine's code paths, shard-tagged. (The old ``Orchestrator`` entry point
+was removed after its one-PR deprecation window — construct ``LLM``
+directly.)
 
 Context length scales with device count: a prompt that overflows one
 shard's pool (rejected by ``PagedServingEngine.submit``) stripes across
@@ -44,12 +43,11 @@ the mesh and serves normally — the acceptance workload in
 
 from repro.spatial.engine import (SpatialBackend, SpatialEngineCfg,
                                   SpatialServingEngine)
-from repro.spatial.orchestrator import Orchestrator
 from repro.spatial.sharded_pool import ShardedPagePools, ShardPoolExhausted
 from repro.spatial.topology import (ShardTopology, ensure_host_devices,
                                     respawn_with_devices)
 
-__all__ = ["Orchestrator", "ShardPoolExhausted", "ShardTopology",
+__all__ = ["ShardPoolExhausted", "ShardTopology",
            "ShardedPagePools", "SpatialBackend", "SpatialEngineCfg",
            "SpatialServingEngine", "ensure_host_devices",
            "respawn_with_devices"]

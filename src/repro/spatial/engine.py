@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.kvcache import SCRATCH, bucketing, metrics
 from repro.models import lm
+from repro.obs import NULL_TELEMETRY
 from repro.serving.engine_core import EngineCore
 from repro.serving.scheduler import (NeedPages, SchedulerCfg,
                                      resolve_prefill_tokens)
@@ -99,6 +100,7 @@ class SpatialBackend:
         self.pools = ShardedPagePools(
             self.topo, pcfg.n_pages_local, pcfg.page_size,
             recent_pages=pcfg.recent_pages)
+        self.tel = NULL_TELEMETRY    # shared via EngineCore.attach_telemetry
 
         # protocol facts EngineCore reads
         self.page_size = pcfg.page_size
@@ -344,6 +346,15 @@ class SpatialBackend:
                 g = sp + cj
                 if g in lane["fresh"]:
                     chunk_phys[self.topo.owner(g), 0, base + cj] = pid
+        if self.tel.enabled:
+            for s in range(n_sh):      # shard-tagged arena occupancy
+                self.tel.tracer.instant("arena.fill", tid=s + 1,
+                                        shard=s, used=int(arena[s]),
+                                        cap=wp, lanes=len(lanes))
+                self.tel.metrics.gauge(
+                    "engine_arena_pages_used",
+                    "past-arena slots filled by the last wave").set(
+                    int(arena[s]), shard=s)
         pack_state = {
             "seg_ids": jnp.asarray(seg),
             "positions": jnp.asarray(pos),

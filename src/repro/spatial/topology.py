@@ -13,7 +13,7 @@ The physical communication story mirrors the paper's §V-B: on a torus
 interconnect (TPU ICI) the partial-softmax merge is a free logical ring
 (ppermute / psum); on a wrap-around-free 2D-mesh NoC the same ring is
 realized by MRCA (core/mrca.py). ``neighbor_schedule`` exposes the
-MRCA-derived per-step send lists so the orchestrator and the spatial
+MRCA-derived per-step send lists so the engine and the spatial
 benchmarks can cost the exchange on either fabric; the host harness
 ("fake devices" via ``xla_force_host_platform_device_count``) executes
 the merge as the psum tree, which is schedule-equivalent (every shard's

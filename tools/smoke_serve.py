@@ -2,6 +2,7 @@
 ``LLM`` front door on a tiny LM.
 
 Run:  PYTHONPATH=src python tools/smoke_serve.py
+      PYTHONPATH=src python tools/smoke_serve.py --trace [DIR]
 
 Scenarios (~30s each on CPU):
 
@@ -28,31 +29,36 @@ Scenarios (~30s each on CPU):
    the paged backend, the ultra-long admit, lazy cold-page shedding on
    the sharded pools, and front-door throughput within 5% of the direct
    engine (merged into the ``engine_core`` entry).
-6. Deprecation shims: the old ``Orchestrator`` entry point still
-   imports, warns, and serves.
+
+``--trace [DIR]`` runs ONLY the telemetry smoke instead: a small traced
+workload per backend (dense + paged in-process, spatial in a 2-shard
+subprocess), each exported as a Perfetto-loadable Chrome trace into DIR
+(default: a temp dir) and summarized with tools/trace_summary.py.
 
 Exits non-zero on any failure.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import pathlib
 import re
 import subprocess
 import sys
+import tempfile
 import time
-import warnings
 
 import jax
 import numpy as np
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO))          # for the benchmarks package
+sys.path.insert(0, str(REPO / "tools"))  # for trace_summary
 
 from repro.configs import get_smoke_config
 from repro.models import lm
-from repro.serving import LLM, PagedEngineCfg, PagedServingEngine
+from repro.serving import LLM, PagedEngineCfg, PagedServingEngine  # noqa: F401
 
 
 def basic(cfg, params) -> bool:
@@ -184,34 +190,111 @@ def spatial() -> dict | None:
             "gap": round(direct / max(llm, 1e-9), 3)}
 
 
-def shims(cfg, params) -> bool:
-    """The one-PR deprecation shims must still import and serve: the old
-    ``Orchestrator(engine)`` entry point warns but works."""
+def _check_trace(events: list[dict], backend: str,
+                 want_shards: bool = False) -> None:
+    """The Perfetto-loadability contract every traced backend must meet."""
+    spans = [e for e in events if e.get("ph") == "X"]
+    assert spans, f"{backend}: no spans in trace"
+    for e in spans:
+        assert {"name", "ts", "dur", "pid", "tid"} <= set(e), e
+    ticks = [e for e in spans if e["name"] == "tick"]
+    assert ticks, f"{backend}: no tick spans"
+    ts = [e["ts"] for e in ticks]
+    assert ts == sorted(ts), f"{backend}: tick timestamps not monotonic"
+    if want_shards:
+        tagged = [e for e in events
+                  if (e.get("args") or {}).get("shard") is not None]
+        assert tagged, f"{backend}: no shard-tagged events"
+
+
+def trace_smoke(cfg, params, out_dir: pathlib.Path) -> bool:
+    """A traced run per backend, each exported as Chrome trace JSON that
+    loads back cleanly (ui.perfetto.dev-compatible) + a phase table."""
+    import trace_summary
+    from repro import obs
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    ok = True
     t0 = time.time()
-    from repro.spatial import Orchestrator     # import path kept alive
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        orch = Orchestrator(PagedServingEngine(cfg, params, PagedEngineCfg(
-            max_batch=2, page_size=16, n_pages=24, hot_pages=3,
-            eos_id=-1)))
-        warned = any(issubclass(w.category, DeprecationWarning)
-                     for w in caught)
-    rid = orch.submit(np.arange(10, dtype=np.int32), max_tokens=3)
-    done = orch.run()
-    rep = orch.report()
-    ok = (warned and rid == 0 and len(done[0]) == 3
-          and rep["requests"] == 1)
-    dt = time.time() - t0
-    print(f"smoke_serve[shims]: Orchestrator warned={warned}, served "
-          f"{rep.get('tokens', 0)} tokens, {dt:.1f}s "
+
+    # dense + paged in-process
+    for backend in ("dense", "paged"):
+        tel = obs.Telemetry({"backend": backend})
+        kw = {}
+        if backend == "paged":
+            from repro.serving import SchedulerCfg
+            kw = dict(engine_cfg=PagedEngineCfg(
+                max_batch=2, page_size=16, n_pages=24, hot_pages=4,
+                eos_id=-1), sched_cfg=SchedulerCfg(chunk_pages=1,
+                                                   prefill_tokens=48))
+        llm = LLM.from_config(cfg, backend=backend, params=params,
+                              telemetry=tel, **kw)
+        for i, n in enumerate((6, 18, 35)):
+            llm.submit((np.arange(n, dtype=np.int32) * 5 + i) % cfg.vocab,
+                       max_tokens=4, rid=i)
+        done = llm.run_until_done()
+        assert all(len(v) == 4 for v in done.values()), (backend, done)
+        path = out_dir / f"trace_{backend}.json"
+        tel.tracer.export_chrome(str(path))
+        events = obs.load_trace(str(path))
+        try:
+            _check_trace(events, backend)
+        except AssertionError as e:
+            print(f"smoke_serve[trace:{backend}]: FAIL ({e})")
+            ok = False
+            continue
+        print(trace_summary.format_table(obs.phase_summary(events),
+                                         title=backend))
+        print(f"smoke_serve[trace:{backend}]: {path} "
+              f"({len(events)} events) -> PASS")
+
+    # spatial: 2-shard fake-device mesh needs its own process
+    prog = pathlib.Path(__file__).parent / "smoke_spatial_prog.py"
+    sp_path = out_dir / "trace_spatial.json"
+    out = subprocess.run(
+        [sys.executable, str(prog), "--trace", str(sp_path)],
+        capture_output=True, text=True, timeout=900)
+    sp_ok = out.returncode == 0 and "SPATIAL_TRACE_OK" in out.stdout
+    if sp_ok:
+        from repro import obs
+        events = obs.load_trace(str(sp_path))
+        try:
+            _check_trace(events, "spatial", want_shards=True)
+        except AssertionError as e:
+            print(f"smoke_serve[trace:spatial]: FAIL ({e})")
+            sp_ok = False
+        else:
+            import trace_summary
+            print(trace_summary.format_table(obs.phase_summary(events),
+                                             title="spatial"))
+            print(f"smoke_serve[trace:spatial]: {sp_path} "
+                  f"({len(events)} events) -> PASS")
+    else:
+        tail = out.stdout.strip().splitlines()[-1:] or [out.stderr[-300:]]
+        print(f"smoke_serve[trace:spatial]: FAIL ({tail[0]})")
+    ok = ok and sp_ok
+    print(f"smoke_serve[trace]: all backends in {time.time() - t0:.1f}s "
           f"-> {'PASS' if ok else 'FAIL'}")
     return ok
 
 
 def main() -> int:
+    ap = argparse.ArgumentParser(description="serving smoke")
+    ap.add_argument("--trace", nargs="?", const="", metavar="DIR",
+                    default=None,
+                    help="run ONLY the telemetry smoke; export Perfetto "
+                         "traces for all three backends into DIR")
+    args = ap.parse_args()
+
     from benchmarks import serving as bench_serving
     cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
     params = lm.init(jax.random.PRNGKey(0), cfg)
+
+    if args.trace is not None:
+        out_dir = pathlib.Path(args.trace) if args.trace \
+            else pathlib.Path(tempfile.mkdtemp(prefix="repro_traces_"))
+        return 0 if trace_smoke(cfg, params, out_dir) else 1
+
     ok = basic(cfg, params)
     ok = overload(cfg, params) and ok
     baseline = batched(cfg, params)
@@ -224,7 +307,6 @@ def main() -> int:
         core["spatial"] = sp
         bench_serving.write_json(str(REPO / "BENCH_serving.json"),
                                  {"engine_core": core})
-    ok = shims(cfg, params) and ok
     return 0 if ok else 1
 
 

@@ -14,6 +14,10 @@ everything drives the unified ``LLM`` front door:
   driven engine (both warmed) — reported as ``SPATIAL_TOKS direct=..
   llm=..`` for the parent's BENCH_serving.json ``engine_core`` entry.
 
+With ``--trace PATH`` it instead runs ONE small traced batched-prefill
+workload on the 2-shard engine, exports a Chrome/Perfetto trace to PATH,
+asserts shard-tagged events made it in, and prints SPATIAL_TRACE_OK.
+
 Prints SPATIAL_OK on success; any assertion exits non-zero.
 """
 
@@ -37,6 +41,31 @@ from repro.spatial import SpatialEngineCfg, SpatialServingEngine
 
 cfg = dataclasses.replace(get_smoke_config("olmo_1b"), star=None)
 params = lm.init(jax.random.PRNGKey(0), cfg)
+
+if len(sys.argv) >= 3 and sys.argv[1] == "--trace":
+    from repro import obs
+    trace_path = sys.argv[2]
+    tel = obs.Telemetry({"backend": "spatial", "n_shards": 2})
+    llm = LLM(SpatialServingEngine(cfg, params, SpatialEngineCfg(
+        n_shards=2, max_batch=2, page_size=16, n_pages_local=24,
+        hot_pages_local=4, eos_id=-1),
+        SchedulerCfg(chunk_pages=1, prefill_tokens=48)),
+        telemetry=tel)
+    for i, l in enumerate((6, 18, 35)):
+        llm.submit((np.arange(l, dtype=np.int32) * 5 + i) % cfg.vocab,
+                   max_tokens=4, rid=i)
+    done = llm.run_until_done(max_steps=20_000)
+    assert all(len(v) == 4 for v in done.values()), done
+    tel.tracer.export_chrome(trace_path)
+    events = obs.load_trace(trace_path)
+    shard_tagged = [e for e in events
+                    if (e.get("args") or {}).get("shard") is not None]
+    assert shard_tagged, "no shard-tagged events in spatial trace"
+    ticks = [e for e in events if e.get("name") == "tick"]
+    assert ticks, "no tick spans in spatial trace"
+    print(f"SPATIAL_TRACE_OK events={len(events)} "
+          f"shard_tagged={len(shard_tagged)} ticks={len(ticks)}")
+    sys.exit(0)
 
 
 def submit_all(llm, lengths, max_tokens=4):

@@ -1,0 +1,38 @@
+"""Per-phase time table from an exported engine trace.
+
+Run:  PYTHONPATH=src python tools/trace_summary.py TRACE.jsonl [...]
+
+Accepts either export format (``Tracer.export_jsonl`` / ``export_chrome``)
+and prints where tick time went: total and per-tick milliseconds in the
+admit / prefill / decode phases, swap activity (preempt + swap-in +
+shed, nested inside the phases), the host-side remainder, and how much
+was first-call compile time. ``tools/smoke_serve.py --trace`` prints the
+same table after each traced backend run.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.obs import format_table, load_trace, phase_summary  # noqa: E402,F401
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: trace_summary.py TRACE.jsonl [TRACE2.json ...]")
+        return 2
+    for path in argv:
+        events = load_trace(path)
+        print(format_table(phase_summary(events),
+                           title=pathlib.Path(path).stem))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
