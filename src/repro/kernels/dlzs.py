@@ -31,6 +31,21 @@ def _pow2_bitwise(x: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(masked, jnp.float32)
 
 
+def sphere_keep(scores, radius: float):
+    """SADS sphere rule over per-page DLZS scores.
+
+    Keeps every page whose predicted max is within ``radius`` of the best
+    page: ``scores >= max(scores) - radius``. Works on numpy or jax
+    arrays; returns a boolean mask of the same shape. This is the paper's
+    score-sphere criterion — decode-time selectors bound the resulting
+    set to a fixed hot width, but the sphere is the admission test.
+    """
+    import numpy as _np
+    xp = jnp if isinstance(scores, jax.Array) else _np
+    s = xp.asarray(scores)
+    return s >= (s.max() - radius)
+
+
 def _dlzs_kernel(q_ref, k_ref, bmax_ref, *, scale: float, causal: bool,
                  block_q: int, block_kv: int, q_offset: int = 0):
     qi = pl.program_id(1)

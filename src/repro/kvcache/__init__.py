@@ -29,6 +29,11 @@ DLZS prediction stage (§IV-A) decide which pages stay hot:
                    compilations, not one per length) and the page-aligned
                    chunk math (``chunk_spans``) behind chunked prefill.
 * ``metrics``    — device-side page scoring + cache-bytes accounting.
+* ``quant``      — int8 cold-page KV tier: per-page-scaled quantized
+                   mirrors of the pool slabs; pages leaving the DLZS hot
+                   set quantize, the decode gather dequantizes
+                   (``SchedulerCfg.kv_quant``). Host flag bookkeeping is
+                   ``pool.QuantTracker``.
 
 Page size choice
 ----------------
@@ -56,11 +61,22 @@ highest-scored cold pages; eviction under admission pressure reclaims
 cached prefix pages lowest-score-first. Cross-stage tiling, cache edition:
 prediction metadata produced for the compute stage doubles as the memory
 manager's utility signal.
+
+Decode-time sparsity (``SchedulerCfg.decode_hot_width``) swaps the
+retention selector for ``allocator.select_hot_sphere``: the SADS sphere
+rule (``kernels.dlzs.sphere_keep``, keep pages within ``radius`` of the
+best predicted max) under a hard width cap, with the newest page and the
+position-0 sink always hot. The selection is deterministic, monotone in
+width, and fixed-shape — the properties ``tests/test_decode_sparse.py``
+pins down. SHED-parked entries (negative block-table sentinel) are never
+selected by either selector.
 """
 
-from repro.kvcache.allocator import PagedAllocator
+from repro.kvcache.allocator import PagedAllocator, select_hot_sphere
 from repro.kvcache.pool import (SCRATCH, PagePool, PoolExhausted, PoolStats,
-                                SwapArea, SwapStats)
+                                QuantStats, QuantTracker, SwapArea,
+                                SwapStats)
 
 __all__ = ["PagePool", "PagedAllocator", "PoolExhausted", "PoolStats",
-           "SCRATCH", "SwapArea", "SwapStats"]
+           "QuantStats", "QuantTracker", "SCRATCH", "SwapArea", "SwapStats",
+           "select_hot_sphere"]

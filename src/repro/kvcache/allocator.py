@@ -28,6 +28,68 @@ import numpy as np
 from repro.kvcache.pool import PagePool, PoolExhausted
 
 
+def select_hot_sphere(pages: Sequence[int], width: int,
+                      scores: Optional[np.ndarray] = None, *,
+                      recent: int = 1, radius: Optional[float] = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Decode hot-set selection: SADS sphere rule under a hard width cap.
+
+    Builds one priority-ordered candidate list and truncates it to
+    ``width``, which gives the properties the decode path (and the
+    property tests) rely on by construction:
+
+    * deterministic — same inputs, same hot set;
+    * monotone in ``width`` — a wider budget keeps a superset, so quality
+      degrades smoothly as the cap tightens;
+    * the NEWEST resident page (being written this step) and the SINK
+      page (page 0 — attention sinks live there) are always hot;
+    * fixed ``[width]`` output shapes padded with -1, so the single
+      decode compile survives any score distribution;
+    * SHED/parked entries (negative ids) are never selected.
+
+    Priority: newest page, then sink, then the rest of the ``recent``
+    local window (newest first), then cold pages that pass the sphere
+    rule (``score >= max - radius``; see ``kernels.dlzs.sphere_keep``)
+    ordered by score descending with ties to the newest page. With
+    ``radius=None`` every cold page is a candidate and the rule reduces
+    to bounded top-k; with ``scores=None`` cold pages rank by recency.
+    Output logical indices are sorted ascending so gathered rows stay
+    position-ordered.
+    """
+    from repro.kernels.dlzs import sphere_keep
+
+    phys = np.full((width,), -1, np.int32)
+    logical = np.full((width,), -1, np.int32)
+    present = [j for j, pid in enumerate(pages) if pid >= 0]
+    if not present or width <= 0:
+        return phys, logical
+    r = max(1, int(recent))
+    prio = [present[-1]]                     # newest: always hot
+    if present[0] != present[-1]:
+        prio.append(present[0])              # sink: always hot
+    for j in reversed(present[-r:-1]):       # rest of the local window
+        if j not in prio:
+            prio.append(j)
+    seen = set(prio)
+    rest = [j for j in present if j not in seen]
+    if scores is None:
+        rest.reverse()                       # no signal: newest-first
+    elif rest:
+        s_present = np.asarray(
+            [float(scores[pages[j]]) for j in present], np.float64)
+        if radius is not None:
+            inside = np.asarray(sphere_keep(s_present, float(radius)))
+            ok = {j for j, m in zip(present, inside) if m}
+            rest = [j for j in rest if j in ok]
+        sv = {j: float(scores[pages[j]]) for j in rest}
+        rest.sort(key=lambda j: (-sv[j], -j))
+    prio.extend(rest)
+    keep = sorted(prio[:width])
+    phys[:len(keep)] = [pages[j] for j in keep]
+    logical[:len(keep)] = keep
+    return phys, logical
+
+
 class PagedAllocator:
     def __init__(self, pool: PagePool, *, recent_pages: int = 2):
         self.pool = pool
@@ -188,3 +250,12 @@ class PagedAllocator:
         phys[:len(keep)] = [pages[j] for j in keep]
         logical[:len(keep)] = keep
         return phys, logical
+
+    def select_hot_sphere(self, pages: Sequence[int], width: int,
+                          scores: Optional[np.ndarray] = None, *,
+                          radius: Optional[float] = None
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Sphere-rule hot selection with this allocator's recency window
+        (see module-level ``select_hot_sphere``)."""
+        return select_hot_sphere(pages, width, scores,
+                                 recent=self.recent, radius=radius)

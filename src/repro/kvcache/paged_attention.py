@@ -65,17 +65,33 @@ def _group(q: jax.Array, n_kv: int) -> jax.Array:
     return q.reshape(b, n_kv, nh // n_kv, d)
 
 
-def _gather_hot(k_pages, v_pages, phys, logical, kv_len):
+def _gather_hot(k_pages, v_pages, phys, logical, kv_len, quant=None):
     """Pull the hot pages into [B, S_hot, nkv, d] rows + validity mask.
 
     ``phys`` entries < 0 are padded slots (gather is clipped to page 0, the
     scratch page, and masked out via ``logical``).
+
+    ``quant`` (optional) is the int8 cold-tier read path: a dict with the
+    tier slabs ``kq``/``vq`` [P, page, nkv, d] int8, per-page scales
+    ``k_scale``/``v_scale`` [P] f32, and ``qmask`` [B, W] bool marking
+    which gathered slots hold quantized content. Marked slots are replaced
+    by their dequantized int8 rows (``kvcache.quant`` round-trip) — fp
+    slots read the fp slab bit-exactly, so an all-False qmask is identical
+    to the dense path.
     """
     page = k_pages.shape[1]
     b, w = phys.shape
     safe = jnp.maximum(phys, 0)
     kg = jnp.take(k_pages, safe, axis=0)          # [B, W, page, nkv, d]
     vg = jnp.take(v_pages, safe, axis=0)
+    if quant is not None:
+        qm = quant["qmask"][:, :, None, None, None]
+        ks = jnp.take(quant["k_scale"], safe, axis=0)[:, :, None, None, None]
+        vs = jnp.take(quant["v_scale"], safe, axis=0)[:, :, None, None, None]
+        kq = jnp.take(quant["kq"], safe, axis=0).astype(jnp.float32)
+        vq = jnp.take(quant["vq"], safe, axis=0).astype(jnp.float32)
+        kg = jnp.where(qm, (kq * ks).astype(kg.dtype), kg)
+        vg = jnp.where(qm, (vq * vs).astype(vg.dtype), vg)
     s_hot = w * page
     kg = kg.reshape(b, s_hot, *k_pages.shape[2:])
     vg = vg.reshape(b, s_hot, *v_pages.shape[2:])
@@ -89,16 +105,19 @@ def _gather_hot(k_pages, v_pages, phys, logical, kv_len):
 def paged_gather_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         phys: jax.Array, logical: jax.Array,
                         kv_len: jax.Array, *, n_kv: int,
-                        scale: Optional[float] = None) -> jax.Array:
+                        scale: Optional[float] = None,
+                        quant=None) -> jax.Array:
     """XLA paged decode. q [B,nh,d]; k/v pages [P,page,nkv,d];
     phys/logical [B,W]; kv_len [B] -> [B,nh,d].
 
     ``phys`` entries < 0 are padded slots (gather is clipped to page 0, the
-    scratch page, and masked out via ``logical``).
+    scratch page, and masked out via ``logical``). ``quant`` enables the
+    int8 cold-tier read path (see ``_gather_hot``).
     """
     b, nh, d = q.shape
     scale = scale or (1.0 / math.sqrt(d))
-    kg, vg, valid = _gather_hot(k_pages, v_pages, phys, logical, kv_len)
+    kg, vg, valid = _gather_hot(k_pages, v_pages, phys, logical, kv_len,
+                                quant)
 
     # Grouped-GQA: the gathered pages stay at n_kv width, never repeated.
     qg = _group(q, n_kv)                           # [B, G, R, d]
@@ -117,7 +136,8 @@ def paged_gather_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 def paged_gather_decode_stats(q: jax.Array, k_pages: jax.Array,
                               v_pages: jax.Array, phys: jax.Array,
                               logical: jax.Array, kv_len: jax.Array, *,
-                              n_kv: int, scale: Optional[float] = None
+                              n_kv: int, scale: Optional[float] = None,
+                              quant=None
                               ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Unnormalized partial-softmax state of a paged decode step.
 
@@ -131,7 +151,8 @@ def paged_gather_decode_stats(q: jax.Array, k_pages: jax.Array,
     """
     b, nh, d = q.shape
     scale = scale or (1.0 / math.sqrt(d))
-    kg, vg, valid = _gather_hot(k_pages, v_pages, phys, logical, kv_len)
+    kg, vg, valid = _gather_hot(k_pages, v_pages, phys, logical, kv_len,
+                                quant)
     qg = _group(q, n_kv)
     kc = jnp.moveaxis(kg, 1, 2)
     vc = jnp.moveaxis(vg, 1, 2)
@@ -149,19 +170,24 @@ def paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                  phys: jax.Array, logical: jax.Array, kv_len: jax.Array, *,
                  n_kv: int, scale: Optional[float] = None,
                  backend: Optional[str] = None,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 quant=None) -> jax.Array:
     """Backend dispatch. ``backend``: 'xla' (gather fallback) or 'pallas'
     (block-table kernel); None resolves via ``default_backend()`` —
     pallas on TPU, xla elsewhere, ``REPRO_PAGED_BACKEND`` overriding.
     ``interpret`` only affects the pallas backend: None resolves to False
-    on real TPU (lower to Mosaic) and True anywhere else."""
+    on real TPU (lower to Mosaic) and True anywhere else. ``quant`` (the
+    int8 cold-tier inputs, see ``_gather_hot``) is served by the XLA
+    gather path — the Pallas kernel has no dequant lane yet, so a quant
+    request falls back to XLA regardless of ``backend``."""
     if backend is None:
         backend = default_backend()
     if interpret is None:
         interpret = default_interpret()
-    if backend == "xla":
+    if backend == "xla" or quant is not None:
         return paged_gather_decode(q, k_pages, v_pages, phys, logical,
-                                   kv_len, n_kv=n_kv, scale=scale)
+                                   kv_len, n_kv=n_kv, scale=scale,
+                                   quant=quant)
     if backend != "pallas":
         raise ValueError(f"unknown paged-attention backend {backend!r}")
     from repro.kernels import paged as kpaged

@@ -53,12 +53,58 @@ class PoolStats:
     evictions: int
 
 
+@dataclasses.dataclass
+class QuantStats:
+    quantized: int           # pages currently flagged int8
+    quantize_events: int     # cumulative fp -> int8 transitions
+
+
+class QuantTracker:
+    """Host bookkeeping for the int8 cold-page KV tier.
+
+    Device truth lives in the per-layer ``kq``/``vq`` slabs and per-page
+    scales; this tracker records WHICH page ids currently hold a valid
+    quantized copy, so the backend can (a) skip re-quantizing, (b) build
+    the per-step ``qmask`` the decode gather dequantizes through, and
+    (c) account effective capacity honestly. Lifecycle mirrors the pool:
+    a page's flag clears on ``alloc`` (fresh content is fp until it
+    leaves the DLZS hot set again) and a COW destination inherits its
+    source's flag (the page copy clones the int8 slab rows too).
+    """
+
+    def __init__(self, n_pages: int):
+        self._flags = bytearray(n_pages)
+        self._events = 0
+
+    def on_alloc(self, pid: int) -> None:
+        self._flags[pid] = 0
+
+    def inherit(self, src: int, dst: int) -> None:
+        self._flags[dst] = self._flags[src]
+
+    def mark(self, pid: int) -> None:
+        if not self._flags[pid]:
+            self._flags[pid] = 1
+            self._events += 1
+
+    def is_quant(self, pid: int) -> bool:
+        return pid >= 0 and bool(self._flags[pid])
+
+    def count(self) -> int:
+        return sum(self._flags)
+
+    def stats(self) -> QuantStats:
+        return QuantStats(quantized=self.count(),
+                          quantize_events=self._events)
+
+
 class PagePool:
     def __init__(self, n_pages: int, page_size: int):
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is scratch)")
         self.n_pages = n_pages
         self.page_size = page_size
+        self.quant = QuantTracker(n_pages)
         self._ref = [0] * n_pages
         self._free: deque[int] = deque(range(1, n_pages))
         self._prefix: dict[PrefixKey, int] = {}
@@ -78,6 +124,7 @@ class PagePool:
                 f"pool exhausted: {self.n_pages - 1} pages all live/cached")
         pid = self._free.popleft()
         self._ref[pid] = 1
+        self.quant.on_alloc(pid)
         self._note_live()
         return pid
 
@@ -130,6 +177,7 @@ class PagePool:
         new = self.alloc()
         self._ref[pid] -= 1
         self._cow_copies += 1
+        self.quant.inherit(pid, new)   # the page copy clones int8 rows too
         return new
 
     # -- eviction -----------------------------------------------------------

@@ -514,9 +514,18 @@ def apply_decode_paged(params, cfg: AttentionCfg, x, cache, lengths,
             dlzs.lz_pack(k_new)[:, 0])
 
     from repro.kvcache import paged_attention as kv_paged
+    quant = None
+    if "kq" in cache and "qmask" in page_state:
+        # int8 cold-tier read path: dequantize-on-gather for the hot
+        # slots the backend marked as quantized (kvcache.quant)
+        quant = {"kq": new_cache["kq"], "vq": new_cache["vq"],
+                 "k_scale": new_cache["k_scale"],
+                 "v_scale": new_cache["v_scale"],
+                 "qmask": page_state["qmask"]}
     o = kv_paged.paged_decode(
         q[:, 0], new_cache["k"], new_cache["v"], page_state["phys"],
-        page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale)
+        page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale,
+        quant=quant)
     y = jnp.einsum("bnd,ndh->bh",
                    o.reshape(b, cfg.n_heads, cfg.head_dim),
                    params["wo"])[:, None, :]
@@ -580,9 +589,35 @@ def apply_decode_spatial(params, cfg: AttentionCfg, x, cache, lengths,
             dlzs.lz_pack(k_new)[:, 0])
 
     from repro.kvcache import paged_attention as kv_paged
-    m, l, o = kv_paged.paged_gather_decode_stats(
-        q[:, 0], new_cache["k"], new_cache["v"], page_state["phys"],
-        page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale)
+    quant = None
+    if "kq" in cache and "qmask" in page_state:
+        quant = {"kq": new_cache["kq"], "vq": new_cache["vq"],
+                 "k_scale": new_cache["k_scale"],
+                 "v_scale": new_cache["v_scale"],
+                 "qmask": page_state["qmask"]}
+
+    # DLZS-guided communication sparsity: a shard whose hot set is empty
+    # for EVERY sequence this step (all logical == -1 — bounded hot-width
+    # selection left it nothing) contributes exactly the neutral element,
+    # so skip its gather/softmax and feed the merge the neutral state
+    # directly. lax.cond under shard_map is a real per-shard runtime
+    # branch; the psums below still run on every shard (collectives must),
+    # but the skipped shard's local attention work drops to nothing.
+    g, r = cfg.n_kv, cfg.n_heads // cfg.n_kv
+
+    def _stats(_):
+        return kv_paged.paged_gather_decode_stats(
+            q[:, 0], new_cache["k"], new_cache["v"], page_state["phys"],
+            page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale,
+            quant=quant)
+
+    def _neutral(_):
+        return (jnp.full((b, g, r), NEG_INF, jnp.float32),
+                jnp.zeros((b, g, r), jnp.float32),
+                jnp.zeros((b, g, r, cfg.head_dim), jnp.float32))
+
+    m, l, o = jax.lax.cond(jnp.any(page_state["logical"] >= 0),
+                           _stats, _neutral, None)
     m, l, o = _psum_merge_stats(m, l, o, axis)
     o = o / jnp.maximum(l, 1e-30)[..., None]       # [B, G, R, d]
     y = jnp.einsum("bnd,ndh->bh",

@@ -689,7 +689,14 @@ def decode_step_spatial(params, cfg: ModelCfg, tokens, cache, page_state,
 
     ``page_state`` leaves are stacked per-shard: phys/logical
     [n_shards, B, W] (logical = GLOBAL page index), write_page/write_off
-    [n_shards, B] (SCRATCH off the owner shard).
+    [n_shards, B] (SCRATCH off the owner shard). W is the backend's
+    effective hot width — ``min(hot_pages_local, decode_hot_width)`` when
+    the scheduler bounds the decode gather (sphere rule over DLZS scores).
+    With bounded widths a shard can own ZERO hot pages for the whole
+    batch; its local attention is skipped and it feeds the merge the
+    neutral state (attention.apply_decode_spatial). An optional ``qmask``
+    [n_shards, B, W] marks hot slots served from the int8 cold tier
+    (kvcache.quant) — present only when ``SchedulerCfg.kv_quant`` is on.
     """
     from repro.shardlib import shard_map
 
@@ -725,9 +732,13 @@ def decode_step_paged(params, cfg: ModelCfg, tokens, cache, page_state):
 
     ``cache["layers"]`` leaves are page slabs [L, n_pages, page, n_kv, dh];
     ``page_state`` carries the per-slot block-table rows and write
-    coordinates (see attention.apply_decode_paged). Shapes depend only on
-    (max_batch, hot_pages, pool size) — never on sequence length — so one
-    compilation serves every request mix.
+    coordinates (see attention.apply_decode_paged); its W axis is the
+    backend's effective hot width (``min(hot_pages,
+    SchedulerCfg.decode_hot_width)`` under bounded sphere-rule selection)
+    and an optional ``qmask`` [B, W] marks slots read from the int8 cold
+    tier. Shapes depend only on (max_batch, effective hot width, pool
+    size) — never on sequence length — so one compilation serves every
+    request mix.
     """
     x = jnp.take(params["embed"], tokens, axis=0)
     x = shd(x, "batch", "seq", "embed")

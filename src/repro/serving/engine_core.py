@@ -77,6 +77,13 @@ class Backend(Protocol):
     batched: bool                # batched varlen prefill configured
     budget_tokens: Optional[int]  # flat-buffer width (one compile)
     batch_wp: Optional[int]      # past-arena width (per pool shard)
+    decode_sparsity: Optional[dict]
+    # Last decode step's sparsity telemetry: {"pages_total": resident
+    # pages a dense gather would touch, "pages_hot": pages the bounded
+    # DLZS hot-width selection kept, "shard_skips": shards that skipped
+    # their psum merge}. None before the first decode; the core turns it
+    # into engine_decode_pages_skipped_total /
+    # engine_decode_shard_merges_skipped_total counters.
 
     # -- admission ------------------------------------------------------
     def check_capacity(self, rid: int, total_tokens: int,
@@ -648,6 +655,19 @@ class EngineCore:
             self.backend.commit_tokens(nxt)
             nxt_host = np.asarray(nxt)
         self._compiled.add("decode")
+        sparsity = getattr(self.backend, "decode_sparsity", None)
+        if self.tel.enabled and sparsity:
+            skipped = sparsity["pages_total"] - sparsity["pages_hot"]
+            if skipped > 0:
+                self.tel.metrics.counter(
+                    "engine_decode_pages_skipped_total",
+                    "resident pages the bounded DLZS hot-width decode "
+                    "gather left cold").inc(skipped)
+            if sparsity.get("shard_skips"):
+                self.tel.metrics.counter(
+                    "engine_decode_shard_merges_skipped_total",
+                    "per-step shards holding zero hot pages whose psum "
+                    "contribution was skipped").inc(sparsity["shard_skips"])
         finished = done_early
         tel_on = self.tel.enabled
         now = time.perf_counter() if tel_on else 0.0

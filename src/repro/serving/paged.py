@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache import (SCRATCH, PagePool, PagedAllocator, PoolExhausted,
-                           bucketing, metrics)
+                           bucketing, metrics, quant)
 from repro.models import lm
 from repro.obs import NULL_TELEMETRY
 from repro.serving.engine_core import EngineCore
@@ -98,6 +98,19 @@ class PagedBackend:
         self.temperature = pcfg.temperature
         self.bucket_pow2 = pcfg.bucket_pow2
         self.keep_recent = max(1, pcfg.recent_pages)
+
+        # decode-time DLZS sparsity: bound the per-sequence gather at the
+        # sphere-rule hot width. Fixed at init so decode compiles ONCE
+        # with [max_batch, hot_width] page-state shapes.
+        self.sparse_decode = scfg.decode_hot_width is not None
+        self.hot_width = (min(pcfg.hot_pages, scfg.decode_hot_width)
+                          if self.sparse_decode else pcfg.hot_pages)
+        self.hot_radius = scfg.decode_hot_radius
+        if scfg.kv_quant not in (None, "int8"):
+            raise ValueError(
+                f"kv_quant={scfg.kv_quant!r}: choose None or 'int8'")
+        self.kv_quant = scfg.kv_quant == "int8"
+        self.decode_sparsity = None  # telemetry dict, set per decode step
 
         # Prefix sharing is exact only if a full page never splits a STAR
         # prefill q-tile (tile selection mixes rows within a tile).
@@ -155,8 +168,17 @@ class PagedBackend:
         def slab(leaf):
             shape = (leaf.shape[0], pcfg.n_pages) + leaf.shape[2:]
             return jnp.zeros(shape, leaf.dtype)
+        layers = jax.tree.map(slab, cache_one["layers"])
+        if self.kv_quant:
+            # int8 cold tier rides IN the cache tree: every attention
+            # update uses dict(cache, k=..., v=...), so the tier leaves
+            # pass through prefill/decode untouched and swap payloads
+            # carry them automatically
+            layers = quant.add_quant_slabs(layers)
+            self._quantize = jax.jit(quant.quantize_pages,
+                                     donate_argnums=(0,))
         self.cache = {
-            "layers": jax.tree.map(slab, cache_one["layers"]),
+            "layers": layers,
             "lengths": jnp.zeros((pcfg.max_batch,), jnp.int32),
         }
         self.last_token = jnp.zeros((pcfg.max_batch, 1), jnp.int32)
@@ -178,14 +200,22 @@ class PagedBackend:
         return lm.decode_step_paged(params, self.cfg, tokens, cache,
                                     page_state)
 
-    @staticmethod
-    def _scatter_fn(pool_layers, one_layers, phys):
-        """Write a prefilled sequence's rows into pool pages ``phys``."""
+    def _scatter_fn(self, pool_layers, one_layers, phys):
+        """Write a prefilled sequence's rows into pool pages ``phys``.
+
+        Two-tree map over (pool slab, per-sequence cache): the prefill
+        cache has no int8-tier leaves, so with the quantized tier on the
+        tier is split out first and merged back untouched — freshly
+        prefilled pages are fp until they leave the DLZS hot set."""
         def put(pool, one):
             rows = one[:, 0]                       # [L, T_pad, ...]
             pg = pool.shape[2]
             rows = rows.reshape(rows.shape[0], -1, pg, *rows.shape[2:])
             return pool.at[:, phys].set(rows.astype(pool.dtype))
+        if self.kv_quant:
+            base, tier = quant.split_quant(pool_layers)
+            return quant.merge_quant(jax.tree.map(put, base, one_layers),
+                                     tier)
         return jax.tree.map(put, pool_layers, one_layers)
 
     @staticmethod
@@ -364,7 +394,7 @@ class PagedBackend:
 
     def _page_state(self, slots, tables, lengths) -> dict:
         """Assemble block-table rows + write coordinates for this step."""
-        b, w = self.pcfg.max_batch, self.pcfg.hot_pages
+        b, w = self.pcfg.max_batch, self.hot_width
         page = self.pcfg.page_size
         phys = np.full((b, w), -1, np.int32)
         logical = np.full((b, w), -1, np.int32)
@@ -374,12 +404,19 @@ class PagedBackend:
         # scores are needed for hot-page selection once any table exceeds
         # W, and for eviction whenever the free list cannot cover EVERY
         # sequence growing a page this step (not just when it is empty —
-        # the last grower of the step must still evict lowest-score-first)
+        # the last grower of the step must still evict lowest-score-first).
+        # Bounded sphere selection and the quantized tier both put the
+        # DLZS prediction on the critical path EVERY step — the LAPA
+        # "prediction is cheap enough to always run" claim.
         growers = sum(1 for s in slots
                       if int(lengths[s]) // page == len(tables[s]))
-        need_scores = (any(len(tables[s]) > w for s in slots)
+        need_scores = (self.sparse_decode or self.kv_quant
+                       or any(len(tables[s]) > w for s in slots)
                        or self.pool.free_pages() < growers)
         scores = self._pull_scores() if need_scores else None
+        resident: set[int] = set()
+        hot_pids: set[int] = set()
+        pages_total = pages_hot = 0
         for slot in slots:
             table = tables[slot]
             length = int(lengths[slot])
@@ -395,15 +432,58 @@ class PagedBackend:
                 self.cache["layers"] = self._copy_page(
                     self.cache["layers"], jnp.asarray(src, jnp.int32),
                     jnp.asarray(dst, jnp.int32))
-            ph, lg = self.alloc.select_hot(table, w, scores)
+            if self.sparse_decode:
+                ph, lg = self.alloc.select_hot_sphere(
+                    table, w, scores, radius=self.hot_radius)
+            else:
+                ph, lg = self.alloc.select_hot(table, w, scores)
             phys[slot] = ph
             logical[slot] = lg
             write_page[slot] = table[idx]
             write_off[slot] = length % page
-        return {"phys": jnp.asarray(phys),
-                "logical": jnp.asarray(logical),
-                "write_page": jnp.asarray(write_page),
-                "write_off": jnp.asarray(write_off)}
+            n_res = sum(1 for pid in table if pid >= 0)
+            n_hot = int((lg >= 0).sum())
+            pages_total += n_res
+            pages_hot += n_hot
+            if self.kv_quant:
+                resident.update(pid for pid in table if pid >= 0)
+                hot_pids.update(int(p) for p in ph if p >= 0)
+        self.decode_sparsity = {"pages_total": pages_total,
+                                "pages_hot": pages_hot,
+                                "shard_skips": 0}
+        out = {"phys": jnp.asarray(phys),
+               "logical": jnp.asarray(logical),
+               "write_page": jnp.asarray(write_page),
+               "write_off": jnp.asarray(write_off)}
+        if self.kv_quant:
+            out["qmask"] = jnp.asarray(self._quantize_cold(resident,
+                                                           hot_pids, phys))
+        return out
+
+    def _quantize_cold(self, resident: set, hot_pids: set,
+                       phys: np.ndarray) -> np.ndarray:
+        """Quantize pages that left the DLZS hot set; build the step's
+        [B, W] qmask. Pages hot for ANY sequence stay fp — a page only
+        enters the int8 tier once no decode working set wants it exactly.
+        Already-quantized pages that turn hot again read their int8 copy
+        (the tier is a one-way door until the page is freed), which is
+        what ``qmask`` marks."""
+        tracker = self.pool.quant
+        to_q = sorted(pid for pid in resident - hot_pids
+                      if not tracker.is_quant(pid))
+        if to_q:
+            wq = bucketing.bucket_count(len(to_q),
+                                        pow2=self.pcfg.bucket_pow2)
+            qphys = np.full((wq,), SCRATCH, np.int32)
+            qphys[:len(to_q)] = to_q
+            self.cache["layers"] = self._quantize(self.cache["layers"],
+                                                  jnp.asarray(qphys))
+            for pid in to_q:
+                tracker.mark(pid)
+        qmask = np.zeros(phys.shape, bool)
+        for i in range(phys.shape[0]):
+            qmask[i] = [tracker.is_quant(int(p)) for p in phys[i]]
+        return qmask
 
     def decode_step(self, slots, tables, lengths):
         ps = self._page_state(slots, tables, lengths)  # may raise NeedPages
@@ -425,7 +505,12 @@ class PagedBackend:
 
     def hot_logical(self, table) -> set[int]:
         scores = self._pull_scores()
-        _, hot = self.alloc.select_hot(table, self.pcfg.hot_pages, scores)
+        if self.sparse_decode:
+            _, hot = self.alloc.select_hot_sphere(
+                table, self.hot_width, scores, radius=self.hot_radius)
+        else:
+            _, hot = self.alloc.select_hot(table, self.pcfg.hot_pages,
+                                           scores)
         return {int(j) for j in hot if j >= 0}
 
     def gather_park(self, table, js):
@@ -466,20 +551,57 @@ class PagedBackend:
         self.cache["layers"] = self._page_in(
             self.cache["layers"], jax.tree.map(sub_rows, rows),
             jnp.asarray(phys))
+        if self.kv_quant:
+            self._restore_quant_flags(rows, uploads)
+
+    def _restore_quant_flags(self, rows, uploads) -> None:
+        """Swap-in wrote the payload's int8-tier rows back with the fp
+        rows (same single-tree gather carried both out); re-derive which
+        restored pages were quantized from the payload's per-page scales
+        — a written scale is strictly positive, an fp-only page carries
+        the zero-initialized slab row."""
+        scale = quant.find_scale(rows)
+        if scale is None:
+            return
+        for pos, _, pid in uploads:
+            if float(np.max(scale[:, pos])) > 0.0:
+                self.pool.quant.mark(pid)
 
     # -- observability -------------------------------------------------------------
 
     def stats(self) -> dict:
         pool = self.pool.stats()
         per_page = metrics.bytes_per_page(self.cache["layers"])
-        return {
+        out = {
             "pool": pool,
             "bytes_per_page": per_page,
             "working_set_bytes": pool.peak_live * per_page,
             "slab_bytes": metrics.tree_bytes(self.cache["layers"]),
             "decode_compiles": self._decode._cache_size(),
             "prefill_batch_compiles": self._prefill_chunk_batch._cache_size(),
+            "hot_width": self.hot_width,
         }
+        if self.kv_quant:
+            base, tier = quant.split_quant(self.cache["layers"])
+            fp_pp = metrics.bytes_per_page(base)
+            q_pp = metrics.bytes_per_page(tier)
+            live = [pid for pid in range(1, self.pool.n_pages)
+                    if self.pool.ref(pid) > 0]
+            q_live = sum(1 for pid in live
+                         if self.pool.quant.is_quant(pid))
+            frac = q_live / max(len(live), 1)
+            blended = max((1 - frac) * fp_pp + frac * q_pp, 1.0)
+            out["kv_quant"] = {
+                "pages_quantized_live": q_live,
+                "quantize_events": self.pool.quant.stats().quantize_events,
+                "bytes_per_page_fp": fp_pp,
+                "bytes_per_page_int8": q_pp,
+                # pages the same byte budget would hold if cold pages
+                # were stored int8-only, at the CURRENT live hot/cold mix
+                "effective_capacity_pages": int(pool.capacity * fp_pp
+                                                / blended),
+            }
+        return out
 
 
 class PagedServingEngine(EngineCore):

@@ -116,6 +116,26 @@ class SchedulerCfg:
     #                                  remaining length (anti-starvation
     #                                  aging for long prompts under a
     #                                  sustained short-prompt stream)
+    decode_hot_width: Optional[int] = None
+    # Bounded decode sparsity: cap the per-sequence decode gather at this
+    # many pages, selected by the SADS sphere rule over per-page DLZS
+    # scores (kvcache.allocator.select_hot_sphere). None (default) keeps
+    # the engine's full ``hot_pages`` recency+top-k policy — bit-identical
+    # to the pre-sparsity decode. The effective width is
+    # ``min(hot_pages, decode_hot_width)`` (per shard on the spatial
+    # engine), fixed at engine construction so decode still compiles once.
+    decode_hot_radius: Optional[float] = 4.0
+    # Sphere radius in DLZS score units (max |int8 LZ code| per page): a
+    # cold page is a hot-set candidate only when its score is within this
+    # distance of the best page's. None disables the admission test
+    # (pure bounded top-k). Only read when decode_hot_width is set.
+    kv_quant: Optional[str] = None   # int8 cold KV tier: pages leaving
+    #                                  the DLZS hot set quantize to int8
+    #                                  with per-page scales
+    #                                  (kvcache.quant); decode dequantizes
+    #                                  on gather. None = fp-only slabs
+    #                                  (bit-identical dense default);
+    #                                  "int8" enables the tier.
 
 
 @dataclasses.dataclass

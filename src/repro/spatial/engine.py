@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kvcache import SCRATCH, bucketing, metrics
+from repro.kvcache import SCRATCH, bucketing, metrics, quant
 from repro.models import lm
 from repro.obs import NULL_TELEMETRY
 from repro.serving.engine_core import EngineCore
@@ -115,6 +115,22 @@ class SpatialBackend:
         # newest ~r*n_shards global pages
         self.keep_recent = max(1, pcfg.recent_pages) * pcfg.n_shards
 
+        # decode-time DLZS sparsity + int8 cold tier (SchedulerCfg knobs;
+        # see serving.paged for the single-pool shape of the same wiring).
+        # The width cap applies PER SHARD: each shard's slice keeps at
+        # most min(hot_pages_local, decode_hot_width) sphere-rule pages,
+        # and a shard whose every slice comes back empty skips its psum
+        # contribution (attention.apply_decode_spatial).
+        self.sparse_decode = scfg.decode_hot_width is not None
+        self.hot_width = (min(pcfg.hot_pages_local, scfg.decode_hot_width)
+                          if self.sparse_decode else pcfg.hot_pages_local)
+        self.hot_radius = scfg.decode_hot_radius
+        if scfg.kv_quant not in (None, "int8"):
+            raise ValueError(
+                f"kv_quant={scfg.kv_quant!r}: choose None or 'int8'")
+        self.kv_quant = scfg.kv_quant == "int8"
+        self.decode_sparsity = None  # telemetry dict, set per decode step
+
         # batched varlen chunk prefill (one shard_map dispatch per tick):
         # fixed flat width + fixed per-shard past window => one compile
         max_tokens = resolve_prefill_tokens(scfg, pcfg.page_size)
@@ -152,8 +168,17 @@ class SpatialBackend:
             shape = (self.topo.n_shards, leaf.shape[0],
                      pcfg.n_pages_local) + leaf.shape[2:]
             return jax.device_put(jnp.zeros(shape, leaf.dtype), spec)
+        layers = jax.tree.map(slab, cache_one["layers"])
+        if self.kv_quant:
+            # int8 tier slabs ride in the same sharded tree ([S, L, P,
+            # ...] / scales [S, L, P]); re-place so every leaf carries
+            # the mesh sharding the decode dispatch expects
+            layers = jax.tree.map(lambda l: jax.device_put(l, spec),
+                                  quant.add_quant_slabs(layers))
+            self._quantize = jax.jit(quant.quantize_pages_sharded,
+                                     donate_argnums=(0,))
         self.cache = {
-            "layers": jax.tree.map(slab, cache_one["layers"]),
+            "layers": layers,
             "lengths": jnp.zeros((pcfg.max_batch,), jnp.int32),
         }
         # committed-replicated so the decode signature never flips between
@@ -375,7 +400,7 @@ class SpatialBackend:
 
     def _page_state(self, slots, tables, lengths) -> dict:
         n = self.topo.n_shards
-        b, w = self.pcfg.max_batch, self.pcfg.hot_pages_local
+        b, w = self.pcfg.max_batch, self.hot_width
         page = self.pcfg.page_size
         phys = np.full((n, b, w), -1, np.int32)
         logical = np.full((n, b, w), -1, np.int32)
@@ -388,11 +413,15 @@ class SpatialBackend:
         for slot in growers:
             grow_by_shard[self.topo.owner(len(tables[slot]))] += 1
         need_scores = (
-            any(self.topo.max_local_count(len(tables[s])) > w
-                for s in slots)
+            self.sparse_decode or self.kv_quant
+            or any(self.topo.max_local_count(len(tables[s])) > w
+                   for s in slots)
             or any(self.pools.free_pages(s) < grow_by_shard[s]
                    for s in range(n)))
         scores = self._pull_scores() if need_scores else None
+        resident = [set() for _ in range(n)]     # local pids per shard
+        hot_pids = [set() for _ in range(n)]
+        pages_total = pages_hot = 0
         for slot in slots:
             table = tables[slot]
             length = int(lengths[slot])
@@ -409,16 +438,66 @@ class SpatialBackend:
                     self.cache["layers"], jnp.asarray(src, jnp.int32),
                     jnp.asarray(dst, jnp.int32), shard)
             for s in range(n):
-                ph, lg = self.pools.select_hot(table, s, w, scores)
+                if self.sparse_decode:
+                    ph, lg = self.pools.select_hot_sphere(
+                        table, s, w, scores, radius=self.hot_radius)
+                else:
+                    ph, lg = self.pools.select_hot(table, s, w, scores)
                 phys[s, slot] = ph
                 logical[s, slot] = lg
+                pages_hot += int((lg >= 0).sum())
+                if self.kv_quant:
+                    locals_, _ = self.pools.local_pages(table, s)
+                    resident[s].update(p for p in locals_ if p >= 0)
+                    hot_pids[s].update(int(p) for p in ph if p >= 0)
+            pages_total += sum(1 for pid in table if pid >= 0)
             owner = self.topo.owner(idx)
             write_page[owner, slot] = table[idx]
             write_off[owner, slot] = length % page
-        return {"phys": jnp.asarray(phys),
-                "logical": jnp.asarray(logical),
-                "write_page": jnp.asarray(write_page),
-                "write_off": jnp.asarray(write_off)}
+        # DLZS-guided communication sparsity: shards whose hot sets are
+        # empty for the ENTIRE batch skip their local attention + psum
+        # contribution this step (the lax.cond in apply_decode_spatial)
+        shard_skips = (sum(1 for s in range(n)
+                           if not (logical[s] >= 0).any())
+                       if slots else 0)
+        self.decode_sparsity = {"pages_total": pages_total,
+                                "pages_hot": pages_hot,
+                                "shard_skips": shard_skips}
+        out = {"phys": jnp.asarray(phys),
+               "logical": jnp.asarray(logical),
+               "write_page": jnp.asarray(write_page),
+               "write_off": jnp.asarray(write_off)}
+        if self.kv_quant:
+            out["qmask"] = jnp.asarray(
+                self._quantize_cold(resident, hot_pids, phys))
+        return out
+
+    def _quantize_cold(self, resident: list, hot_pids: list,
+                       phys: np.ndarray) -> np.ndarray:
+        """Per-shard cold-page quantization + the step's [S, B, W] qmask
+        (single-pool semantics per shard — see serving.paged)."""
+        n = self.topo.n_shards
+        to_q = [sorted(pid for pid in resident[s] - hot_pids[s]
+                       if not self.pools.pools[s].quant.is_quant(pid))
+                for s in range(n)]
+        if any(to_q):
+            wq = bucketing.bucket_count(max(len(t) for t in to_q),
+                                        pow2=self.pcfg.bucket_pow2)
+            qphys = np.full((n, wq), SCRATCH, np.int32)
+            for s in range(n):
+                qphys[s, :len(to_q[s])] = to_q[s]
+            self.cache["layers"] = self._quantize(self.cache["layers"],
+                                                  jnp.asarray(qphys))
+            for s in range(n):
+                for pid in to_q[s]:
+                    self.pools.pools[s].quant.mark(pid)
+        qmask = np.zeros(phys.shape, bool)
+        for s in range(n):
+            tracker = self.pools.pools[s].quant
+            for i in range(phys.shape[1]):
+                qmask[s, i] = [tracker.is_quant(int(p))
+                               for p in phys[s, i]]
+        return qmask
 
     def decode_step(self, slots, tables, lengths):
         ps = self._page_state(slots, tables, lengths)  # may raise NeedPages
@@ -443,8 +522,13 @@ class SpatialBackend:
         scores = self._pull_scores()
         hot: set[int] = set()
         for s in range(self.topo.n_shards):
-            _, lg = self.pools.select_hot(
-                table, s, self.pcfg.hot_pages_local, scores)
+            if self.sparse_decode:
+                _, lg = self.pools.select_hot_sphere(
+                    table, s, self.hot_width, scores,
+                    radius=self.hot_radius)
+            else:
+                _, lg = self.pools.select_hot(
+                    table, s, self.pcfg.hot_pages_local, scores)
             hot.update(int(j) for j in lg if j >= 0)
         return hot
 
@@ -517,6 +601,12 @@ class SpatialBackend:
         self.cache["layers"] = self._page_in(
             self.cache["layers"], jax.tree.map(sub_rows, rows),
             jnp.asarray(phys))
+        if self.kv_quant:
+            scale = quant.find_scale(rows)      # flat payload [L, n_park]
+            if scale is not None:
+                for pos, j, pid in uploads:
+                    if float(np.max(scale[:, pos])) > 0.0:
+                        self.pools.pools[self.topo.owner(j)].quant.mark(pid)
 
     # -- observability -----------------------------------------------------------
 
@@ -524,7 +614,7 @@ class SpatialBackend:
         pools = self.pools.stats()
         per_page = metrics.bytes_per_page(
             jax.tree.map(lambda leaf: leaf[0], self.cache["layers"]))
-        return {
+        out = {
             "pools": pools,
             "n_shards": self.topo.n_shards,
             "bytes_per_page": per_page,
@@ -532,7 +622,33 @@ class SpatialBackend:
             "slab_bytes": metrics.tree_bytes(self.cache["layers"]),
             "decode_compiles": self._decode._cache_size(),
             "prefill_batch_compiles": self._prefill_chunk_batch._cache_size(),
+            "hot_width": self.hot_width,
         }
+        if self.kv_quant:
+            base, tier = quant.split_quant(
+                jax.tree.map(lambda leaf: leaf[0], self.cache["layers"]))
+            fp_pp = metrics.bytes_per_page(base)
+            q_pp = metrics.bytes_per_page(tier)
+            q_live = live = 0
+            for s in range(self.topo.n_shards):
+                pool = self.pools.pools[s]
+                for pid in range(1, pool.n_pages):
+                    if pool.ref(pid) > 0:
+                        live += 1
+                        q_live += int(pool.quant.is_quant(pid))
+            frac = q_live / max(live, 1)
+            blended = max((1 - frac) * fp_pp + frac * q_pp, 1.0)
+            out["kv_quant"] = {
+                "pages_quantized_live": q_live,
+                "quantize_events": sum(
+                    p.quant.stats().quantize_events
+                    for p in self.pools.pools),
+                "bytes_per_page_fp": fp_pp,
+                "bytes_per_page_int8": q_pp,
+                "effective_capacity_pages": int(
+                    pools["capacity"] * fp_pp / blended),
+            }
+        return out
 
 
 class SpatialServingEngine(EngineCore):

@@ -182,6 +182,25 @@ class ShardedPagePools:
         logical[ok] = np.asarray(globals_, np.int32)[local_idx[ok]]
         return phys, logical
 
+    def select_hot_sphere(self, table: Sequence[int], shard: int,
+                          width: int,
+                          scores: Optional[np.ndarray] = None, *,
+                          radius: Optional[float] = None
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Bounded sphere-rule hot selection over ``shard``'s slice
+        (see ``kvcache.allocator.select_hot_sphere``). Returns
+        (shard-local phys, GLOBAL logical); a shard whose slice holds no
+        sphere-qualified pages comes back all -1, which is what lets the
+        decode merge skip its psum contribution entirely."""
+        phys_l, globals_ = self.local_pages(table, shard)
+        phys, local_idx = self.allocs[shard].select_hot_sphere(
+            phys_l, width, scores[shard] if scores is not None else None,
+            radius=radius)
+        logical = np.full_like(local_idx, -1)
+        ok = local_idx >= 0
+        logical[ok] = np.asarray(globals_, np.int32)[local_idx[ok]]
+        return phys, logical
+
     # -- preemption accounting ------------------------------------------------
 
     def held_pages(self, table: Sequence[int],

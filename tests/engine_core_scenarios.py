@@ -12,6 +12,10 @@ front door, that every pool-backed serving backend must pass:
 * lazy cold-page shedding: under pressure with ``lazy_swap`` victims
   park DLZS-cold ref-1 pages and KEEP decoding — sheds happen, full
   preemptions do not, every request completes;
+* decode-time DLZS sparsity + int8 cold tier
+  (``decode_hot_width`` / ``kv_quant``): swap round-trips restore
+  quantized pages + tracker flags (token parity under preemption), and
+  the tier coexists with lazy shedding;
 * max_tokens=1 and submit-time capacity rejection semantics.
 
 Runners supply a ``make_llm(max_batch, pages, hot, scfg, ...)`` factory
@@ -36,14 +40,17 @@ BACKEND_PARAMS = {
     "paged": {
         "pressure_pages": 7,
         "shed": dict(pages=9, hot=3, prompt_len=40, gen=48),
+        "sparse_width": 2,
     },
     "spatial2": {
         "pressure_pages": 5,
         "shed": dict(pages=6, hot=2, prompt_len=80, gen=48),
+        "sparse_width": 2,
     },
     "spatial4": {
         "pressure_pages": 3,
         "shed": dict(pages=6, hot=2, prompt_len=160, gen=64),
+        "sparse_width": 2,
     },
 }
 
@@ -183,6 +190,67 @@ def scenario_shed(make_llm, cfg, params, bp) -> str:
     return f"shed ({st['sched'].sheds} sheds, 0 preemptions)"
 
 
+def scenario_decode_sparse_pressure(make_llm, cfg, params, bp) -> str:
+    """Decode-time DLZS sparsity + int8 cold tier under pool pressure.
+
+    Part 1 — preempt/swap round-trip: with ``decode_hot_width`` and
+    ``kv_quant="int8"`` on, a pressured run (preemptions, swap-out /
+    swap-in) must keep token parity with an unpressured run of the SAME
+    sparse config. The swap payload carries the int8 tier rows and
+    ``upload_park`` re-derives the QuantTracker flags from the parked
+    scales — losing either would change which pages re-quantize and what
+    the bounded gather reads, breaking parity.
+
+    Part 2 — lazy shed interplay: long sequences, tiny pool,
+    ``lazy_swap`` sheds. Cold pages quantize (events observed), shed
+    victims park without full preemption, every request still finishes,
+    and no payload survives the run.
+    """
+    w = bp["sparse_width"]
+    scfg = lambda: SchedulerCfg(chunk_pages=1, prefill_tokens=64,
+                                swap=True, decode_hot_width=w,
+                                kv_quant="int8")
+    prompts = _prompts(cfg, PRESSURE_LENGTHS)
+    big = make_llm(max_batch=4, pages=64, hot=4, scfg=scfg())
+    want = _run_llm(big, prompts, max_tokens=20)
+    tiny = make_llm(max_batch=4, pages=bp["pressure_pages"], hot=4,
+                    scfg=scfg())
+    got = _run_llm(tiny, prompts, max_tokens=20)
+    st = tiny.stats()
+    assert got == want, f"sparse+quant swap parity broke:\n{got}\n{want}"
+    assert st["sched"].preemptions > 0, "pool pressure never hit"
+    assert st["swap"].swap_ins == st["swap"].swap_outs
+    assert st["swap"].entries == 0, "payload left behind"
+    assert st["decode_compiles"] == 1, st["decode_compiles"]
+    assert st["hot_width"] == w, st["hot_width"]
+
+    sp = bp["shed"]
+    # recent=1: the sphere selector pins every shard's sink page hot on
+    # top of the keep_recent window (recent * n_shards global pages), so
+    # the stock shed sizing leaves nothing sheddable on sharded
+    # backends; a 1-page local window restores shed candidates.
+    llm = make_llm(max_batch=2, pages=sp["pages"], hot=sp["hot"],
+                   recent=1,
+                   scfg=SchedulerCfg(chunk_pages=1, swap=True,
+                                     lazy_swap=True, decode_hot_width=w,
+                                     kv_quant="int8"))
+    long_prompts = [(np.arange(sp["prompt_len"], dtype=np.int32) + i)
+                    % cfg.vocab for i in range(2)]
+    done = _run_llm(llm, long_prompts, max_tokens=sp["gen"])
+    st2 = llm.stats()
+    assert all(len(v) == sp["gen"] for v in done.values()), done
+    assert st2["sched"].sheds > 0, "nothing was shed"
+    assert st2["kv_quant"]["quantize_events"] > 0, \
+        "cold pages never quantized"
+    assert st2["kv_quant"]["effective_capacity_pages"] >= \
+        st2["kv_quant"]["pages_quantized_live"]  # sane accounting
+    assert st2["swap"].entries == 0
+    return (f"decode-sparse-pressure "
+            f"({st['sched'].preemptions} preemptions, "
+            f"{st2['sched'].sheds} sheds, "
+            f"{st2['kv_quant']['quantize_events']} quantize events)")
+
+
 def scenario_admission(make_llm, cfg, params, bp) -> str:
     """max_tokens=1 finishes at prefill without a decode step (pages
     released); an impossible request is rejected at submit; max_len <=
@@ -239,6 +307,7 @@ SCENARIOS = (
     scenario_pressure_swap,
     scenario_recompute,
     scenario_shed,
+    scenario_decode_sparse_pressure,
     scenario_admission,
     scenario_streaming,
 )
