@@ -42,6 +42,22 @@ def page_scores(cache_layers) -> jax.Array:
     return jnp.max(jnp.stack(per), axis=0)
 
 
+def page_scores_per_layer(cache_layers) -> jax.Array:
+    """Per-(layer, page) DLZS score: max |int8 LZ code| over the page's
+    rows/heads/dims, one row per stacked layer — [n_layers, n_pages].
+    ``page_scores`` is the max of this over axis 0; the audit
+    (obs.audit) histograms the full matrix to show how prediction
+    confidence varies across the stack."""
+    lz = _leaves_by_key(cache_layers, "k_lz")
+    if not lz:
+        lz = [dlzs.lz_pack(k) for k in _leaves_by_key(cache_layers, "k")]
+    if not lz:
+        raise ValueError("no k/k_lz page pools in cache")
+    per = [jnp.abs(leaf.astype(jnp.int32)).max(axis=(2, 3, 4))
+           for leaf in lz]
+    return jnp.concatenate(per, axis=0)
+
+
 def tree_bytes(tree) -> int:
     """Total bytes of every array leaf (device-side cache footprint)."""
     return sum(leaf.size * leaf.dtype.itemsize
@@ -56,3 +72,27 @@ def bytes_per_page(cache_layers) -> int:
         return 0
     n_pages = leaves[0].shape[1]
     return tree_bytes(cache_layers) // n_pages
+
+
+def gather_bytes_per_page(cache_layers) -> int:
+    """Bytes the decode gather reads per hot page: the fp K and V slab rows
+    only — LZ codes and the int8 mirror tier are never gathered by the
+    dense path, so this (not ``bytes_per_page``) prices a *skipped* page's
+    avoided memory traffic (obs.accounting bytes-not-gathered)."""
+    kv = _leaves_by_key(cache_layers, "k") + _leaves_by_key(cache_layers, "v")
+    if not kv:
+        return 0
+    n_pages = kv[0].shape[1]
+    return sum(l.size * l.dtype.itemsize for l in kv) // n_pages
+
+
+def quant_bytes_per_page(cache_layers) -> int:
+    """Bytes one page occupies in the int8 mirror tier (codes + scales);
+    0 when the tier is absent. Prices a quantize transition's writes in
+    the accounting traffic counters."""
+    qs = [leaf for key in ("kq", "vq", "k_scale", "v_scale")
+          for leaf in _leaves_by_key(cache_layers, key)]
+    if not qs:
+        return 0
+    n_pages = qs[0].shape[1]
+    return sum(l.size * l.dtype.itemsize for l in qs) // n_pages

@@ -166,6 +166,54 @@ def paged_gather_decode_stats(q: jax.Array, k_pages: jax.Array,
     return m, l, o
 
 
+def page_attention_mass(q: jax.Array, k_pages: jax.Array, phys: jax.Array,
+                        logical: jax.Array, kv_len: jax.Array, *, n_kv: int,
+                        scale: Optional[float] = None,
+                        axis: Optional[str] = None) -> jax.Array:
+    """Exact per-page attention mass of one decode query — the audit probe.
+
+    Same gather contract as ``paged_gather_decode`` (q [B,nh,d], pool slab
+    [P,page,nkv,d], phys/logical [B,W], kv_len [B]) but instead of the
+    attention output it returns [B, W] f32: the softmax probability mass
+    each gathered page receives, averaged over heads. Feed it the FULL
+    resident page set and the masses of one batch row sum to 1, so summing
+    over any candidate hot subset yields that subset's attention-mass
+    recall (obs.audit) — the metric LAPA/SOFA score predictors by.
+
+    ``axis`` switches on the sequence-sharded form: call inside shard_map
+    with each shard's local pages and the softmax normalizes GLOBALLY via
+    pmax/psum (DRAttention's merge), so the per-shard [B, W_local] masses
+    still sum to 1 across the whole mesh. Shards with no resident pages
+    return zeros. V is never gathered — the probe needs scores only.
+    """
+    b, nh, d = q.shape
+    page = k_pages.shape[1]
+    w = phys.shape[1]
+    scale = scale or (1.0 / math.sqrt(d))
+    safe = jnp.maximum(phys, 0)
+    kg = jnp.take(k_pages, safe, axis=0).reshape(b, w * page,
+                                                 *k_pages.shape[2:])
+    row_pos = (logical[:, :, None] * page
+               + jnp.arange(page)[None, None, :]).reshape(b, w * page)
+    valid = (logical[:, :, None] >= 0).repeat(page, axis=2)
+    valid = valid.reshape(b, w * page) & (row_pos < kv_len[:, None])
+    qg = _group(q, n_kv)                           # [B, G, R, d]
+    kc = jnp.moveaxis(kg, 1, 2)                    # [B, G, S, d]
+    sc = jnp.einsum("bgrd,bgsd->bgrs", qg, kc).astype(jnp.float32) * scale
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = sc.max(axis=-1)                            # [B, G, R]
+    if axis is not None:
+        m = jax.lax.pmax(m, axis)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = p.sum(axis=-1)
+    if axis is not None:
+        l = jax.lax.psum(l, axis)
+    probs = p / jnp.maximum(l, 1e-30)[..., None]   # [B, G, R, S]
+    mass = probs.mean(axis=(1, 2))                 # head-averaged [B, S]
+    return mass.reshape(b, w, page).sum(axis=-1)   # [B, W]
+
+
 def paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                  phys: jax.Array, logical: jax.Array, kv_len: jax.Array, *,
                  n_kv: int, scale: Optional[float] = None,

@@ -278,6 +278,12 @@ class SwapArea:
     def __contains__(self, rid: int) -> bool:
         return rid in self._entries
 
+    def items(self) -> list[tuple[int, object]]:
+        """(rid, payload) pairs for every parked entry — the accounting
+        walk; payloads stay owned by the area."""
+        return [(rid, payload) for rid, (payload, _) in
+                self._entries.items()]
+
     def __len__(self) -> int:
         return len(self._entries)
 

@@ -522,6 +522,14 @@ def apply_decode_paged(params, cfg: AttentionCfg, x, cache, lengths,
                  "k_scale": new_cache["k_scale"],
                  "v_scale": new_cache["v_scale"],
                  "qmask": page_state["qmask"]}
+    if "audit" in page_state:
+        # Exact-reference probe (obs.audit): per-page softmax mass of this
+        # query over the pages in page_state, read from the fp slab (rows
+        # stay bit-exact there regardless of cold-tier state). Rides the
+        # cache tree out of the layer scan.
+        new_cache["audit_mass"] = kv_paged.page_attention_mass(
+            q[:, 0], new_cache["k"], page_state["phys"],
+            page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale)
     o = kv_paged.paged_decode(
         q[:, 0], new_cache["k"], new_cache["v"], page_state["phys"],
         page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale,
@@ -595,6 +603,16 @@ def apply_decode_spatial(params, cfg: AttentionCfg, x, cache, lengths,
                  "k_scale": new_cache["k_scale"],
                  "v_scale": new_cache["v_scale"],
                  "qmask": page_state["qmask"]}
+
+    if "audit" in page_state:
+        # Exact-reference probe, sequence-sharded form: the pmax/psum
+        # inside page_attention_mass normalize globally, so each shard's
+        # [B, W_local] masses sum to 1 across the mesh. Unconditional —
+        # collectives cannot sit under the lax.cond below.
+        new_cache["audit_mass"] = kv_paged.page_attention_mass(
+            q[:, 0], new_cache["k"], page_state["phys"],
+            page_state["logical"], lengths + 1, n_kv=cfg.n_kv, scale=scale,
+            axis=axis)
 
     # DLZS-guided communication sparsity: a shard whose hot set is empty
     # for EVERY sequence this step (all logical == -1 — bounded hot-width

@@ -727,6 +727,45 @@ def decode_step_spatial(params, cfg: ModelCfg, tokens, cache, page_state,
                     "lengths": cache["lengths"] + 1}
 
 
+def audit_decode_spatial(params, cfg: ModelCfg, tokens, cache, page_state,
+                         *, mesh, axis: str = "shards"):
+    """Exact-attention audit probe over sequence-sharded pools (obs.audit).
+
+    Same dispatch shape as ``decode_step_spatial`` but ``page_state``
+    carries an ``audit`` flag (so every attention layer emits its per-page
+    softmax masses, globally normalized via pmax/psum) and only the stacked
+    masses come back: [n_shards, n_blocks, n_repeat, B, W_local] f32.
+    The cache is NOT returned and the caller must not donate it — the
+    probe is read-only from the engine's point of view.
+    """
+    from repro.shardlib import shard_map
+
+    shard_spec, rep_spec = _spatial_specs(mesh, axis)
+
+    def local_fn(p, toks, layers, lengths, ps):
+        layers = jax.tree.map(lambda leaf: leaf[0], layers)
+        ps = jax.tree.map(lambda leaf: leaf[0], ps)
+        x = jnp.take(p["embed"], toks, axis=0)
+        _, new_layers, _ = _run_stack(
+            p["blocks"], cfg, cfg.pattern, x, lengths[:, None],
+            mode="decode", causal=cfg.causal, caches=layers,
+            lengths=lengths, page_state=ps, spatial_axis=axis)
+        masses = [leaf for path, leaf in
+                  jax.tree_util.tree_flatten_with_path(new_layers)[0]
+                  if any(isinstance(k, jax.tree_util.DictKey)
+                         and k.key == "audit_mass" for k in path)]
+        return jnp.stack(masses)[None]     # [1, blocks, R, B, W_local]
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: rep_spec, params), rep_spec,
+                  jax.tree.map(lambda _: shard_spec, cache["layers"]),
+                  rep_spec,
+                  jax.tree.map(lambda _: shard_spec, page_state)),
+        out_specs=shard_spec)
+    return fn(params, tokens, cache["layers"], cache["lengths"], page_state)
+
+
 def decode_step_paged(params, cfg: ModelCfg, tokens, cache, page_state):
     """One decode step against paged KV pools (attention-only patterns).
 

@@ -24,8 +24,13 @@ from __future__ import annotations
 import time
 from typing import Optional
 
+from repro.obs.accounting import (WatchdogReport, conservation_error,
+                                  fold_snapshot, fold_traffic,
+                                  reconcile_refs)
+from repro.obs.audit import AuditCfg, DlzsAuditor, score_histogram
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                DEFAULT_BUCKETS)
+from repro.obs.recorder import NULL_RECORDER, FlightRecorder
 from repro.obs.timeline import RequestTimeline, aggregate, percentile
 from repro.obs.trace import (NULL_TRACER, NullTracer, Tracer, format_table,
                              load_trace, phase_summary)
@@ -37,11 +42,13 @@ class Telemetry:
 
     enabled = True
 
-    def __init__(self, meta: Optional[dict] = None):
+    def __init__(self, meta: Optional[dict] = None,
+                 recorder_capacity: int = 1024):
         self.meta = dict(meta or {})
         self.tracer = Tracer(self.meta)
         self.metrics = MetricsRegistry()
         self.timelines: dict[int, RequestTimeline] = {}
+        self.recorder = FlightRecorder(capacity=recorder_capacity)
 
     def timeline(self, rid: int, sla: Optional[str] = None,
                  submit_t: Optional[float] = None) -> RequestTimeline:
@@ -76,6 +83,7 @@ class NullTelemetry(Telemetry):
     def __init__(self):
         super().__init__()
         self.tracer = NULL_TRACER
+        self.recorder = NULL_RECORDER   # capacity-0 ring: drops everything
 
     def timeline(self, rid: int, sla: Optional[str] = None,
                  submit_t: Optional[float] = None) -> RequestTimeline:
@@ -91,5 +99,9 @@ __all__ = [
     "RequestTimeline", "aggregate", "percentile",
     "Tracer", "NullTracer", "NULL_TRACER", "load_trace", "phase_summary",
     "format_table",
+    "FlightRecorder", "NULL_RECORDER",
+    "AuditCfg", "DlzsAuditor", "score_histogram",
+    "WatchdogReport", "conservation_error", "fold_snapshot",
+    "fold_traffic", "reconcile_refs",
     "Telemetry", "NullTelemetry", "NULL_TELEMETRY",
 ]

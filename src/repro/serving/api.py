@@ -140,7 +140,8 @@ class LLM:
     @classmethod
     def from_config(cls, model_cfg, *, backend: str = "paged",
                     params=None, shards: int = 2, engine_cfg=None,
-                    sched_cfg=None, rng=None, telemetry=None) -> "LLM":
+                    sched_cfg=None, rng=None, telemetry=None,
+                    audit_cfg=None) -> "LLM":
         """Build params (if not given), the backend engine, and the LLM.
 
         ``backend`` picks the runtime: ``"dense"`` (slot baseline,
@@ -153,6 +154,10 @@ class LLM:
         (default: batched prefill with the ``prefill_tokens="auto"``
         budget controller). ``rng`` seeds both param init and sampling.
         ``telemetry`` (an ``obs.Telemetry``) enables tracing + metrics.
+        ``audit_cfg`` (an ``obs.AuditCfg``) tunes the sampled DLZS
+        prediction audit of the core engines — it only ever runs with
+        telemetry enabled (``AuditCfg(every_ticks=0)`` disables it even
+        then).
         """
         import jax
 
@@ -183,6 +188,8 @@ class LLM:
                 model_cfg, params,
                 engine_cfg or SpatialEngineCfg(n_shards=shards),
                 scfg, rng=rng)
+        if audit_cfg is not None:
+            eng.auditor = obs.DlzsAuditor(audit_cfg)
         return cls(eng, telemetry=telemetry)
 
     # -- submission ----------------------------------------------------------
@@ -274,6 +281,71 @@ class LLM:
 
     def stats(self) -> dict:
         return self.engine.stats() if hasattr(self.engine, "stats") else {}
+
+    def debug_bundle(self, out_dir: Optional[str] = None) -> str:
+        """Dump the serving post-mortem bundle to ``out_dir`` (default
+        ``./debug_bundle``): the flight-recorder ring (recorder.jsonl),
+        the tick-phase trace (trace.json, Perfetto/chrome format), the
+        metrics registry (metrics.json + metrics.prom), the latest page-
+        accounting census (accounting.json), retained audit reports
+        (audit.json), timeline aggregates (timelines.json) and the
+        engine/scheduler config (config.json). Returns the directory.
+        Works with telemetry disabled too — the bundle just carries
+        empty rings and registries."""
+        import dataclasses
+        import json
+        import os
+
+        out = out_dir or "debug_bundle"
+        os.makedirs(out, exist_ok=True)
+
+        def default(o):
+            if dataclasses.is_dataclass(o) and not isinstance(o, type):
+                return dataclasses.asdict(o)
+            if isinstance(o, np.integer):
+                return int(o)
+            if isinstance(o, np.floating):
+                return float(o)
+            if isinstance(o, np.ndarray):
+                return o.tolist()
+            if isinstance(o, (set, frozenset)):
+                return sorted(o)
+            return repr(o)
+
+        def dump(name, obj):
+            with open(os.path.join(out, name), "w") as f:
+                json.dump(obj, f, indent=2, default=default)
+                f.write("\n")
+
+        eng = self.engine
+        with open(os.path.join(out, "recorder.jsonl"), "w") as f:
+            f.write(self.tel.recorder.to_jsonl())
+        if hasattr(self.tel.tracer, "export_chrome"):
+            self.tel.tracer.export_chrome(os.path.join(out, "trace.json"))
+        dump("metrics.json", self.tel.metrics.snapshot())
+        with open(os.path.join(out, "metrics.prom"), "w") as f:
+            f.write(self.tel.metrics.render_prometheus())
+        if hasattr(eng, "accounting_snapshot"):
+            dump("accounting.json", eng.accounting_snapshot())
+        if hasattr(eng, "auditor"):
+            dump("audit.json", {
+                "cfg": eng.auditor.cfg,
+                "runs": eng.auditor.runs,
+                "skipped": eng.auditor.skipped,
+                "reports": list(eng.auditor.reports)})
+        dump("timelines.json", self.tel.aggregate())
+        backend = getattr(eng, "backend", eng)
+        dump("config.json", {
+            "engine": type(eng).__name__,
+            "backend": type(backend).__name__,
+            "model_cfg": getattr(backend, "cfg", None),
+            "engine_cfg": getattr(backend, "pcfg", None),
+            "sched_cfg": getattr(getattr(eng, "sched", None), "cfg", None),
+            "recorder": {"capacity": self.tel.recorder.capacity,
+                         "retained": len(self.tel.recorder),
+                         "dropped": self.tel.recorder.dropped},
+        })
+        return out
 
     def metrics(self) -> dict:
         """Serving snapshot: request/token counts, wall time, tok/s,

@@ -45,7 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache import PoolExhausted, SwapArea, bucketing
-from repro.obs import NULL_TELEMETRY
+from repro.obs import (NULL_TELEMETRY, DlzsAuditor, fold_snapshot,
+                       fold_traffic, reconcile_refs)
 from repro.serving import swap_policy
 from repro.serving.engine import Request
 from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
@@ -173,7 +174,28 @@ class Backend(Protocol):
         global index j, physical id)]."""
 
     # -- observability ----------------------------------------------------
+    page_bytes_full: int     # full-tree bytes one page carries (swap price)
+    page_bytes_gather: int   # fp K/V bytes a decode gather reads per page
+    page_bytes_int8: int     # int8 mirror-tier bytes per page (0: no tier)
+
     def stats(self) -> dict: ...
+
+    def page_accounting(self) -> dict:
+        """Host-side pool census: {capacity, live, free, cached, shared,
+        unique, quantized_live, quantize_events, per_shard} (``per_shard``
+        None for single-pool backends, else rows with a ``shard`` key)."""
+
+    def pool_refs(self) -> dict:
+        """(shard, pid) -> refcount for every live page — the watchdog
+        reconciles this against what the engine's tables imply."""
+
+    def owner_of(self, j: int) -> int:
+        """Pool shard owning global logical page ``j`` (0: single pool)."""
+
+    def audit_decode(self, slot: int, table, length: int
+                     ) -> Optional[dict]:
+        """Exact-attention audit probe over one decode sequence's full
+        resident page set (see obs.audit); None at a page boundary."""
 
 
 def concat_rows(a, b):
@@ -228,6 +250,9 @@ class EngineCore:
         self._compiled: set = set()       # dispatch kinds seen (compile
         #                                   detection via first-call timing)
         self._sched_seen: dict[str, int] = {}  # last counter sync values
+        self.auditor = DlzsAuditor()      # sampled DLZS prediction audit
+        self._quant_seen = 0              # last quantize_events sync value
+        self._last_pages_hot: Optional[int] = None  # hot_set change events
 
     @property
     def params(self):
@@ -303,6 +328,9 @@ class EngineCore:
                 tl.admit_t = now
             self.tel.tracer.instant("admit", rid=req.rid, slot=slot,
                                     resume=bool(out))
+            self.tel.recorder.record("admit", tick=self._tick_no,
+                                     rid=req.rid, slot=slot,
+                                     resume=bool(out))
         return slot
 
     def prefill_chunks_left(self, slot: int) -> int:
@@ -658,16 +686,31 @@ class EngineCore:
         sparsity = getattr(self.backend, "decode_sparsity", None)
         if self.tel.enabled and sparsity:
             skipped = sparsity["pages_total"] - sparsity["pages_hot"]
+            self.tel.metrics.counter(
+                "engine_decode_pages_considered_total",
+                "resident pages a dense decode gather would have "
+                "touched").inc(sparsity["pages_total"])
             if skipped > 0:
                 self.tel.metrics.counter(
                     "engine_decode_pages_skipped_total",
                     "resident pages the bounded DLZS hot-width decode "
                     "gather left cold").inc(skipped)
+                self.tel.metrics.counter(
+                    "engine_decode_bytes_skipped_total",
+                    "fp K/V bytes the bounded hot-width gather did NOT "
+                    "read (measured bytes-not-gathered)").inc(
+                    skipped * getattr(self.backend, "page_bytes_gather", 0))
             if sparsity.get("shard_skips"):
                 self.tel.metrics.counter(
                     "engine_decode_shard_merges_skipped_total",
                     "per-step shards holding zero hot pages whose psum "
                     "contribution was skipped").inc(sparsity["shard_skips"])
+            if sparsity["pages_hot"] != self._last_pages_hot:
+                self.tel.recorder.record(
+                    "hot_set", tick=self._tick_no,
+                    pages_hot=sparsity["pages_hot"],
+                    pages_total=sparsity["pages_total"])
+                self._last_pages_hot = sparsity["pages_hot"]
         finished = done_early
         tel_on = self.tel.enabled
         now = time.perf_counter() if tel_on else 0.0
@@ -737,6 +780,13 @@ class EngineCore:
                 "engine_pages_swapped_total",
                 "pages moved between pool and host").inc(
                 len(cands), dir="out", kind="shed")
+            self.tel.metrics.counter(
+                "engine_swap_bytes_total",
+                "page bytes moved between pool and host").inc(
+                _rows_bytes(host), dir="out", kind="shed")
+            self.tel.recorder.record("shed", tick=self._tick_no,
+                                     rid=req.rid, slot=slot,
+                                     pages=len(cands), shard=shard)
         return len(cands)
 
     def exec_preempt(self, slot: int, swap: bool) -> bool:
@@ -789,6 +839,10 @@ class EngineCore:
                     "engine_pages_swapped_total",
                     "pages moved between pool and host").inc(
                     len(park), dir="out", kind="preempt")
+                self.tel.metrics.counter(
+                    "engine_swap_bytes_total",
+                    "page bytes moved between pool and host").inc(
+                    _rows_bytes(host), dir="out", kind="preempt")
         else:
             self.swap_area.discard(req.rid)    # stale lazy-shed payload
             self.backend.release_table(table)
@@ -799,6 +853,9 @@ class EngineCore:
             tl = self.tel.timeline(req.rid)
             tl.preempt_ts.append(time.perf_counter())
             tl.outcome = "preempted"
+            self.tel.recorder.record("preempt", tick=self._tick_no,
+                                     rid=req.rid, slot=slot, swap=swap,
+                                     swapped=swapped)
         span.args["swapped"] = swapped
         span.__exit__(None, None, None)
         return swapped
@@ -857,6 +914,16 @@ class EngineCore:
                     "engine_pages_swapped_total",
                     "pages moved between pool and host").inc(
                     len(upload), dir="in", kind="resume")
+                self.tel.metrics.counter(
+                    "engine_swap_bytes_total",
+                    "page bytes moved between pool and host").inc(
+                    len(upload)
+                    * getattr(self.backend, "page_bytes_full", 0),
+                    dir="in", kind="resume")
+            self.tel.recorder.record("swap_in", tick=self._tick_no,
+                                     rid=req.rid, slot=slot,
+                                     uploads=len(upload),
+                                     kept=len(state["kept"]))
         return slot
 
     # -- driver -------------------------------------------------------------
@@ -870,7 +937,24 @@ class EngineCore:
             fin = self.sched.tick(self)
         self._tick_no += 1
         self._sync_metrics()
+        if self.auditor.due(self._tick_no):
+            self._run_audit()
         return fin
+
+    def _run_audit(self) -> None:
+        """Sampled DLZS prediction audit: run the backend's exact-
+        attention probe over one live decode sequence and fold the
+        recall/score/skip-rate report (obs.audit). One extra decode-
+        shaped dispatch per sample — never on the undecorated path."""
+        slot = self.auditor.pick_slot(self._decode_slots())
+        if slot is None:
+            return
+        rid = self.active[slot].rid
+        with self.tel.tracer.span("audit", slot=slot, rid=rid):
+            report = self.backend.audit_decode(
+                slot, self.tables[slot], int(self.lengths[slot]))
+        self.auditor.fold(report, self.tel.metrics, tick=self._tick_no,
+                          rid=rid, recorder=self.tel.recorder)
 
     def _sync_metrics(self) -> None:
         """Fold scheduler stat deltas and pool occupancy into the
@@ -914,6 +998,30 @@ class EngineCore:
         reg.gauge("engine_swap_area_entries",
                   "sequences parked on the host").set(swap.entries)
 
+        # per-tick KV accounting + traffic deltas + the refcount watchdog
+        snap = self.accounting_snapshot()
+        fold_snapshot(reg, snap)
+        q_events = snap["pool"].get("quantize_events", 0)
+        dq = q_events - self._quant_seen
+        if dq > 0:
+            fold_traffic(reg, quantized_pages=dq,
+                         page_bytes_int8=getattr(
+                             self.backend, "page_bytes_int8", 0))
+            self.tel.recorder.record("quant", tick=self._tick_no,
+                                     pages=dq)
+        self._quant_seen = q_events
+        wd = reconcile_refs(self._expected_refs(),
+                            self.backend.pool_refs())
+        if not wd.ok:
+            reg.counter(
+                "engine_watchdog_violations_total",
+                "pool refcounts the engine's tables and swap area "
+                "cannot explain (leak / double-free in waiting)").inc(
+                wd.violations)
+            self.tel.recorder.record("watchdog", tick=self._tick_no,
+                                     violations=wd.violations,
+                                     detail=wd.describe()[:400])
+
     def dlzs_hot_fraction(self) -> Optional[float]:
         """Fraction of decode-phase live pages inside the DLZS hot set —
         a point-in-time snapshot for metrics() / the exposition endpoint.
@@ -946,6 +1054,87 @@ class EngineCore:
         return done
 
     # -- observability ------------------------------------------------------
+
+    def accounting_snapshot(self) -> dict:
+        """One tick's page-accounting census, from host state only.
+
+        Every page the engine has allocated for a sequence is classified
+        into exactly one of: **hot** (in the last decode step's bounded
+        hot-set), **cold** (resident but not gathered), **shed** (SHED
+        sentinel — content parked host-side while the sequence keeps
+        decoding), or **swapped** (the whole sequence is parked), so
+        ``allocated == hot + cold + shed + swapped`` holds at every tick
+        boundary (obs.accounting.conservation_error). Pages of slots
+        still mid-prefill (and decode slots the last decode step did not
+        cover) count as cold. Fragmentation is the decode slots' tail
+        slack: allocated-but-unwritten token positions over resident
+        token capacity. No device syncs — block tables, the swap area
+        and the backend's pool census are all host-side."""
+        page = self.backend.page_size
+        sparsity = getattr(self.backend, "decode_sparsity", None) or {}
+        per_slot = sparsity.get("per_slot") or {}
+        decoding = set(self._decode_slots())
+        resident = shed = hot = 0
+        token_slack = token_capacity = 0
+        for slot, table in self.tables.items():
+            res_slot = sum(1 for pid in table if pid >= 0)
+            shed_slot = len(table) - res_slot
+            resident += res_slot
+            shed += shed_slot
+            if slot in decoding:
+                _, n_hot = per_slot.get(slot, (res_slot, 0))
+                hot += min(n_hot, res_slot)
+                on_device = int(self.lengths[slot]) - shed_slot * page
+                token_capacity += res_slot * page
+                token_slack += max(res_slot * page - on_device, 0)
+        active_rids = {req.rid for req in self.active.values()}
+        swapped = 0
+        for rid, payload in self.swap_area.items():
+            if rid in active_rids:
+                continue   # lazy-shed payload: its pages ARE the shed
+                #            sentinels above — counting both double-books
+            swapped += payload.get("n_pages",
+                                   len(payload.get("park", ())))
+        return {
+            "tick": self._tick_no,
+            "pages": {"allocated": resident + shed + swapped,
+                      "resident": resident, "hot": hot,
+                      "cold": resident - hot, "shed": shed,
+                      "swapped": swapped},
+            "fragmentation": {
+                "token_slack": token_slack,
+                "token_capacity": token_capacity,
+                "frac": round(token_slack / token_capacity, 6)
+                if token_capacity else 0.0},
+            "pool": self.backend.page_accounting(),
+            "bytes": {
+                "per_page_full": getattr(self.backend,
+                                         "page_bytes_full", 0),
+                "per_page_gather": getattr(self.backend,
+                                           "page_bytes_gather", 0),
+                "per_page_int8": getattr(self.backend,
+                                         "page_bytes_int8", 0)},
+        }
+
+    def _expected_refs(self) -> dict:
+        """(shard, pid) -> refcount the engine's state implies: one ref
+        per live block-table entry plus one per swap-payload ``kept``
+        entry (shared pages a fully-parked sequence still holds)."""
+        expected: dict[tuple[int, int], int] = {}
+        for table in self.tables.values():
+            for j, pid in enumerate(table):
+                if pid < 0:
+                    continue
+                key = (self.backend.owner_of(j), pid)
+                expected[key] = expected.get(key, 0) + 1
+        active_rids = {req.rid for req in self.active.values()}
+        for rid, payload in self.swap_area.items():
+            if rid in active_rids:
+                continue               # lazy-shed payloads hold no refs
+            for j, pid in payload.get("kept", ()):
+                key = (self.backend.owner_of(j), pid)
+                expected[key] = expected.get(key, 0) + 1
+        return expected
 
     def stats(self) -> dict:
         st = self.backend.stats()

@@ -153,11 +153,16 @@ class PagedBackend:
         # which lacks donation — load-bearing on TPU)
         self._decode = jax.jit(functools.partial(self._decode_fn),
                                donate_argnums=(2,))
+        # audit probe (obs.audit): same decode fn, but NO donation — the
+        # probe reads the live cache and its output tree is discarded, so
+        # donating would invalidate self.cache under the engine
+        self._audit = jax.jit(functools.partial(self._decode_fn))
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
         self._copy_page = jax.jit(self._copy_fn, donate_argnums=(0,))
         self._gather_pages = jax.jit(self._gather_fn)
         self._page_in = jax.jit(self._page_in_fn, donate_argnums=(0,))
         self._scores = jax.jit(metrics.page_scores)
+        self._scores_by_layer = jax.jit(metrics.page_scores_per_layer)
 
         # Build the page pool slabs from a one-page probe prefill: every
         # prefill cache leaf [L, 1, page, nkv, dh] becomes a pool slab
@@ -182,6 +187,14 @@ class PagedBackend:
             "lengths": jnp.zeros((pcfg.max_batch,), jnp.int32),
         }
         self.last_token = jnp.zeros((pcfg.max_batch, 1), jnp.int32)
+        # per-page byte prices (shape-only, computed once): the full tree
+        # row a swap payload carries vs the fp K/V rows a decode gather
+        # reads — obs.accounting converts page counters to traffic bytes
+        self.page_bytes_full = metrics.bytes_per_page(self.cache["layers"])
+        self.page_bytes_gather = metrics.gather_bytes_per_page(
+            self.cache["layers"])
+        self.page_bytes_int8 = metrics.quant_bytes_per_page(
+            self.cache["layers"])
 
     # -- jitted kernels -----------------------------------------------------
 
@@ -417,6 +430,7 @@ class PagedBackend:
         resident: set[int] = set()
         hot_pids: set[int] = set()
         pages_total = pages_hot = 0
+        per_slot: dict[int, tuple[int, int]] = {}
         for slot in slots:
             table = tables[slot]
             length = int(lengths[slot])
@@ -445,12 +459,14 @@ class PagedBackend:
             n_hot = int((lg >= 0).sum())
             pages_total += n_res
             pages_hot += n_hot
+            per_slot[slot] = (n_res, n_hot)
             if self.kv_quant:
                 resident.update(pid for pid in table if pid >= 0)
                 hot_pids.update(int(p) for p in ph if p >= 0)
         self.decode_sparsity = {"pages_total": pages_total,
                                 "pages_hot": pages_hot,
-                                "shard_skips": 0}
+                                "shard_skips": 0,
+                                "per_slot": per_slot}
         out = {"phys": jnp.asarray(phys),
                "logical": jnp.asarray(logical),
                "write_page": jnp.asarray(write_page),
@@ -568,6 +584,112 @@ class PagedBackend:
                 self.pool.quant.mark(pid)
 
     # -- observability -------------------------------------------------------------
+
+    def page_accounting(self) -> dict:
+        """Host-side pool census for obs.accounting: occupancy by tier,
+        COW-shared vs unique pages — straight off the refcount/quant
+        tables, no device syncs."""
+        pool = self.pool
+        live = shared = q_live = 0
+        for pid in range(1, pool.n_pages):
+            r = pool.ref(pid)
+            if r > 0:
+                live += 1
+                if r > 1:
+                    shared += 1
+                if pool.quant.is_quant(pid):
+                    q_live += 1
+        return {"capacity": pool.n_pages - 1, "live": live,
+                "free": pool.free_pages(), "cached": len(pool.evictable()),
+                "shared": shared, "unique": live - shared,
+                "quantized_live": q_live,
+                "quantize_events": pool.quant.stats().quantize_events,
+                "per_shard": None}
+
+    def pool_refs(self) -> dict:
+        """(shard, pid) -> refcount for every page the pool holds a
+        reference on — the watchdog reconciles this against what the
+        engine's tables/parks imply (obs.accounting)."""
+        return {(0, pid): self.pool.ref(pid)
+                for pid in range(1, self.pool.n_pages)
+                if self.pool.ref(pid) > 0}
+
+    def owner_of(self, j: int) -> int:
+        """Shard owning global page index ``j`` (single pool: always 0)."""
+        return 0
+
+    def audit_decode(self, slot: int, table, length: int):
+        """Exact-attention audit probe for one live decode slot (obs.audit).
+
+        Runs the decode step over the slot's FULL resident page set on a
+        non-donated jit (the live cache is read, never consumed) with the
+        ``audit`` flag set, so every attention layer reports the softmax
+        mass each page receives from the next query token. Returns None at
+        a page boundary (the tail page the next step writes does not exist
+        yet — the sampler just retries a later tick), else a host dict
+        with per-layer masses over residents, the sphere-selected hot
+        mask, and per-(layer, page) DLZS scores.
+        """
+        page = self.pcfg.page_size
+        idx = length // page
+        if idx >= len(table) or table[idx] < 0:
+            return None
+        resident = [(j, pid) for j, pid in enumerate(table) if pid >= 0]
+        b = self.pcfg.max_batch
+        w = bucketing.bucket_count(len(resident), pow2=self.pcfg.bucket_pow2)
+        phys = np.full((b, w), -1, np.int32)
+        logical = np.full((b, w), -1, np.int32)
+        write_page = np.full((b,), SCRATCH, np.int32)
+        write_off = np.zeros((b,), np.int32)
+        for i, (j, pid) in enumerate(resident):
+            phys[slot, i] = pid
+            logical[slot, i] = j
+        write_page[slot] = table[idx]
+        write_off[slot] = length % page
+        ps = {"phys": jnp.asarray(phys), "logical": jnp.asarray(logical),
+              "write_page": jnp.asarray(write_page),
+              "write_off": jnp.asarray(write_off),
+              "audit": jnp.zeros((), jnp.int32)}
+        lengths_vec = np.zeros((b,), np.int32)
+        lengths_vec[slot] = length
+        cache = {"layers": self.cache["layers"],
+                 "lengths": jnp.asarray(lengths_vec)}
+        _, out_cache = self._audit(self.params, self.last_token, cache, ps)
+        leaves = jax.tree_util.tree_flatten_with_path(out_cache["layers"])[0]
+        mass = np.concatenate(
+            [np.asarray(leaf)[:, slot, :len(resident)]
+             for path, leaf in leaves
+             if any(isinstance(k, jax.tree_util.DictKey)
+                    and k.key == "audit_mass" for k in path)],
+            axis=0)                                  # [n_layers, n_res]
+
+        # the hot set the NEXT decode step would gather (same selector,
+        # same scores pull)
+        scores = self._pull_scores()
+        if self.sparse_decode:
+            _, lg = self.alloc.select_hot_sphere(
+                table, self.hot_width, scores, radius=self.hot_radius)
+        else:
+            _, lg = self.alloc.select_hot(table, self.hot_width, scores)
+        hot_js = {int(j) for j in lg if j >= 0}
+        hot_mask = np.array([j in hot_js for j, _ in resident], bool)
+
+        pids = [pid for _, pid in resident]
+        try:
+            sl = np.asarray(self._scores_by_layer(self.cache["layers"]))
+            scores_layers = sl[:, pids].tolist()
+        except ValueError:
+            scores_layers = None
+        tot = np.maximum(mass.sum(axis=1), 1e-30)
+        recall = (mass[:, hot_mask].sum(axis=1) / tot)
+        return {"slot": slot, "length": length,
+                "pages_resident": len(resident),
+                "pages_hot": len(hot_js),
+                "hot_mask": hot_mask.tolist(),
+                "mass_per_layer": mass.tolist(),
+                "recall_per_layer": recall.tolist(),
+                "scores_per_layer": scores_layers,
+                "per_shard": None}
 
     def stats(self) -> dict:
         pool = self.pool.stats()

@@ -150,10 +150,15 @@ class SpatialBackend:
             self._prefill_chunk_batch_fn), donate_argnums=(2,))
         self._decode = jax.jit(functools.partial(self._decode_fn),
                                donate_argnums=(2,))
+        # audit probe (obs.audit): reads the live cache, returns only the
+        # stacked per-page masses — never donated
+        self._audit = jax.jit(functools.partial(self._audit_fn))
         self._copy_page = jax.jit(self._copy_fn, static_argnums=(3,))
         self._gather_pages = jax.jit(self._gather_fn)
         self._page_in = jax.jit(self._page_in_fn, donate_argnums=(0,))
         self._scores = jax.jit(jax.vmap(metrics.page_scores))
+        self._scores_by_layer = jax.jit(
+            jax.vmap(metrics.page_scores_per_layer))
 
         # Per-shard pool slabs from a one-page probe prefill: each leaf
         # [L, 1, page, nkv, dh] becomes [n_shards, L, P_local, page, nkv,
@@ -187,6 +192,13 @@ class SpatialBackend:
         self.last_token = jax.device_put(
             jnp.zeros((pcfg.max_batch, 1), jnp.int32),
             NamedSharding(self.mesh, P()))
+        # per-page byte prices (shape-only, one shard's slice): the full
+        # tree row a swap payload carries vs the fp K/V rows the decode
+        # gather reads — obs.accounting prices page traffic with these
+        one = jax.tree.map(lambda leaf: leaf[0], self.cache["layers"])
+        self.page_bytes_full = metrics.bytes_per_page(one)
+        self.page_bytes_gather = metrics.gather_bytes_per_page(one)
+        self.page_bytes_int8 = metrics.quant_bytes_per_page(one)
 
     # -- jitted kernels -----------------------------------------------------
 
@@ -205,6 +217,11 @@ class SpatialBackend:
         return lm.decode_step_spatial(params, self.cfg, tokens, cache,
                                       page_state, mesh=self.mesh,
                                       axis=self.topo.axis)
+
+    def _audit_fn(self, params, tokens, cache, page_state):
+        return lm.audit_decode_spatial(params, self.cfg, tokens, cache,
+                                       page_state, mesh=self.mesh,
+                                       axis=self.topo.axis)
 
     @staticmethod
     def _copy_fn(pool_layers, src, dst, shard):
@@ -422,6 +439,7 @@ class SpatialBackend:
         resident = [set() for _ in range(n)]     # local pids per shard
         hot_pids = [set() for _ in range(n)]
         pages_total = pages_hot = 0
+        per_slot: dict[int, tuple[int, int]] = {}
         for slot in slots:
             table = tables[slot]
             length = int(lengths[slot])
@@ -437,6 +455,7 @@ class SpatialBackend:
                 self.cache["layers"] = self._copy_page(
                     self.cache["layers"], jnp.asarray(src, jnp.int32),
                     jnp.asarray(dst, jnp.int32), shard)
+            slot_hot = 0
             for s in range(n):
                 if self.sparse_decode:
                     ph, lg = self.pools.select_hot_sphere(
@@ -445,12 +464,15 @@ class SpatialBackend:
                     ph, lg = self.pools.select_hot(table, s, w, scores)
                 phys[s, slot] = ph
                 logical[s, slot] = lg
-                pages_hot += int((lg >= 0).sum())
+                slot_hot += int((lg >= 0).sum())
                 if self.kv_quant:
                     locals_, _ = self.pools.local_pages(table, s)
                     resident[s].update(p for p in locals_ if p >= 0)
                     hot_pids[s].update(int(p) for p in ph if p >= 0)
-            pages_total += sum(1 for pid in table if pid >= 0)
+            pages_hot += slot_hot
+            n_res = sum(1 for pid in table if pid >= 0)
+            pages_total += n_res
+            per_slot[slot] = (n_res, slot_hot)
             owner = self.topo.owner(idx)
             write_page[owner, slot] = table[idx]
             write_off[owner, slot] = length % page
@@ -462,7 +484,8 @@ class SpatialBackend:
                        if slots else 0)
         self.decode_sparsity = {"pages_total": pages_total,
                                 "pages_hot": pages_hot,
-                                "shard_skips": shard_skips}
+                                "shard_skips": shard_skips,
+                                "per_slot": per_slot}
         out = {"phys": jnp.asarray(phys),
                "logical": jnp.asarray(logical),
                "write_page": jnp.asarray(write_page),
@@ -609,6 +632,138 @@ class SpatialBackend:
                         self.pools.pools[self.topo.owner(j)].quant.mark(pid)
 
     # -- observability -----------------------------------------------------------
+
+    def page_accounting(self) -> dict:
+        """Host-side census over every shard pool (obs.accounting) plus a
+        per-shard breakdown. No device syncs."""
+        tot = {"capacity": 0, "live": 0, "free": 0, "cached": 0,
+               "shared": 0, "unique": 0, "quantized_live": 0,
+               "quantize_events": 0}
+        per_shard = []
+        for s in range(self.topo.n_shards):
+            pool = self.pools.pools[s]
+            live = shared = q_live = 0
+            for pid in range(1, pool.n_pages):
+                r = pool.ref(pid)
+                if r > 0:
+                    live += 1
+                    if r > 1:
+                        shared += 1
+                    if pool.quant.is_quant(pid):
+                        q_live += 1
+            row = {"shard": s, "capacity": pool.n_pages - 1, "live": live,
+                   "free": pool.free_pages(),
+                   "cached": len(pool.evictable()),
+                   "shared": shared, "unique": live - shared,
+                   "quantized_live": q_live,
+                   "quantize_events": pool.quant.stats().quantize_events}
+            per_shard.append(row)
+            for k in tot:
+                tot[k] += row[k]
+        tot["per_shard"] = per_shard
+        return tot
+
+    def pool_refs(self) -> dict:
+        """(shard, pid) -> refcount for every live page on every shard."""
+        out = {}
+        for s in range(self.topo.n_shards):
+            pool = self.pools.pools[s]
+            for pid in range(1, pool.n_pages):
+                r = pool.ref(pid)
+                if r > 0:
+                    out[(s, pid)] = r
+        return out
+
+    def owner_of(self, j: int) -> int:
+        return self.topo.owner(j)
+
+    def audit_decode(self, slot: int, table, length: int):
+        """Exact-attention audit probe, sequence-sharded form (obs.audit).
+
+        Each shard gathers its FULL local resident slice of the slot and
+        the per-page masses come back globally normalized (pmax/psum in
+        ``page_attention_mass``), so summing any shard subset is exact.
+        None at a page boundary — the sampler retries a later tick.
+        """
+        n = self.topo.n_shards
+        page = self.pcfg.page_size
+        idx = length // page
+        if idx >= len(table) or table[idx] < 0:
+            return None
+        by_shard = [[j for j, pid in enumerate(table)
+                     if pid >= 0 and self.topo.owner(j) == s]
+                    for s in range(n)]
+        n_res = sum(len(b) for b in by_shard)
+        b = self.pcfg.max_batch
+        w = bucketing.bucket_count(max(1, max(len(x) for x in by_shard)),
+                                   pow2=self.pcfg.bucket_pow2)
+        phys = np.full((n, b, w), -1, np.int32)
+        logical = np.full((n, b, w), -1, np.int32)
+        write_page = np.full((n, b), SCRATCH, np.int32)
+        write_off = np.zeros((n, b), np.int32)
+        for s in range(n):
+            for i, j in enumerate(by_shard[s]):
+                phys[s, slot, i] = table[j]
+                logical[s, slot, i] = j
+        owner = self.topo.owner(idx)
+        write_page[owner, slot] = table[idx]
+        write_off[owner, slot] = length % page
+        ps = {"phys": jnp.asarray(phys), "logical": jnp.asarray(logical),
+              "write_page": jnp.asarray(write_page),
+              "write_off": jnp.asarray(write_off),
+              "audit": jnp.zeros((n,), jnp.int32)}
+        lengths_vec = np.zeros((b,), np.int32)
+        lengths_vec[slot] = length
+        cache = {"layers": self.cache["layers"],
+                 "lengths": jnp.asarray(lengths_vec)}
+        out = np.asarray(self._audit(self.params, self.last_token, cache,
+                                     ps))     # [n, blocks, R, B, W]
+        n_layers = out.shape[1] * out.shape[2]
+        mass_by_shard = [
+            out[s].reshape(n_layers, b, w)[:, slot, :len(by_shard[s])]
+            for s in range(n)]                # each [n_layers, n_res_s]
+
+        # the hot selection the NEXT decode step would make, per shard
+        scores = self._pull_scores()
+        hot_js: set[int] = set()
+        per_shard = []
+        for s in range(n):
+            if self.sparse_decode:
+                _, lg = self.pools.select_hot_sphere(
+                    table, s, self.hot_width, scores,
+                    radius=self.hot_radius)
+            else:
+                _, lg = self.pools.select_hot(table, s, self.hot_width,
+                                              scores)
+            shard_hot = {int(j) for j in lg if j >= 0}
+            hot_js |= shard_hot
+            mass_s = float(mass_by_shard[s].sum()) / max(n_layers, 1)
+            per_shard.append({
+                "shard": s, "pages_resident": len(by_shard[s]),
+                "pages_hot": len(shard_hot),
+                "mass_share": mass_s,
+                "skipped": len(shard_hot) == 0})
+
+        mass = np.concatenate(mass_by_shard, axis=1)  # [n_layers, n_res]
+        hot_mask = np.array([j in hot_js
+                             for s in range(n) for j in by_shard[s]], bool)
+        try:
+            sl = np.asarray(self._scores_by_layer(self.cache["layers"]))
+            scores_layers = np.concatenate(
+                [sl[s][:, [table[j] for j in by_shard[s]]]
+                 for s in range(n)], axis=1).tolist()
+        except ValueError:
+            scores_layers = None
+        tot = np.maximum(mass.sum(axis=1), 1e-30)
+        recall = mass[:, hot_mask].sum(axis=1) / tot
+        return {"slot": slot, "length": length,
+                "pages_resident": n_res,
+                "pages_hot": len(hot_js),
+                "hot_mask": hot_mask.tolist(),
+                "mass_per_layer": mass.tolist(),
+                "recall_per_layer": recall.tolist(),
+                "scores_per_layer": scores_layers,
+                "per_shard": per_shard}
 
     def stats(self) -> dict:
         pools = self.pools.stats()

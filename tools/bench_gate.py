@@ -1,0 +1,209 @@
+"""Bench regression gate: diff a fresh serving-bench run against the
+committed baseline with per-metric tolerance bands.
+
+Run:  PYTHONPATH=src python tools/bench_gate.py \
+          --baseline BENCH_serving.json --fresh fresh.json [--out verdict.json]
+      PYTHONPATH=src python tools/bench_gate.py --run [--decode-sparse-only]
+
+``--run`` executes ``benchmarks/serving.py --json`` into a temp file and
+diffs that. Every numeric leaf of the baseline is checked against the
+fresh document by dotted path; the tolerance tier is picked from the
+leaf key (see docs/benchmarks.md for the policy):
+
+  STRICT  exact match — structural invariants (compile counts, request
+          counts, configured widths/sizes). Any drift is a real change.
+  TIGHT   rel 10% or abs 0.02 — deterministic-ish quality/occupancy
+          numbers (agreement, fractions, capacity gains, byte counts).
+  COUNT   rel 25% or abs 3 — scheduling event counts that shift a
+          little with host timing (preemptions, swaps, ticks).
+  TIMING  one-sided factor 2 in the regression direction only —
+          throughput may halve before the gate trips, and getting
+          faster (or slower on lower-is-better keys improving) never
+          fails. Cross-host wall-clock is too noisy for a tight band.
+  SKIP    informational leaves (wall_s, budget knobs) — never fail.
+
+Missing baseline keys in the fresh run fail (a suite silently vanished);
+keys only in the fresh run warn (new metrics are fine, the next refresh
+baselines them). Exit 0 pass / 1 fail / 2 usage; ``--out`` writes the
+machine-readable verdict JSON either way.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+STRICT_KEYS = {
+    "decode_compiles", "prefill_batch_compiles", "rejected", "requests",
+    "single_shard_admits", "tokens_served", "capacity_pages", "width",
+    "hot_width", "chunk_pages", "prefill_tokens", "shards",
+    "bytes_per_page_fp", "bytes_per_page_int8", "page_size", "n_pages",
+}
+TIGHT_SUBSTR = (
+    "agreement", "_frac", "frac_", "capacity_gain", "footprint_ratio",
+    "oversubscription", "bytes_not_gathered", "shared_hits", "peak",
+    "recall",
+)
+COUNT_SUBSTR = (
+    "preempt", "swap_out", "swap_in", "resume", "shed",
+    "quantize_events", "tick", "sheds", "admits",
+)
+HIGHER_BETTER = ("tok_s", "speedup", "gain", "goodput", "throughput")
+LOWER_BETTER_END = ("_ms", "_s", "_us", "us_per_tok", "ttft")
+SKIP_KEYS = {"budget_tokens", "wall_s", "us_per_call", "schema", "seed"}
+
+TIGHT_REL, TIGHT_ABS = 0.10, 0.02
+COUNT_REL, COUNT_ABS = 0.25, 3
+TIMING_FACTOR = 2.0
+
+
+def classify(key: str) -> str:
+    """Tolerance tier for one leaf key (the last path segment)."""
+    if key in SKIP_KEYS:
+        return "skip"
+    if key in STRICT_KEYS:
+        return "strict"
+    if any(s in key for s in HIGHER_BETTER) or \
+            key.endswith(LOWER_BETTER_END):
+        return "timing"
+    if any(s in key for s in TIGHT_SUBSTR):
+        return "tight"
+    if any(s in key for s in COUNT_SUBSTR):
+        return "count"
+    return "tight"          # unknown numerics get the strictest band
+
+
+def leaves(doc, prefix="") -> dict:
+    """Flatten to {dotted.path: number}; non-numeric leaves ignored."""
+    out = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(leaves(v, f"{prefix}{k}."))
+    elif isinstance(doc, (list, tuple)):
+        for i, v in enumerate(doc):
+            out.update(leaves(v, f"{prefix}{i}."))
+    elif isinstance(doc, bool):
+        out[prefix.rstrip(".")] = int(doc)
+    elif isinstance(doc, (int, float)):
+        out[prefix.rstrip(".")] = doc
+    return out
+
+
+def check_leaf(path: str, base: float, new: float):
+    """(ok, reason) for one leaf under its tier's band."""
+    key = path.rsplit(".", 1)[-1]
+    tier = classify(key)
+    if tier == "skip":
+        return True, None
+    if tier == "strict":
+        if new != base:
+            return False, f"strict {path}: {base} -> {new}"
+        return True, None
+    if tier == "timing":
+        if key.endswith(LOWER_BETTER_END) and not any(
+                s in key for s in HIGHER_BETTER):
+            # lower is better: only flag when it grows past the factor
+            bad = base > 0 and new > base * TIMING_FACTOR
+        else:
+            # higher is better: only flag when it drops past the factor
+            bad = base > 0 and new < base / TIMING_FACTOR
+        if bad:
+            return False, f"timing {path}: {base} -> {new} " \
+                          f"(beyond {TIMING_FACTOR}x regression band)"
+        return True, None
+    rel, ab = (TIGHT_REL, TIGHT_ABS) if tier == "tight" \
+        else (COUNT_REL, COUNT_ABS)
+    diff = abs(new - base)
+    if diff <= ab or diff <= rel * abs(base):
+        return True, None
+    return False, f"{tier} {path}: {base} -> {new} " \
+                  f"(>{rel:.0%} rel and >{ab} abs)"
+
+
+def diff(baseline: dict, fresh: dict) -> dict:
+    """Machine-readable verdict comparing two bench documents."""
+    b, f = leaves(baseline), leaves(fresh)
+    failures, warnings = [], []
+    for path, base in sorted(b.items()):
+        if path not in f:
+            failures.append(f"missing {path}: baseline had {base}, "
+                            "fresh run lacks it")
+            continue
+        ok, reason = check_leaf(path, base, f[path])
+        if not ok:
+            failures.append(reason)
+    for path in sorted(set(f) - set(b)):
+        warnings.append(f"new metric {path}={f[path]} (not in baseline; "
+                        "refresh the baseline to gate it)")
+    return {"verdict": "fail" if failures else "pass",
+            "checked": len(b), "failures": failures, "warnings": warnings}
+
+
+def run_fresh(decode_sparse_only: bool) -> dict:
+    """Execute the serving bench into a temp file and load the result."""
+    with tempfile.TemporaryDirectory() as td:
+        path = pathlib.Path(td) / "fresh.json"
+        cmd = [sys.executable, "-m", "benchmarks.serving",
+               "--json", str(path)]
+        if decode_sparse_only:
+            cmd.insert(3, "--decode-sparse")
+        env = {**os.environ, "PYTHONPATH": "src", "PYTHONHASHSEED": "0"}
+        subprocess.run(cmd, cwd=REPO, env=env, check=True)
+        with open(path) as fh:
+            return json.load(fh)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="serving-bench regression gate")
+    ap.add_argument("--baseline", default=str(REPO / "BENCH_serving.json"))
+    ap.add_argument("--fresh", help="pre-existing fresh bench JSON "
+                                    "(skip running the bench)")
+    ap.add_argument("--run", action="store_true",
+                    help="run benchmarks.serving for the fresh side")
+    ap.add_argument("--decode-sparse-only", action="store_true",
+                    help="with --run: only the decode_sparse suite "
+                         "(gates just that sub-tree)")
+    ap.add_argument("--out", help="write the verdict JSON here")
+    args = ap.parse_args(argv)
+    if not args.fresh and not args.run:
+        ap.print_usage()
+        print("bench_gate: need --fresh FILE or --run", file=sys.stderr)
+        return 2
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    if args.fresh:
+        with open(args.fresh) as fh:
+            fresh = json.load(fh)
+    else:
+        fresh = run_fresh(args.decode_sparse_only)
+    if args.run and args.decode_sparse_only:
+        baseline = {"decode_sparse": baseline.get("decode_sparse", {})}
+        fresh = {"decode_sparse": fresh.get("decode_sparse", {})}
+
+    verdict = diff(baseline, fresh)
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(verdict, fh, indent=2)
+            fh.write("\n")
+    for w in verdict["warnings"]:
+        print(f"warn: {w}")
+    for f in verdict["failures"]:
+        print(f"FAIL: {f}")
+    print(f"bench_gate: {verdict['verdict']} "
+          f"({verdict['checked']} leaves checked, "
+          f"{len(verdict['failures'])} failures, "
+          f"{len(verdict['warnings'])} warnings)")
+    return 0 if verdict["verdict"] == "pass" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,10 @@ workload per backend (dense + paged in-process, spatial in a 2-shard
 subprocess), each exported as a Perfetto-loadable Chrome trace into DIR
 (default: a temp dir) and summarized with tools/trace_summary.py.
 
+``--bundle DIR`` runs ONLY a pressured paged workload with the audit
+sampler on and dumps ``LLM.debug_bundle()`` into DIR — CI uploads this
+as the failure artifact of the bench-gate job.
+
 Exits non-zero on any failure.
 """
 
@@ -278,12 +282,53 @@ def trace_smoke(cfg, params, out_dir: pathlib.Path) -> bool:
     return ok
 
 
+def bundle_smoke(cfg, params, out_dir: pathlib.Path) -> bool:
+    """One pressured paged run with full telemetry + the DLZS audit
+    sampler, dumped as an ``LLM.debug_bundle()`` — the artifact CI
+    uploads when the bench regression gate fails, and the smoke that
+    the whole bundle surface stays dumpable."""
+    import json
+
+    import trace_summary
+    from repro import obs
+    from repro.serving import SchedulerCfg
+
+    tel = obs.Telemetry({"backend": "paged"})
+    llm = LLM.from_config(
+        cfg, backend="paged", params=params, telemetry=tel,
+        engine_cfg=PagedEngineCfg(max_batch=4, page_size=16, n_pages=10,
+                                  hot_pages=4, eos_id=-1),
+        sched_cfg=SchedulerCfg(chunk_pages=1, prefill_tokens=64,
+                               swap=True),
+        audit_cfg=obs.AuditCfg(every_ticks=4))
+    for i, n in enumerate((16, 33, 16, 40)):
+        llm.submit((np.arange(n, dtype=np.int32) * 3 + i) % cfg.vocab,
+                   max_tokens=16, rid=i)
+    llm.run_until_done(max_steps=8000)
+    out = llm.debug_bundle(str(out_dir))
+    want = {"recorder.jsonl", "trace.json", "metrics.json",
+            "metrics.prom", "accounting.json", "audit.json",
+            "timelines.json", "config.json"}
+    have = {p.name for p in pathlib.Path(out).iterdir()}
+    missing = want - have
+    if missing:
+        print(f"smoke_serve[bundle]: FAIL (missing {sorted(missing)})")
+        return False
+    with open(pathlib.Path(out) / "metrics.json") as f:
+        print(trace_summary.accounting_table(json.load(f), title=out))
+    print(f"smoke_serve[bundle]: {out} ({len(have)} artifacts) -> PASS")
+    return True
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description="serving smoke")
     ap.add_argument("--trace", nargs="?", const="", metavar="DIR",
                     default=None,
                     help="run ONLY the telemetry smoke; export Perfetto "
                          "traces for all three backends into DIR")
+    ap.add_argument("--bundle", metavar="DIR", default=None,
+                    help="run ONLY a pressured paged workload and dump "
+                         "an LLM.debug_bundle() into DIR")
     args = ap.parse_args()
 
     from benchmarks import serving as bench_serving
@@ -294,6 +339,9 @@ def main() -> int:
         out_dir = pathlib.Path(args.trace) if args.trace \
             else pathlib.Path(tempfile.mkdtemp(prefix="repro_traces_"))
         return 0 if trace_smoke(cfg, params, out_dir) else 1
+    if args.bundle is not None:
+        return 0 if bundle_smoke(cfg, params,
+                                 pathlib.Path(args.bundle)) else 1
 
     ok = basic(cfg, params)
     ok = overload(cfg, params) and ok
