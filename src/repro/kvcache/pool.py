@@ -180,6 +180,25 @@ class PagePool:
         self.quant.inherit(pid, new)   # the page copy clones int8 rows too
         return new
 
+    def forget(self, pid: int) -> None:
+        """Drop a page's prefix-index entry (no-op when unindexed).
+
+        The fault-recovery path for a registered-but-never-written page:
+        a batched prefill registers fresh full-prompt pages BEFORE its
+        wave dispatch scatters their content (same-tick dedup), so a
+        dispatch failure would otherwise leave garbage pages revivable
+        through the index. Only the exact ``key -> pid`` mapping is
+        removed — a racing re-registration of the same key by another
+        page is left alone. A cached (ref-0) page returns to the free
+        list immediately; a live page just loses cacheability.
+        """
+        key = self._key_of.pop(pid, None)
+        if key is not None and self._prefix.get(key) == pid:
+            del self._prefix[key]
+        if pid in self._cached:
+            self._cached.discard(pid)
+            self._free.append(pid)
+
     # -- eviction -----------------------------------------------------------
 
     def evictable(self) -> list[int]:

@@ -16,8 +16,12 @@ one of the three backends:
 
 Requests carry an SLA class (``--sla-mix`` cycles interactive / standard
 / batch) that the scheduler maps onto priorities: interactive traffic is
-admitted first and preempted last. Smoke configs serve on CPU; ``--full
---mesh`` builds the production mesh exactly as the dry-run does.
+admitted first and preempted last. ``--sla-deadlines`` enforces the
+SLA-tier default TTFT/end-to-end budgets and ``--shed-watermarks HIGH
+LOW`` turns on hysteresis admission shedding of low-priority traffic
+under backlog (see docs/serving.md, "Robustness"). Smoke configs serve
+on CPU; ``--full --mesh`` builds the production mesh exactly as the
+dry-run does.
 
 Telemetry (``repro.obs``, see docs/observability.md) is on by default:
 
@@ -60,6 +64,19 @@ def _parse_args(argv=None):
     ap.add_argument("--sla-mix", action="store_true",
                     help="cycle requests through interactive/standard/"
                          "batch SLA classes")
+    ap.add_argument("--sla-deadlines", action="store_true",
+                    help="enforce the SLA-tier default TTFT/e2e deadline "
+                         "budgets (paged/spatial; expired requests end "
+                         "with outcome 'expired')")
+    ap.add_argument("--shed-watermarks", nargs=2, type=int, default=None,
+                    metavar=("HIGH", "LOW"),
+                    help="enable admission shedding (paged/spatial): shed "
+                         "sheddable waiting requests when the backlog "
+                         "crosses HIGH, until it is back at LOW")
+    ap.add_argument("--shed-below-priority", type=int, default=0,
+                    help="with --shed-watermarks: only requests below "
+                         "this priority are sheddable (0 sheds 'batch' "
+                         "but never 'standard'/'interactive')")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="export a Perfetto/Chrome trace of the run "
                          "(.jsonl streams JSONL) and print the per-phase "
@@ -95,7 +112,8 @@ def main(argv=None):
     from repro import obs
     from repro.configs import ARCHS, get_config, get_smoke_config
     from repro.models import lm
-    from repro.serving import LLM, EngineCfg, PagedEngineCfg
+    from repro.serving import (LLM, AdmissionCfg, EngineCfg,
+                               PagedEngineCfg, SchedulerCfg)
     from repro.spatial import SpatialEngineCfg
 
     if args.arch not in ARCHS:
@@ -122,12 +140,28 @@ def main(argv=None):
             n_shards=args.shards, max_batch=args.slots,
             page_size=args.page_size, n_pages_local=args.pages,
             hot_pages_local=args.max_len // args.page_size, eos_id=-1)
+    sched_cfg = None
+    if args.sla_deadlines or args.shed_watermarks:
+        if args.engine == "dense":
+            print("[serve] --sla-deadlines/--shed-watermarks ignored on "
+                  "the dense engine (no scheduler; per-request deadlines "
+                  "still apply via submit())")
+        else:
+            admission = None
+            if args.shed_watermarks:
+                high, low = args.shed_watermarks
+                admission = AdmissionCfg(
+                    high_watermark=high, low_watermark=low,
+                    shed_below_priority=args.shed_below_priority)
+            sched_cfg = SchedulerCfg(prefill_tokens="auto",
+                                     sla_deadlines=args.sla_deadlines,
+                                     admission=admission)
     tel = None if args.no_telemetry else obs.Telemetry(
         {"launcher": "repro.launch.serve", "engine": args.engine,
          "arch": args.arch})
     llm = LLM.from_config(cfg, backend=args.engine, params=params,
                           shards=args.shards, engine_cfg=engine_cfg,
-                          telemetry=tel)
+                          sched_cfg=sched_cfg, telemetry=tel)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -148,7 +182,16 @@ def main(argv=None):
         if args.sla_mix:
             extra += "".join(
                 f", {k}={v['ttft_mean_ms']}ms"
-                for k, v in rep["per_sla"].items())
+                for k, v in rep["per_sla"].items()
+                if v["ttft_mean_ms"] is not None)
+        abnormal: dict = {}
+        for v in rep.get("per_sla", {}).values():
+            for outcome, n in v.get("outcomes", {}).items():
+                if outcome != "done":
+                    abnormal[outcome] = abnormal.get(outcome, 0) + n
+        if abnormal:
+            extra += ", " + ", ".join(
+                f"{k}={n}" for k, n in sorted(abnormal.items()))
     dt = time.time() - t0
     shards = f", {args.shards} shards" if args.engine == "spatial" else ""
     print(f"[serve] {args.arch} ({'full' if args.full else 'smoke'}, "

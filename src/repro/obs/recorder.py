@@ -33,8 +33,11 @@ class FlightRecorder:
 
     def record(self, kind: str, **fields) -> None:
         """Append one event. ``kind`` is the decision type (admit /
-        preempt / shed / swap_in / quant / hot_set / watchdog / audit);
-        ``fields`` are small JSON-serializable scalars."""
+        preempt / shed / swap_in / quant / hot_set / watchdog / audit,
+        plus the lifecycle/fault kinds: cancel / deadline_expired /
+        fault / fault_injected / retry / quarantine / drain — see
+        docs/observability.md); ``fields`` are small JSON-serializable
+        scalars."""
         if self._events.maxlen == 0:
             return
         self._seq += 1

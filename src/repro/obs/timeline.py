@@ -57,7 +57,9 @@ class RequestTimeline:
         self.resume_ts: list[float] = []
         self.token_ts: list[float] = []
         self.n_tokens = 0
-        self.outcome: Optional[str] = None      # "done" | "preempted" | None
+        self.outcome: Optional[str] = None
+        # terminal state: "done" | "cancelled" | "expired" | "failed"
+        # (legacy "preempted" appears in old dumps); None while in flight
 
     # -- derived ------------------------------------------------------------
 
@@ -123,13 +125,24 @@ def aggregate(timelines: Iterable[RequestTimeline]) -> dict:
     for sla, group in sorted(by_sla.items()):
         g_ttfts = [t.ttft for t in group if t.ttft is not None]
         done = [t for t in group if t.done_t is not None]
-        toks = sum(t.n_tokens for t in done)
+        # goodput is useful work only: tokens of requests that reached
+        # the "done" outcome (cancelled/expired/failed tokens are waste)
+        good = [t for t in done if t.outcome in (None, "done")]
+        toks = sum(t.n_tokens for t in good)
         span = (max(t.done_t for t in done)
                 - min(t.submit_t for t in done if t.submit_t is not None)
                 ) if done and any(t.submit_t is not None for t in done) \
             else None
+        outcomes: dict[str, int] = {}
+        for t in done:
+            o = t.outcome or "done"
+            outcomes[o] = outcomes.get(o, 0) + 1
         per_sla[sla] = {
             "requests": len(group),
+            "outcomes": outcomes,
+            "deadline_miss_rate": round(
+                outcomes.get("expired", 0) / len(group), 4)
+            if group else None,
             "ttft_mean_ms": round(1e3 * sum(g_ttfts) / len(g_ttfts), 3)
             if g_ttfts else None,
             "goodput_tok_s": round(toks / span, 3)
@@ -137,6 +150,8 @@ def aggregate(timelines: Iterable[RequestTimeline]) -> dict:
         }
     return {"requests": len(tls),
             "completed": sum(1 for t in tls if t.done_t is not None),
+            "aborted": sum(1 for t in tls if t.outcome in
+                           ("cancelled", "expired", "failed")),
             "preempted_requests": sum(1 for t in tls if t.preempt_ts),
             "ttft_ms": _dist_ms(ttfts),
             "tpot_ms": _dist_ms(tpots),

@@ -1,12 +1,17 @@
 from repro.serving.api import LLM, RequestHandle
 from repro.serving.engine import EngineCfg, Request, ServingEngine
 from repro.serving.engine_core import Backend, EngineCore
+from repro.serving.faults import FaultInjected, FaultPlan, FaultyBackend
 from repro.serving.paged import (PagedBackend, PagedEngineCfg,
                                  PagedServingEngine)
-from repro.serving.scheduler import (BudgetController, NeedPages, Scheduler,
+from repro.serving.scheduler import (AdmissionCfg, BudgetController,
+                                     ExecFault, NeedPages, Scheduler,
                                      SchedulerCfg)
+from repro.serving.swap_policy import RetryGovernor
 
-__all__ = ["Backend", "BudgetController", "EngineCfg", "EngineCore", "LLM",
-           "NeedPages", "PagedBackend", "PagedEngineCfg",
-           "PagedServingEngine", "Request", "RequestHandle", "Scheduler",
-           "SchedulerCfg", "ServingEngine"]
+__all__ = ["AdmissionCfg", "Backend", "BudgetController", "EngineCfg",
+           "EngineCore", "ExecFault", "FaultInjected", "FaultPlan",
+           "FaultyBackend", "LLM", "NeedPages", "PagedBackend",
+           "PagedEngineCfg", "PagedServingEngine", "Request",
+           "RequestHandle", "RetryGovernor", "Scheduler", "SchedulerCfg",
+           "ServingEngine"]

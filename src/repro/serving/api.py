@@ -83,10 +83,23 @@ class RequestHandle:
         return self._record.ttft
 
     @property
+    def outcome(self) -> Optional[str]:
+        """Terminal state: "done" | "cancelled" | "expired" | "failed";
+        None while in flight."""
+        rec = self._record
+        return rec.outcome or getattr(rec.req, "finish_reason", None)
+
+    @property
     def timeline(self) -> obs.RequestTimeline:
         """The request's lifecycle timeline (``.epochs()`` for the
         time-sorted event list, ``.tpots`` for inter-token gaps)."""
         return self._record
+
+    def cancel(self, reason: str = "client") -> bool:
+        """Terminate this request wherever it is (queued, prefilling,
+        decoding, or swapped out); already-terminal requests return
+        False. Tokens generated so far stay readable."""
+        return self._llm.cancel(self.rid, reason=reason)
 
     def __iter__(self) -> Iterator[int]:
         sent = 0
@@ -196,18 +209,26 @@ class LLM:
 
     def submit(self, prompt, max_tokens: int = 32, *,
                sla: Optional[str] = None, priority: Optional[int] = None,
-               max_len: Optional[int] = None, rid: Optional[int] = None
+               max_len: Optional[int] = None, rid: Optional[int] = None,
+               deadline_ms: Optional[float] = None,
+               ttft_deadline_ms: Optional[float] = None
                ) -> RequestHandle:
         """Queue one request; returns its handle. ``sla`` is the QoS
         input — the scheduler maps it to a priority at submit (an
-        explicit ``priority`` wins)."""
+        explicit ``priority`` wins). ``deadline_ms`` /
+        ``ttft_deadline_ms`` bound end-to-end and first-token latency;
+        a lapsed budget makes the request terminal with outcome
+        "expired" (with ``SchedulerCfg.sla_deadlines`` the SLA class
+        fills unset budgets from ``SLA_DEADLINES_MS``)."""
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
         req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
                       max_tokens=max_tokens, max_len=max_len,
                       sla=None if priority is not None else sla,
-                      priority=priority or 0)
+                      priority=priority or 0,
+                      deadline_ms=deadline_ms,
+                      ttft_deadline_ms=ttft_deadline_ms)
         rec = RequestRecord(req, time.perf_counter())
         if self.tel.enabled:
             # pre-register so the engine's timeline(rid) lookups stamp
@@ -235,24 +256,45 @@ class LLM:
             with span:
                 self.engine.admit()
                 finished = list(self.engine.step() or ())
+            finished += self.engine.drain_terminal()
         else:
-            # core engines trace their own tick span inside step()
+            # core engines trace their own tick span inside step() and
+            # fold abnormal terminals into the finished list themselves
             finished = self.engine.step() or []
         now = time.perf_counter()
         for rec in self._pending.values():
             if rec.first_token_t is None and rec.req.out:
                 rec.first_token_t = now
         for fin in finished:
-            rec = self._pending.pop(fin.rid)
+            # cancel() may have closed the record already
+            rec = self._pending.pop(fin.rid, None)
+            if rec is None:
+                continue
             if rec.done_t is None:      # engine telemetry may have stamped
                 rec.done_t = now
             rec.n_tokens = len(fin.out or ())
             if rec.outcome is None:
-                rec.outcome = "done"
+                rec.outcome = getattr(fin, "finish_reason", None) or "done"
         return finished
 
+    def cancel(self, rid: int, *, reason: str = "client") -> bool:
+        """Terminate a request by id; closes its record immediately (the
+        engine also reports it terminal on the next tick, which is a
+        no-op here). Returns False for unknown / already-terminal rids."""
+        rec = self._pending.get(rid)
+        if rec is None or not self.engine.cancel(rid, reason=reason):
+            return False
+        self._pending.pop(rid, None)
+        if rec.done_t is None:
+            rec.done_t = time.perf_counter()
+        rec.n_tokens = len(rec.req.out or ())
+        if rec.outcome is None:
+            rec.outcome = rec.req.finish_reason or "cancelled"
+        return True
+
     def has_work(self) -> bool:
-        return bool(self.engine.queue or self.engine.active)
+        return bool(self.engine.queue or self.engine.active
+                    or getattr(self.engine, "_terminal", ()))
 
     def run_until_done(self, max_steps: int = 100_000) -> dict[int, list]:
         """Drain every queued request; returns {rid: tokens}."""
@@ -401,11 +443,21 @@ class LLM:
 
         per_sla = {}
         for k, v in sorted(by_sla.items()):
-            g_ttfts = [r.ttft for r in v if r.ttft is not None]
-            g_tok = sum(len(r.req.out) for r in v)
+            # goodput counts only work that completed within its budgets:
+            # tokens of cancelled/expired/failed requests were wasted
+            ok = [r for r in v if (r.outcome or "done") == "done"]
+            g_ttfts = [r.ttft for r in ok if r.ttft is not None]
+            g_tok = sum(len(r.req.out or ()) for r in ok)
             g_span = max(r.done_t for r in v) - min(r.submit_t for r in v)
+            outcomes: dict[str, int] = {}
+            for r in v:
+                o = r.outcome or "done"
+                outcomes[o] = outcomes.get(o, 0) + 1
             per_sla[k] = {
                 "requests": len(v),
+                "outcomes": outcomes,
+                "deadline_miss_rate": round(
+                    outcomes.get("expired", 0) / len(v), 4),
                 "ttft_mean_ms": round(
                     1e3 * sum(g_ttfts) / len(g_ttfts), 1)
                 if g_ttfts else None,

@@ -15,6 +15,7 @@ Single-step flow:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -39,6 +40,25 @@ class Request:
     #                             "batch"); when set the scheduler maps it
     #                             onto ``priority`` at submit
     out: Optional[list] = None
+    deadline_ms: Optional[float] = None      # end-to-end budget from
+    #                             submit; exceeded -> EXPIRED terminal
+    ttft_deadline_ms: Optional[float] = None  # first-token budget; only
+    #                             checked while no token has been emitted
+    submit_t: Optional[float] = None  # perf_counter at engine submit —
+    #                             the clock deadlines measure against
+    finish_reason: Optional[str] = None
+    # terminal state: "done" | "cancelled" | "expired" | "failed";
+    # None while in flight (docs/serving.md lifecycle state machine)
+
+    def deadline_exceeded(self, now: float) -> bool:
+        """Has either budget lapsed at wall-clock ``now``?"""
+        if self.submit_t is None:
+            return False
+        waited_ms = (now - self.submit_t) * 1e3
+        if self.deadline_ms is not None and waited_ms > self.deadline_ms:
+            return True
+        return (self.ttft_deadline_ms is not None and not self.out
+                and waited_ms > self.ttft_deadline_ms)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +80,12 @@ class ServingEngine:
         self.queue: list[Request] = []
         self.active: dict[int, Request] = {}      # slot -> request
         self.budget: dict[int, int] = {}          # slot -> remaining tokens
+        self._terminal: list[Request] = []        # aborted, not yet drained
+        self.fault_plan = None           # faults.FaultPlan (chaos tests):
+        #                                  consulted at the dense_prefill seam
+        self.fault_retries = 2           # re-queues granted per request
+        #                                  before a fault quarantines it
+        self._fault_counts: dict[int, int] = {}
         b, L = ecfg.max_batch, ecfg.max_len
 
         self._decode = jax.jit(
@@ -81,7 +107,47 @@ class ServingEngine:
 
     def submit(self, req: Request):
         req.out = []
+        if req.submit_t is None:
+            req.submit_t = time.perf_counter()
         self.queue.append(req)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _finish_abnormal(self, req: Request, outcome: str) -> None:
+        req.finish_reason = outcome
+        self._terminal.append(req)
+
+    def cancel(self, rid: int, *, outcome: str = "cancelled",
+               reason: str = "client") -> bool:
+        """Terminate a queued or in-flight request; frees its slot."""
+        for slot, req in list(self.active.items()):
+            if req.rid == rid:
+                del self.active[slot]
+                del self.budget[slot]
+                self.free.append(slot)
+                self._finish_abnormal(req, outcome)
+                return True
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                self._finish_abnormal(req, outcome)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        now = time.perf_counter()
+        expired = [r.rid for r in self.active.values()
+                   if r.deadline_exceeded(now)]
+        expired += [r.rid for r in self.queue if r.deadline_exceeded(now)]
+        for rid in expired:
+            self.cancel(rid, outcome="expired", reason="deadline")
+
+    def drain_terminal(self) -> list[Request]:
+        """Requests that ended abnormally since the last drain (the
+        caller closes their records; ``Request.finish_reason`` says how
+        they ended)."""
+        out, self._terminal = self._terminal, []
+        return out
 
     def _splice_slot(self, slot: int, cache_one, length: int, token: int):
         """Write a single prefilled sequence into the pool at ``slot``."""
@@ -94,8 +160,18 @@ class ServingEngine:
         self.last_token = self.last_token.at[slot, 0].set(token)
 
     def admit(self):
+        self._expire_deadlines()
         while self.free and self.queue:
             req = self.queue.pop(0)
+            if self.fault_plan is not None \
+                    and self.fault_plan.fire("dense_prefill"):
+                n = self._fault_counts.get(req.rid, 0) + 1
+                self._fault_counts[req.rid] = n
+                if n > self.fault_retries:
+                    self._finish_abnormal(req, "failed")
+                else:
+                    self.queue.append(req)     # bounded retry, back of line
+                continue
             slot = self.free.pop(0)
             t = len(req.prompt)
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
@@ -118,6 +194,7 @@ class ServingEngine:
                 del self.active[slot]
                 del self.budget[slot]
                 self.free.append(slot)
+                req.finish_reason = "done"
                 yield req
         if not self.active:
             return
@@ -142,6 +219,7 @@ class ServingEngine:
                 del self.active[slot]
                 del self.budget[slot]
                 self.free.append(slot)
+                req.finish_reason = "done"
                 yield req
 
     # -- driver -------------------------------------------------------------
@@ -155,6 +233,8 @@ class ServingEngine:
         while (self.queue or self.active) and steps < max_steps:
             self.admit()
             for fin in self.step() or ():
+                done[fin.rid] = fin.out
+            for fin in self.drain_terminal():
                 done[fin.rid] = fin.out
             steps += 1
         return done

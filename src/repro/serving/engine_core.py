@@ -49,7 +49,8 @@ from repro.obs import (NULL_TELEMETRY, DlzsAuditor, fold_snapshot,
                        fold_traffic, reconcile_refs)
 from repro.serving import swap_policy
 from repro.serving.engine import Request
-from repro.serving.scheduler import NeedPages, Scheduler, SchedulerCfg
+from repro.serving.scheduler import (SLA_DEADLINES_MS, ExecFault,
+                                     NeedPages, Scheduler, SchedulerCfg)
 from repro.serving.swap_policy import PrefillProgress as _PrefillProgress
 
 
@@ -108,6 +109,13 @@ class Backend(Protocol):
     def lookup_prefix(self, g: int, key: tuple) -> Optional[int]: ...
 
     def register_prefix(self, g: int, key: tuple, pid: int) -> None: ...
+
+    def forget_prefix(self, g: int, pid: int) -> None:
+        """Drop page ``pid``'s prefix-index entry (no-op when it was
+        never registered). Fault recovery: a batched prefill registers
+        fresh pages before the wave dispatch writes them (same-tick
+        dedup), so a dispatch failure must un-register those pages or a
+        later identical prompt would revive garbage."""
 
     def decref_page(self, g: int, pid: int) -> None: ...
 
@@ -242,6 +250,9 @@ class EngineCore:
         self._pf: dict[int, _PrefillProgress] = {}  # slots mid-prefill
         self._prefill_done: list[tuple[int, Request]] = []  # finished at
         #                              prefill (budget 0): reaped next decode
+        self._terminal: list[Request] = []  # aborted (cancelled/expired/
+        #                              failed) requests not yet drained
+        #                              through step()'s finished stream
         self.lengths = np.zeros((backend.max_batch,), np.int64)
         self.free = list(range(backend.max_batch))
 
@@ -278,6 +289,14 @@ class EngineCore:
         need = -(-total // self.backend.page_size)
         self.backend.check_capacity(req.rid, total, need)
         req.out = []
+        if req.submit_t is None:
+            req.submit_t = time.perf_counter()
+        if self.sched.cfg.sla_deadlines and req.sla is not None:
+            ttft_ms, e2e_ms = SLA_DEADLINES_MS.get(req.sla, (None, None))
+            if req.ttft_deadline_ms is None:
+                req.ttft_deadline_ms = ttft_ms
+            if req.deadline_ms is None:
+                req.deadline_ms = e2e_ms
         if self.tel.enabled:
             self.tel.timeline(req.rid, sla=getattr(req, "sla", None))
         self.sched.submit(req)
@@ -385,6 +404,7 @@ class EngineCore:
             del self.budget[slot]
             self.lengths[slot] = 0
             self.free.append(slot)
+            req.finish_reason = "done"
             self._prefill_done.append((slot, req))
             if self.tel.enabled:
                 self._stamp_done(req, "done")
@@ -407,6 +427,124 @@ class EngineCore:
             self.tel.metrics.histogram(
                 "engine_ttft_seconds",
                 "time to first token").observe(tl.ttft, sla=sla)
+
+    # -- lifecycle: cancellation / deadlines / quarantine --------------------
+
+    _ABNORMAL_EVENT = {"cancelled": "cancel", "expired": "deadline_expired",
+                       "failed": "quarantine"}
+
+    def _finish_abnormal(self, req: Request, outcome: str,
+                         reason: str) -> None:
+        """Stamp a terminal CANCELLED/EXPIRED/FAILED state. The request
+        joins ``_terminal`` so the next step() surfaces it through the
+        finished stream (the LLM front door closes its record there).
+        Aborts bump their own counter, NOT the finished/token counters —
+        per-SLA goodput only ever counts work that completed."""
+        req.finish_reason = outcome
+        self._terminal.append(req)
+        if not self.tel.enabled:
+            return
+        tl = self.tel.timeline(req.rid)
+        if tl.done_t is None:
+            tl.done_t = time.perf_counter()
+        tl.n_tokens = len(req.out or ())
+        tl.outcome = outcome
+        sla = getattr(req, "sla", None) or "default"
+        self.tel.metrics.counter(
+            "engine_requests_aborted_total",
+            "requests ended abnormally").inc(sla=sla, outcome=outcome)
+        self.tel.recorder.record(
+            self._ABNORMAL_EVENT[outcome], tick=self._tick_no,
+            rid=req.rid, reason=reason, tokens=len(req.out or ()))
+
+    def _teardown_slot(self, slot: int) -> Request:
+        """Release everything a bound slot holds: pending chunk pages,
+        the block table (COW-shared pages decref only — another owner
+        keeps them live), any lazy-shed swap payload, budget, length."""
+        req = self.active.pop(slot)
+        table = self.tables.pop(slot)
+        pf = self._pf.pop(slot, None)
+        swap_policy.release_pending(
+            pf, lambda pgs: self.backend.release_pages(pgs, len(table)))
+        self.backend.release_table(table)
+        self.swap_area.discard(req.rid)
+        self.budget.pop(slot, None)
+        self.lengths[slot] = 0
+        self.free.append(slot)
+        return req
+
+    def cancel(self, rid: int, *, outcome: str = "cancelled",
+               reason: str = "client") -> bool:
+        """Terminate a request wherever it is — mid-prefill, mid-decode,
+        waiting fresh, or fully swapped out. Frees every page it solely
+        owns (shared pages decref), discards parked payloads, stamps the
+        terminal timeline state. False when the rid is not in flight."""
+        for slot, req in list(self.active.items()):
+            if req.rid == rid:
+                self.sched.drop_running_slot(slot)
+                self._teardown_slot(slot)
+                self._finish_abnormal(req, outcome, reason)
+                return True
+        req = self.sched.drop_waiting(rid)
+        if req is not None:
+            payload = self.swap_area.discard(rid)
+            if payload:
+                # a parked sequence still holds refs on its shared pages
+                for j, pid in payload.get("kept", ()):
+                    self.backend.decref_page(j, pid)
+            self._finish_abnormal(req, outcome, reason)
+            return True
+        return False
+
+    def exec_abort(self, req: Request, outcome: str, reason: str) -> None:
+        """Scheduler-initiated terminal state for a NON-running request
+        (quarantine past the retry budget, admission shed)."""
+        payload = self.swap_area.discard(req.rid)
+        if payload:
+            for j, pid in payload.get("kept", ()):
+                self.backend.decref_page(j, pid)
+        self._finish_abnormal(req, outcome, reason)
+
+    def _expire_deadlines(self) -> None:
+        """Sweep TTFT/end-to-end budgets over everything in flight; runs
+        at the top of every step so an expired request never consumes
+        another tick's worth of pool or dispatch."""
+        now = time.perf_counter()
+        expired = [req.rid for req in self.active.values()
+                   if req.deadline_exceeded(now)]
+        expired += [w.req.rid for w in self.sched.waiting
+                    if w.req.deadline_exceeded(now)]
+        for rid in expired:
+            self.cancel(rid, outcome="expired", reason="deadline")
+
+    def _note_fault(self, slots, err: BaseException, where: str) -> None:
+        if not self.tel.enabled:
+            return
+        kind = "fault_injected" if getattr(err, "is_injected", False) \
+            else "fault"
+        self.tel.recorder.record(kind, tick=self._tick_no, where=where,
+                                 slots=list(slots),
+                                 error=type(err).__name__)
+        self.tel.metrics.counter(
+            "engine_faults_total",
+            "backend failures isolated to their requests").inc(
+            where=where)
+
+    def _purge_pending(self, slots) -> None:
+        """Roll every listed slot's batched-prefill cursor back to the
+        last committed chunk: un-register fresh pages phase A2 indexed
+        (their content never landed — the dispatch failed) and release
+        the pending allocation. The next attempt re-allocates cleanly."""
+        for slot in slots:
+            pf = self._pf.get(slot)
+            if pf is None or pf.pending is None:
+                continue
+            pages, fresh, _ = pf.pending
+            start_page = len(self.tables[slot])
+            for g in fresh:
+                self.backend.forget_prefix(g, pages[g - start_page])
+            self.backend.release_pages(pages, start_page)
+            pf.pending = None
 
     def exec_prefill_chunk(self, slot: int) -> bool:
         """Share/allocate + compute + scatter ONE chunk of ``slot``'s
@@ -433,12 +571,22 @@ class EngineCore:
         if fresh_globals or last:  # fully-shared middle chunks skip compute
             last_idx = (t - 1 if last else end - 1) - start
             kind = ("chunk", width)
-            with self.tel.tracer.span("prefill.chunk", slot=slot,
-                                      width=width,
-                                      compile=kind not in self._compiled):
-                logits = self.backend.dispatch_chunk(
-                    pf, table, start, end, width, last_idx, pages,
-                    fresh_globals)
+            try:
+                with self.tel.tracer.span(
+                        "prefill.chunk", slot=slot, width=width,
+                        compile=kind not in self._compiled):
+                    logits = self.backend.dispatch_chunk(
+                        pf, table, start, end, width, last_idx, pages,
+                        fresh_globals)
+            except NeedPages:
+                raise
+            except Exception as err:
+                # isolate to this request: its pages (all in the table
+                # by now, none prefix-registered yet — the sequential
+                # path registers after compute) fall with it in the
+                # recompute preemption the scheduler now issues
+                self._note_fault([slot], err, "prefill")
+                raise ExecFault([slot], err, "prefill") from err
             self._compiled.add(kind)
             if self.backend.share and pf.toks is not None:
                 self.backend.register_prompt_pages(pf.toks, table,
@@ -585,9 +733,22 @@ class EngineCore:
         logits_by_slot: dict[int, np.ndarray] = {}
         for i, wave in enumerate(waves):       # phase B: dispatch(es)
             first = "wave" not in self._compiled
-            with self.tel.tracer.span("prefill.dispatch", wave=i,
-                                      lanes=len(wave), compile=first):
-                self._dispatch_chunk_wave(wave, logits_by_slot)
+            try:
+                with self.tel.tracer.span("prefill.dispatch", wave=i,
+                                          lanes=len(wave), compile=first):
+                    self._dispatch_chunk_wave(wave, logits_by_slot)
+            except NeedPages:
+                raise
+            except Exception as err:
+                # nothing has committed (phase C never ran): roll every
+                # batch slot's pending cursor back — crucially
+                # un-registering the phase-A2 prefix entries whose page
+                # content this dispatch was supposed to write — and
+                # blame only the failing wave's slots; the rest repack
+                # and redispatch cleanly on the scheduler's retry
+                self._purge_pending(slots)
+                self._note_fault(wave, err, "prefill")
+                raise ExecFault(wave, err, "prefill") from err
             self._compiled.add("wave")
 
         done: list[int] = []
@@ -672,6 +833,12 @@ class EngineCore:
                         "engine_need_pages_total",
                         "pool-pressure signals raised").inc(where="decode")
                 raise
+            except Exception as err:
+                # the fused step blames every decode slot — each falls
+                # back to recompute replay (exact under greedy decode),
+                # so innocents still finish with identical output
+                self._note_fault(slots, err, "decode")
+                raise ExecFault(slots, err, "decode") from err
             done_early, self._prefill_done = self._prefill_done, []
             logits = logits[:, :self.cfg.vocab]
             if self.backend.greedy:
@@ -733,6 +900,7 @@ class EngineCore:
                 del self.budget[slot]
                 self.lengths[slot] = 0
                 self.free.append(slot)
+                req.finish_reason = "done"
                 finished.append((slot, req))
                 if tel_on:
                     self._stamp_done(req, "done")
@@ -885,26 +1053,44 @@ class EngineCore:
             return None
         filled, upload = plan
         state = self.swap_area.take(req.rid)   # committed: pages acquired
+        for j, pid in state["kept"]:
+            filled[j] = pid
         slot = self.free.pop(0)
-        with self.tel.tracer.span("swap_in", rid=req.rid, slot=slot,
-                                  uploads=len(upload)):
-            for j, pid in state["kept"]:
-                filled[j] = pid
-            pages = [filled[j] for j in range(state["n_pages"])]
-            if upload:
-                self.backend.upload_park(
-                    state["rows"],
-                    [(pos, park[pos], pid) for pos, pid in upload])
-            self.tables[slot] = pages
-            self.active[slot] = req
-            pf = swap_policy.restore_progress(state)
-            if pf is not None:
-                self._pf[slot] = pf
-                self.lengths[slot] = 0
-            else:
-                self.lengths[slot] = state["length"]
-                self.backend.set_last_token(slot, state["last_token"])
-                self.budget[slot] = state["budget"]
+        try:
+            with self.tel.tracer.span("swap_in", rid=req.rid, slot=slot,
+                                      uploads=len(upload)):
+                pages = [filled[j] for j in range(state["n_pages"])]
+                if upload:
+                    self.backend.upload_park(
+                        state["rows"],
+                        [(pos, park[pos], pid) for pos, pid in upload])
+                self.tables[slot] = pages
+                self.active[slot] = req
+                pf = swap_policy.restore_progress(state)
+                if pf is not None:
+                    self._pf[slot] = pf
+                    self.lengths[slot] = 0
+                else:
+                    self.lengths[slot] = state["length"]
+                    self.backend.set_last_token(slot,
+                                                state["last_token"])
+                    self.budget[slot] = state["budget"]
+        except Exception as err:
+            # failed restore (e.g. corrupt payload at upload): the swap
+            # entry is already consumed, so drop EVERY page the sequence
+            # held — plan-acquired and kept alike — free the slot, and
+            # let the scheduler fall back to recompute from the prompt
+            # plus already-emitted tokens (exact under greedy decode)
+            for j, pid in filled.items():
+                self.backend.decref_page(j, pid)
+            self.tables.pop(slot, None)
+            self.active.pop(slot, None)
+            self._pf.pop(slot, None)
+            self.budget.pop(slot, None)
+            self.lengths[slot] = 0
+            self.free.append(slot)
+            self._note_fault([], err, "swap_in")
+            raise ExecFault([], err, "swap_in", rid=req.rid) from err
         if self.tel.enabled:
             tl = self.tel.timeline(req.rid)
             tl.resume_ts.append(time.perf_counter())
@@ -930,16 +1116,53 @@ class EngineCore:
 
     def step(self) -> list[Request]:
         """One scheduler tick: admit / one-or-more prefill chunks / fused
-        decode. Returns the requests that finished this step."""
-        if not self.tel.enabled:
-            return self.sched.tick(self)
-        with self.tel.tracer.span("tick", n=self._tick_no):
-            fin = self.sched.tick(self)
-        self._tick_no += 1
-        self._sync_metrics()
-        if self.auditor.due(self._tick_no):
-            self._run_audit()
+        decode. Returns the requests that finished this step (normally or
+        abnormally — check ``Request.finish_reason``). An exception that
+        escapes the scheduler is ENGINE-level (per-request faults are
+        contained inside the tick): the engine drains — every in-flight
+        request fails terminally so no caller blocks forever — and then
+        re-raises."""
+        self._expire_deadlines()
+        try:
+            if not self.tel.enabled:
+                fin = self.sched.tick(self)
+            else:
+                with self.tel.tracer.span("tick", n=self._tick_no):
+                    fin = self.sched.tick(self)
+        except Exception as e:
+            self._drain(e)
+            raise
+        finally:
+            self._tick_no += 1
+        if self._terminal:
+            fin = list(fin) + self._terminal
+            self._terminal = []
+        if self.tel.enabled:
+            self._sync_metrics()
+            if self.auditor.due(self._tick_no):
+                self._run_audit()
         return fin
+
+    def _drain(self, cause: BaseException) -> None:
+        """Degraded-mode recovery from an engine-level failure: fail every
+        in-flight and waiting request terminally (best effort — teardown
+        errors are swallowed; the original ``cause`` is what propagates)
+        so callers observe FAILED instead of hanging."""
+        if self.tel.enabled:
+            self.tel.recorder.record(
+                "drain", tick=self._tick_no, error=repr(cause)[:200],
+                n_active=len(self.active),
+                n_waiting=len(self.sched.waiting))
+            self.tel.metrics.counter(
+                "engine_drains_total",
+                "engine-level failures that drained all requests").inc()
+        rids = [req.rid for req in self.active.values()]
+        rids += [w.req.rid for w in self.sched.waiting]
+        for rid in rids:
+            try:
+                self.cancel(rid, outcome="failed", reason="drain")
+            except Exception:
+                pass
 
     def _run_audit(self) -> None:
         """Sampled DLZS prediction audit: run the backend's exact-
@@ -962,7 +1185,8 @@ class EngineCore:
         reg = self.tel.metrics
         st = self.sched.stats
         for field in ("preemptions", "swap_outs", "recomputes",
-                      "resumes", "sheds"):
+                      "resumes", "sheds", "faults", "fault_retries",
+                      "quarantines", "admission_sheds"):
             cur = getattr(st, field)
             delta = cur - self._sched_seen.get(field, 0)
             if delta > 0:

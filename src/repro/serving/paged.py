@@ -294,6 +294,9 @@ class PagedBackend:
     def decref_page(self, g: int, pid: int) -> None:
         self.pool.decref(pid)
 
+    def forget_prefix(self, g: int, pid: int) -> None:
+        self.pool.forget(pid)
+
     def register_prompt_pages(self, toks, table, fresh_globals,
                               start_page: int) -> None:
         page = self.page_size

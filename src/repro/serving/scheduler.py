@@ -45,6 +45,7 @@ from typing import Optional, Protocol, Union
 from repro.kvcache.bucketing import pack_budget
 from repro.obs import NULL_TELEMETRY
 from repro.serving.engine import Request
+from repro.serving.swap_policy import RetryGovernor
 
 
 class NeedPages(RuntimeError):
@@ -63,10 +64,45 @@ class NeedPages(RuntimeError):
         self.shard = shard
 
 
+class ExecFault(RuntimeError):
+    """Executor signal: an exec_* call failed on a per-request basis.
+
+    Raised by the engine when a backend seam throws something that is
+    NOT pool pressure (``NeedPages``) — a dispatch exception, a swap
+    payload that would not upload. Engine state has already been rolled
+    back to a consistent point; the scheduler decides what happens to
+    the blamed requests: bounded retry-with-recompute (the existing
+    recompute fallback, governed by ``swap_policy.RetryGovernor``) or
+    quarantine into the FAILED terminal state via ``exec_abort``. The
+    whole engine never unwinds for a per-request fault.
+
+    ``slots`` are the running slots the fault is attributed to (a fused
+    decode blames every decode slot — recompute replay is exact under
+    greedy decode, so innocents still finish correctly). ``rid`` is set
+    instead when the victim was not running (a failed swap-in).
+    """
+
+    def __init__(self, slots, cause: BaseException, where: str,
+                 rid: Optional[int] = None):
+        super().__init__(f"executor fault in {where}: {cause!r}")
+        self.slots = list(slots)
+        self.cause = cause
+        self.where = where
+        self.rid = rid
+
+
 # SLA classes: the external QoS input mapped onto Request.priority.
 # Higher priority = admitted first, preempted last; the numeric gaps leave
 # room for finer-grained levels without renumbering.
 SLA_PRIORITY = {"batch": -10, "standard": 0, "interactive": 10}
+
+# Default (ttft_ms, e2e_ms) deadline budgets per SLA class, applied at
+# submit when ``SchedulerCfg.sla_deadlines`` is on and the request did not
+# pin its own. Batch traffic is deliberately unbounded — it is the tier
+# admission shedding sacrifices instead.
+SLA_DEADLINES_MS = {"interactive": (1_000.0, 10_000.0),
+                    "standard": (5_000.0, 30_000.0),
+                    "batch": (None, None)}
 
 
 def sla_priority(sla: str) -> int:
@@ -76,6 +112,24 @@ def sla_priority(sla: str) -> int:
         raise ValueError(
             f"unknown SLA class {sla!r}: choose from "
             f"{sorted(SLA_PRIORITY)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionCfg:
+    """SLA-aware admission shedding with hysteresis.
+
+    When the waiting backlog crosses ``high_watermark`` the scheduler
+    starts rejecting fresh best-effort arrivals (priority strictly below
+    ``shed_below_priority`` — the SLA map puts "batch" at -10, so the
+    default sheds batch but never standard/interactive) until the
+    backlog falls to ``low_watermark``. Hysteresis keeps the decision
+    stable: one threshold would flap on/off every tick at the boundary.
+    Only never-started fresh requests are shed — preempted or swapped
+    work already holds progress and always re-enters.
+    """
+    high_watermark: int = 8
+    low_watermark: int = 2
+    shed_below_priority: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +190,17 @@ class SchedulerCfg:
     #                                  on gather. None = fp-only slabs
     #                                  (bit-identical dense default);
     #                                  "int8" enables the tier.
+    fault_retries: int = 2           # per-request fault budget: recompute
+    #                                  retries granted before quarantine
+    #                                  into the FAILED terminal state
+    fault_backoff_ticks: int = 1     # retry delay grows linearly with the
+    #                                  attempt number, in scheduler ticks
+    admission: Optional[AdmissionCfg] = None
+    # overload shedding policy; None (default) admits everything — the
+    # pre-robustness behavior (overload degrades, never rejects)
+    sla_deadlines: bool = False      # apply SLA_DEADLINES_MS defaults at
+    #                                  submit to requests that did not pin
+    #                                  their own deadline budgets
 
 
 @dataclasses.dataclass
@@ -146,6 +211,12 @@ class SchedStats:
     resumes: int = 0
     sheds: int = 0                   # lazy cold-page swaps (victim kept
     #                                  running; not counted as preemptions)
+    faults: int = 0                  # per-request executor faults isolated
+    fault_retries: int = 0           # faults answered with a recompute retry
+    quarantines: int = 0             # faults that exhausted the retry
+    #                                  budget (FAILED terminal state)
+    admission_sheds: int = 0         # fresh best-effort arrivals rejected
+    #                                  by overload admission control
 
 
 AUTO_PREFILL_CHUNKS = 6   # "auto": the compiled dispatch buffer holds up
@@ -258,7 +329,15 @@ class Executor(Protocol):
 
     def exec_swap_in(self, req: Request) -> Optional[int]:
         """Restore a swapped sequence into a free slot; None when the pool
-        cannot hold its pages right now (caller retries next tick)."""
+        cannot hold its pages right now (caller retries next tick). May
+        raise ExecFault (payload would not restore — the engine already
+        dropped its pages; the scheduler falls back to recompute)."""
+
+    def exec_abort(self, req: Request, outcome: str, reason: str) -> None:
+        """Move a NON-running request to a terminal state (``outcome`` is
+        "failed" for a quarantine, "cancelled" for an admission shed).
+        The engine discards any parked swap payload and surfaces the
+        request through its finished stream."""
 
 
 @dataclasses.dataclass
@@ -267,6 +346,8 @@ class _Waiting:
     seqno: int                  # admission-order tiebreak (stable across
     #                             preemption, so resumed work keeps rank)
     swapped: bool = False       # payload parked in the engine's SwapArea
+    not_before: int = 0         # fault backoff: earliest tick this item
+    #                             may be admitted again
 
     @property
     def key(self):
@@ -287,9 +368,13 @@ class Scheduler:
         self.running: dict[int, _Running] = {}     # slot -> state
         self.stats = SchedStats()
         self._seqno = 0
+        self._tick = 0
         self._resumed_tick: set[int] = set()
         self._pf_wait: dict[int, int] = {}   # prefill slot -> ticks since
         #                                      its last chunk (aging)
+        self._retry = RetryGovernor(max_retries=cfg.fault_retries,
+                                    backoff_ticks=cfg.fault_backoff_ticks)
+        self._shedding = False       # admission-control hysteresis state
         self.budget_ctl: Optional[BudgetController] = None
         self._budget_warm = False    # first batched phase pays the XLA
         #                              compile: never feed it to the EMA
@@ -332,9 +417,30 @@ class Scheduler:
     def queued_requests(self) -> list[Request]:
         return [w.req for w in sorted(self.waiting, key=lambda w: w.key)]
 
+    def drop_waiting(self, rid: int) -> Optional[Request]:
+        """Remove a waiting request (cancellation/expiry); returns it, or
+        None when no such rid waits. The caller owns any swap payload."""
+        for w in self.waiting:
+            if w.req.rid == rid:
+                self.waiting.remove(w)
+                self._retry.forget(rid)
+                return w.req
+        return None
+
+    def drop_running_slot(self, slot: int) -> Optional[Request]:
+        """Forget a running slot (the engine tears the slot itself down —
+        cancellation/expiry path); returns its request, or None."""
+        st = self.running.pop(slot, None)
+        self._pf_wait.pop(slot, None)
+        if st is None:
+            return None
+        self._retry.forget(st.req.rid)
+        return st.req
+
     # -- one engine step ----------------------------------------------------
 
     def tick(self, ex: Executor) -> list[Request]:
+        self._tick += 1
         self._resumed_tick.clear()
         if not self.tel.enabled:
             self._admit_phase(ex)
@@ -353,10 +459,20 @@ class Scheduler:
     # admissions so big preempted sequences cannot starve behind a stream
     # of small fresh ones.
     def _admit_phase(self, ex: Executor) -> None:
-        while self.waiting and ex.free_slot_available():
-            item = min(self.waiting, key=lambda w: w.key)
+        if self.cfg.admission is not None:
+            self._admission_control(ex)
+        while ex.free_slot_available():
+            ready = [w for w in self.waiting
+                     if w.not_before <= self._tick]
+            if not ready:
+                return
+            item = min(ready, key=lambda w: w.key)
             if item.swapped:
-                slot = ex.exec_swap_in(item.req)
+                try:
+                    slot = ex.exec_swap_in(item.req)
+                except ExecFault as e:
+                    self._fault_waiting(ex, item, e)
+                    continue
                 if slot is None:
                     return                         # retry next tick
                 # a swapped prefill resumes mid-chunk-sequence
@@ -374,6 +490,85 @@ class Scheduler:
     @staticmethod
     def _swapped_phase(ex: Executor, slot: int) -> str:
         return "prefill" if ex.prefill_chunks_left(slot) > 0 else "decode"
+
+    # -- overload admission control ------------------------------------------
+
+    def _admission_control(self, ex: Executor) -> None:
+        """Hysteresis-gated shedding of fresh best-effort arrivals: shed
+        lowest-priority-newest-first until the backlog reaches the low
+        watermark (or nothing eligible remains). Runs once per tick at
+        admit start, so the watermark decision sees the full backlog."""
+        acfg = self.cfg.admission
+        backlog = len(self.waiting)
+        if not self._shedding and backlog >= acfg.high_watermark:
+            self._shedding = True
+        elif self._shedding and backlog <= acfg.low_watermark:
+            self._shedding = False
+        if not self._shedding:
+            return
+        cands = sorted((w for w in self.waiting
+                        if not w.swapped and not (w.req.out or ())
+                        and w.req.priority < acfg.shed_below_priority),
+                       key=lambda w: (w.req.priority, -w.seqno))
+        for w in cands:
+            if len(self.waiting) <= acfg.low_watermark:
+                break
+            self.waiting.remove(w)
+            self.stats.admission_sheds += 1
+            ex.exec_abort(w.req, "cancelled", "admission_shed")
+
+    # -- per-request fault isolation -----------------------------------------
+
+    def _fault_waiting(self, ex: Executor, item: _Waiting,
+                       e: ExecFault) -> None:
+        """A swap-in failed: the engine already dropped the payload and
+        its pages, so the item either retries as a recompute (its request
+        still carries prompt + emitted tokens) or quarantines."""
+        self.stats.faults += 1
+        rid = item.req.rid
+        delay = self._retry.record_fault(rid)
+        if delay is None:
+            self.waiting.remove(item)
+            self.stats.quarantines += 1
+            ex.exec_abort(item.req, "failed",
+                          f"{e.where}:{type(e.cause).__name__}")
+            return
+        item.swapped = False
+        item.not_before = self._tick + delay
+        self.stats.fault_retries += 1
+        if self.tel.enabled:
+            self.tel.recorder.record(
+                "retry", rid=rid, where=e.where,
+                attempt=self._retry.attempts(rid), delay=delay)
+
+    def _fault_slots(self, ex: Executor, e: ExecFault) -> None:
+        for slot in e.slots:
+            self._fault_slot(ex, slot, e)
+
+    def _fault_slot(self, ex: Executor, slot: int, e: ExecFault) -> None:
+        """Quarantine-or-retry for a running slot: drop its pages (the
+        recompute preemption path — NOT counted as a preemption) and
+        requeue after a backoff, or abort once the budget is spent."""
+        st = self.running.pop(slot, None)
+        if st is None:
+            return
+        self._pf_wait.pop(slot, None)
+        self.stats.faults += 1
+        rid = st.req.rid
+        delay = self._retry.record_fault(rid)
+        ex.exec_preempt(slot, False)       # release pages for recompute
+        if delay is None:
+            self.stats.quarantines += 1
+            ex.exec_abort(st.req, "failed",
+                          f"{e.where}:{type(e.cause).__name__}")
+            return
+        self.stats.fault_retries += 1
+        self.waiting.append(_Waiting(st.req, st.seqno, swapped=False,
+                                     not_before=self._tick + delay))
+        if self.tel.enabled:
+            self.tel.recorder.record(
+                "retry", rid=rid, slot=slot, where=e.where,
+                attempt=self._retry.attempts(rid), delay=delay)
 
     # Phase 2: shortest-remaining-prefill-first within a priority level —
     # the chunk policy that minimizes short-request TTFT under mixed
@@ -424,6 +619,9 @@ class Scheduler:
             try:
                 if ex.exec_prefill_chunk(slot):
                     self.running[slot].phase = "decode"
+            except ExecFault as e:
+                self._fault_slots(ex, e)
+                continue
             except NeedPages as e:
                 if self._try_shed(ex, needy=slot, shard=e.shard):
                     budget += 1                    # retry the same slot
@@ -455,6 +653,11 @@ class Scheduler:
             batch = pack_budget(widths, self.prefill_budget())
             try:
                 done = ex.exec_prefill_chunk_batch(batch)
+            except ExecFault as e:
+                # the engine purged every pending cursor in the batch;
+                # blamed slots retry-or-quarantine, the rest repack clean
+                self._fault_slots(ex, e)
+                continue
             except NeedPages as e:
                 if self._try_shed(ex, needy=e.slot, shard=e.shard):
                     continue
@@ -502,6 +705,12 @@ class Scheduler:
             try:
                 finished = ex.exec_decode()
                 break
+            except ExecFault as e:
+                self._fault_slots(ex, e)
+                if not any(st.phase == "decode"
+                           for st in self.running.values()):
+                    return []
+                continue
             except NeedPages as e:
                 if self._try_shed(ex, needy=e.slot, shard=e.shard):
                     continue
@@ -515,6 +724,8 @@ class Scheduler:
         out = []
         for slot, req in finished:
             del self.running[slot]
+            self._retry.forget(req.rid)    # a clean finish clears the
+            #                                request's fault budget
             out.append(req)
         return out
 

@@ -153,6 +153,47 @@ def plan_page_in(park: Sequence[int], toks: Optional[tuple],
 
 
 # ---------------------------------------------------------------------------
+# Bounded fault retry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RetryGovernor:
+    """Counted, backoff-governed retry policy for per-request faults.
+
+    The engine's recompute fallback (drop pages, replay prompt + emitted
+    tokens through prefill) can recover from any per-request failure —
+    but unbounded it turns a persistent fault into an infinite retry
+    loop. The governor counts faults per request id: each fault within
+    ``max_retries`` grants another recompute attempt after a linearly
+    growing delay (``backoff_ticks * attempt`` scheduler ticks — a
+    transient fault clears while the request waits, a correlated one
+    stops thrashing the pool); past the budget the request is
+    quarantined into the FAILED terminal state. A request that finishes
+    normally has its count forgotten, so a long-lived server does not
+    slowly exhaust every rid's budget.
+    """
+
+    max_retries: int = 2
+    backoff_ticks: int = 1
+    counts: dict = dataclasses.field(default_factory=dict)
+
+    def record_fault(self, rid: int) -> Optional[int]:
+        """Count one fault against ``rid``. Returns the retry delay in
+        ticks, or None when the budget is exhausted (quarantine)."""
+        n = self.counts.get(rid, 0) + 1
+        self.counts[rid] = n
+        if n > self.max_retries:
+            return None
+        return self.backoff_ticks * n
+
+    def attempts(self, rid: int) -> int:
+        return self.counts.get(rid, 0)
+
+    def forget(self, rid: int) -> None:
+        self.counts.pop(rid, None)
+
+
+# ---------------------------------------------------------------------------
 # Lazy cold-page swap
 # ---------------------------------------------------------------------------
 

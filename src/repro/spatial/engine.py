@@ -293,6 +293,9 @@ class SpatialBackend:
     def decref_page(self, g: int, pid: int) -> None:
         self.pools.pools[self.topo.owner(g)].decref(pid)
 
+    def forget_prefix(self, g: int, pid: int) -> None:
+        self.pools.pools[self.topo.owner(g)].forget(pid)
+
     def register_prompt_pages(self, toks, table, fresh_globals,
                               start_page: int) -> None:
         self.pools.register_prompt_pages(toks, table, fresh_globals)

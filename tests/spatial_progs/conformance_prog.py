@@ -5,13 +5,16 @@ through the ``LLM`` front door. Includes the shed-under-pressure
 scenario: with ``lazy_swap`` the sharded pools must shed DLZS-cold
 ref-1 pages (via the shared EngineCore path) without full preemption.
 
-argv[1] = shard count. Prints CONFORMANCE_OK on success.
+argv[1] = shard count; argv[2] = scenario set ("all" — the default
+tier-1 conformance run — or "chaos" for the fault-injection/lifecycle
+scenarios the CI chaos job drives). Prints CONFORMANCE_OK on success.
 """
 
 import os
 import sys
 
 N_SHARDS = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+MODE = sys.argv[2] if len(sys.argv) > 2 else "all"
 os.environ["XLA_FLAGS"] = \
     f"--xla_force_host_platform_device_count={N_SHARDS}"
 _HERE = os.path.dirname(__file__)
@@ -40,6 +43,7 @@ def make_llm(*, max_batch, pages, hot, scfg, recent=2):
 
 
 bp = scen.BACKEND_PARAMS[f"spatial{N_SHARDS}"]
-scen.run_all(make_llm, cfg, params, bp,
-             log=lambda m: print(f"[{N_SHARDS} shards] {m}"))
+runner = scen.run_chaos if MODE == "chaos" else scen.run_all
+runner(make_llm, cfg, params, bp,
+       log=lambda m: print(f"[{N_SHARDS} shards] {m}"))
 print("CONFORMANCE_OK")

@@ -16,11 +16,13 @@ import subprocess
 import sys
 
 import jax
+import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import lm
-from repro.serving import LLM, PagedEngineCfg, PagedServingEngine
+from repro.serving import (EngineCfg, FaultPlan, LLM, PagedEngineCfg,
+                           PagedServingEngine, ServingEngine)
 
 import engine_core_scenarios as scen
 
@@ -63,3 +65,66 @@ def test_spatial_backend_conformance(n_shards):
         f"conformance_prog failed:\nSTDOUT:{out.stdout}\n" \
         f"STDERR:{out.stderr[-3000:]}"
     assert "CONFORMANCE_OK" in out.stdout
+
+
+# --------------------------------------------------------------- chaos
+
+@pytest.mark.parametrize("scenario", scen.CHAOS_SCENARIOS,
+                         ids=lambda s: s.__name__)
+def test_paged_backend_chaos(smoke_lm, scenario):
+    """Fault-injection + lifecycle conformance on the paged backend
+    (deterministic seam schedule, seeded storm, cancel/deadline)."""
+    cfg, params = smoke_lm
+    scenario(_paged_factory(cfg, params), cfg, params,
+             scen.BACKEND_PARAMS["paged"])
+
+
+def test_spatial_backend_chaos():
+    """The same chaos scenario set on a 2-shard fake-device mesh."""
+    out = subprocess.run(
+        [sys.executable, str(PROGS / "conformance_prog.py"), "2",
+         "chaos"],
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, \
+        f"conformance_prog chaos failed:\nSTDOUT:{out.stdout}\n" \
+        f"STDERR:{out.stderr[-3000:]}"
+    assert "CONFORMANCE_OK" in out.stdout
+
+
+def test_dense_backend_chaos(smoke_lm):
+    """The dense slot engine's slice of the robustness surface: the
+    dense_prefill fault seam requeues within the retry budget then
+    quarantines; cancel + a zero deadline terminate without disturbing
+    co-resident requests."""
+    cfg, params = smoke_lm
+
+    def mk():
+        return LLM(ServingEngine(cfg, params,
+                                 EngineCfg(max_batch=2, max_len=64,
+                                           eos_id=-1)))
+
+    # fault at admit: one requeue granted, then quarantine
+    llm = mk()
+    llm.engine.fault_plan = FaultPlan(schedule={"dense_prefill": {0, 2}})
+    llm.engine.fault_retries = 1
+    bad = llm.submit(np.arange(8, dtype=np.int32), max_tokens=4, rid=0)
+    ok = llm.submit(np.arange(5, dtype=np.int32), max_tokens=4, rid=1)
+    llm.run_until_done()
+    assert bad.done and bad.outcome == "failed" and bad.tokens == []
+    assert ok.outcome == "done" and len(ok.tokens) == 4
+    assert llm.engine.fault_plan.fired() == 2
+
+    # cancel mid-decode + deadline expiry in queue
+    llm = mk()
+    a = llm.submit(np.arange(8, dtype=np.int32), max_tokens=8, rid=0)
+    b = llm.submit(np.arange(6, dtype=np.int32), max_tokens=8, rid=1,
+                   deadline_ms=0.0)
+    llm.tick()
+    llm.tick()
+    assert a.cancel() and not a.cancel()
+    llm.run_until_done()
+    assert a.outcome == "cancelled" and b.outcome == "expired"
+    assert not llm.engine.active and len(llm.engine.free) == 2
+    m = llm.metrics()
+    assert m["per_sla"]["default"]["outcomes"] == \
+        {"cancelled": 1, "expired": 1}

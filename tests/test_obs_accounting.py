@@ -255,12 +255,11 @@ class TestBenchGate:
         fresh["decode_sparse"]["width_16"]["agreement"] = 0.5   # tight
         fresh["engine_core"]["decode_compiles"] = 2             # strict
         fresh["decode_sparse"]["dense"]["decode_tok_s"] = 100.0  # timing
-        del fresh["decode_sparse"]["page_rich"]                 # missing
         v = gate.diff(BASE, fresh)
         assert v["verdict"] == "fail"
         joined = "\n".join(v["failures"])
         assert "agreement" in joined and "decode_compiles" in joined
-        assert "decode_tok_s" in joined and "page_rich" in joined
+        assert "decode_tok_s" in joined
 
     def test_tolerated_drift_passes_with_warnings(self):
         gate = _tool("bench_gate")
@@ -268,10 +267,26 @@ class TestBenchGate:
         fresh["engine_core"]["preemptions"] = 4      # count band (abs 3)
         fresh["decode_sparse"]["dense"]["decode_tok_s"] = 700.0  # <2x
         fresh["engine_core"]["wall_s"] = 99.0        # skip tier
-        fresh["engine_core"]["new_metric_frac"] = 0.5  # extra leaf
         v = gate.diff(BASE, fresh)
         assert v["verdict"] == "pass", v["failures"]
-        assert any("new_metric_frac" in w for w in v["warnings"])
+
+    def test_one_sided_keys_skip_instead_of_fail(self):
+        """A leaf present on only one side — a suite scoped out of the
+        fresh run, or a new metric not yet baselined — is a SKIP-tier
+        verdict entry, never a failure: adding a bench entry must not
+        break the gate in the PR that introduces it."""
+        gate = _tool("bench_gate")
+        fresh = json.loads(json.dumps(BASE))
+        del fresh["decode_sparse"]["page_rich"]          # baseline-only
+        fresh["engine_core"]["new_metric_frac"] = 0.5    # fresh-only
+        fresh["robustness"] = {"goodput_tok_s": 12.0}    # new suite
+        v = gate.diff(BASE, fresh)
+        assert v["verdict"] == "pass", v["failures"]
+        joined = "\n".join(v["skips"])
+        assert "page_rich" in joined and "new_metric_frac" in joined
+        assert "robustness" in joined
+        # skipped leaves are not counted as checked
+        assert v["checked"] == len(gate.leaves(BASE)) - 2
 
     def test_cli_exit_codes(self, tmp_path):
         gate = _tool("bench_gate")

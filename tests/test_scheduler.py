@@ -7,9 +7,11 @@ import pytest
 from repro.kvcache import SwapArea
 from repro.kvcache import paged_attention as pa
 from repro.serving import Request
-from repro.serving.scheduler import (AUTO_PREFILL_CHUNKS, BudgetController,
-                                     NeedPages, Scheduler, SchedulerCfg,
+from repro.serving.scheduler import (AUTO_PREFILL_CHUNKS, AdmissionCfg,
+                                     BudgetController, ExecFault, NeedPages,
+                                     Scheduler, SchedulerCfg,
                                      resolve_prefill_tokens, sla_priority)
+from repro.serving.swap_policy import RetryGovernor
 
 
 class FakeEngine:
@@ -518,6 +520,149 @@ def test_prefill_tokens_auto_resolution_and_scheduler_wiring():
     assert {r.rid for r in done} == {0, 1, 2, 3}
     # the controller saw real tick observations and stayed in bounds
     assert 16 <= sched.budget_ctl.budget <= 64
+
+
+class AbortLogFakeEngine(FakeEngine):
+    """FakeEngine recording the terminal aborts the scheduler issues
+    (quarantines and admission sheds)."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.aborts: list[tuple[int, str, str]] = []
+
+    def exec_abort(self, req, outcome, reason):
+        self.aborts.append((req.rid, outcome, reason))
+
+
+class FailingSwapInFakeEngine(AbortLogFakeEngine):
+    """Swap-in fails ``fail_swap_ins`` times; the parked payload is
+    discarded on failure (the real engine's rollback contract), so the
+    scheduler's only road back is recompute-from-prompt."""
+
+    def __init__(self, *a, fail_swap_ins=1, **kw):
+        super().__init__(*a, **kw)
+        self.fail_swap_ins = fail_swap_ins
+
+    def exec_swap_in(self, req):
+        if self.fail_swap_ins > 0:
+            self.fail_swap_ins -= 1
+            self.swapped.pop(req.rid)          # payload already discarded
+            self.log.append(("swap_in_fault", req.rid))
+            raise ExecFault([], RuntimeError("payload corrupt"),
+                            "swap_in", rid=req.rid)
+        return super().exec_swap_in(req)
+
+
+class DecodeFaultFakeEngine(AbortLogFakeEngine):
+    """Decode always dies on ``bad_rid``'s slot — the unrecoverable-
+    request case that must exhaust the retry budget and quarantine."""
+
+    def __init__(self, *a, bad_rid=0, **kw):
+        super().__init__(*a, **kw)
+        self.bad_rid = bad_rid
+
+    def exec_decode(self):
+        for slot, st in self.state.items():
+            if (st["req"].rid == self.bad_rid
+                    and self.prefill_chunks_left(slot) == 0):
+                raise ExecFault([slot], RuntimeError("nan"), "decode")
+        return super().exec_decode()
+
+
+def test_retry_governor_budget_and_backoff():
+    """The fault budget is exact: ``max_retries`` linearly-backed-off
+    retries, then None (quarantine); a clean finish resets the count."""
+    gov = RetryGovernor(max_retries=2, backoff_ticks=3)
+    assert gov.record_fault(7) == 3              # attempt 1
+    assert gov.attempts(7) == 1
+    assert gov.record_fault(7) == 6              # attempt 2
+    assert gov.record_fault(7) is None           # budget spent
+    gov.forget(7)
+    assert gov.attempts(7) == 0
+    assert gov.record_fault(7) == 3              # budget restored
+
+
+def test_scheduler_failed_swap_in_falls_back_to_recompute_once():
+    """A failed page-in consumes exactly one retry: the request re-enters
+    as a recompute (fresh admit, page table rebuilt from the prompt),
+    completes, and no page or parked payload leaks."""
+    # the blocked-swap-in topology: rid 1 is swapped out under pressure
+    # and must come back — here its one page-in attempt fails
+    ex = FailingSwapInFakeEngine(capacity=4, slots=2,
+                                 chunks={0: 2, 1: 1, 2: 1},
+                                 decode_steps={0: 2, 1: 3, 2: 1},
+                                 fail_swap_ins=1)
+    sched = Scheduler(SchedulerCfg(swap=True, fault_retries=2))
+    for rid in (0, 1, 2):
+        sched.submit(_req(rid))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {0, 1, 2}
+    assert ("preempt", 1, True) in ex.log        # parked under pressure...
+    assert ("swap_in_fault", 1) in ex.log        # ...page-in failed...
+    admits = [e for e in ex.log if e == ("admit", 1)]
+    assert len(admits) == 2                      # ...recompute re-admit
+    assert sched.stats.faults == 1
+    assert sched.stats.fault_retries == 1        # exactly one retry spent
+    assert sched.stats.quarantines == 0 and not ex.aborts
+    # watchdog clean: nothing running, parked, or holding pages
+    assert not ex.pages and not ex.state and not ex.swapped
+    assert not sched._retry.counts               # clean finish forgets
+
+
+def test_scheduler_fault_budget_exhaustion_quarantines():
+    """An unrecoverable request gets exactly ``fault_retries`` recompute
+    retries, then quarantines into FAILED via exec_abort — co-resident
+    requests finish undisturbed and no pages leak."""
+    ex = DecodeFaultFakeEngine(capacity=100, slots=2,
+                               chunks={0: 1, 1: 1},
+                               decode_steps={0: 2, 1: 4}, bad_rid=0)
+    sched = Scheduler(SchedulerCfg(fault_retries=2, fault_backoff_ticks=1))
+    sched.submit(_req(0))
+    sched.submit(_req(1))
+    done = _drain(sched, ex)
+    assert {r.rid for r in done} == {1}          # survivor unaffected
+    admits = [e for e in ex.log if e == ("admit", 0)]
+    assert len(admits) == 1 + 2                  # initial + retry budget
+    assert sched.stats.fault_retries == 2
+    assert sched.stats.quarantines == 1
+    assert ex.aborts == [(0, "failed", "decode:RuntimeError")]
+    # the fault path drops pages via the recompute preemption (not
+    # counted as a scheduler preemption) — nothing leaks
+    assert sched.stats.preemptions == 0
+    assert not ex.pages and not ex.state and not ex.swapped
+
+
+def test_scheduler_admission_shedding_hysteresis():
+    """Backlog over the high watermark sheds fresh best-effort arrivals
+    (newest first) down to the low watermark; between the watermarks the
+    gate stays open — no flapping — and standard traffic is never shed."""
+    ex = AbortLogFakeEngine(capacity=100, slots=1,
+                            chunks={r: 1 for r in range(8)},
+                            decode_steps={r: 2 for r in range(8)})
+    sched = Scheduler(SchedulerCfg(admission=AdmissionCfg(
+        high_watermark=4, low_watermark=2, shed_below_priority=0)))
+    sched.submit(_req(0))                        # admitted immediately
+    fins = sched.tick(ex)
+    for rid in (1, 2):
+        sched.submit(_req(rid, priority=-10))    # batch backlog
+    sched.submit(_req(3))                        # standard backlog
+    fins += sched.tick(ex)
+    assert sched.stats.admission_sheds == 0      # 3 < high watermark
+    for rid in (4, 5):
+        sched.submit(_req(rid, priority=-10))
+    fins += sched.tick(ex)                       # backlog 5 >= 4: shed
+    # newest batch arrivals go first, down to the low watermark of 2
+    assert sched.stats.admission_sheds == 3
+    assert [a[:2] for a in ex.aborts] == [(5, "cancelled"),
+                                          (4, "cancelled"),
+                                          (2, "cancelled")]
+    assert all(a[2] == "admission_shed" for a in ex.aborts)
+    # recovered to the low watermark: the gate reopens, so a fresh batch
+    # arrival is admitted, not shed — hysteresis, no flapping
+    sched.submit(_req(6, priority=-10))
+    fins += _drain(sched, ex)
+    assert {r.rid for r in fins} == {0, 1, 3, 6}
+    assert sched.stats.admission_sheds == 3
 
 
 def test_swap_area_bookkeeping():

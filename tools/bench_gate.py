@@ -22,10 +22,14 @@ leaf key (see docs/benchmarks.md for the policy):
           fails. Cross-host wall-clock is too noisy for a tight band.
   SKIP    informational leaves (wall_s, budget knobs) — never fail.
 
-Missing baseline keys in the fresh run fail (a suite silently vanished);
-keys only in the fresh run warn (new metrics are fine, the next refresh
-baselines them). Exit 0 pass / 1 fail / 2 usage; ``--out`` writes the
-machine-readable verdict JSON either way.
+Keys present on only one side are SKIP-tier verdict entries, never
+failures: a baseline-only leaf usually means the fresh run was scoped
+down, and a fresh-only leaf is a new metric the next baseline refresh
+will gate — either way, adding or removing a bench entry must not break
+the gate in the same PR that introduces it. The ``skips`` list in the
+verdict JSON records every such leaf so a silently vanished suite is
+still visible in the output. Exit 0 pass / 1 fail / 2 usage; ``--out``
+writes the machine-readable verdict JSON either way.
 """
 
 from __future__ import annotations
@@ -58,6 +62,7 @@ COUNT_SUBSTR = (
 HIGHER_BETTER = ("tok_s", "speedup", "gain", "goodput", "throughput")
 LOWER_BETTER_END = ("_ms", "_s", "_us", "us_per_tok", "ttft")
 SKIP_KEYS = {"budget_tokens", "wall_s", "us_per_call", "schema", "seed"}
+SKIP_SUBSTR = ("miss_rate",)   # wall-clock-dependent outcome fractions
 
 TIGHT_REL, TIGHT_ABS = 0.10, 0.02
 COUNT_REL, COUNT_ABS = 0.25, 3
@@ -66,7 +71,7 @@ TIMING_FACTOR = 2.0
 
 def classify(key: str) -> str:
     """Tolerance tier for one leaf key (the last path segment)."""
-    if key in SKIP_KEYS:
+    if key in SKIP_KEYS or any(s in key for s in SKIP_SUBSTR):
         return "skip"
     if key in STRICT_KEYS:
         return "strict"
@@ -130,20 +135,23 @@ def check_leaf(path: str, base: float, new: float):
 def diff(baseline: dict, fresh: dict) -> dict:
     """Machine-readable verdict comparing two bench documents."""
     b, f = leaves(baseline), leaves(fresh)
-    failures, warnings = [], []
+    failures, warnings, skips = [], [], []
+    checked = 0
     for path, base in sorted(b.items()):
         if path not in f:
-            failures.append(f"missing {path}: baseline had {base}, "
-                            "fresh run lacks it")
+            skips.append(f"baseline-only {path} (was {base}): absent "
+                         "from the fresh run, not gated")
             continue
+        checked += 1
         ok, reason = check_leaf(path, base, f[path])
         if not ok:
             failures.append(reason)
     for path in sorted(set(f) - set(b)):
-        warnings.append(f"new metric {path}={f[path]} (not in baseline; "
-                        "refresh the baseline to gate it)")
+        skips.append(f"fresh-only {path}={f[path]}: not in baseline, "
+                     "not gated (the next refresh baselines it)")
     return {"verdict": "fail" if failures else "pass",
-            "checked": len(b), "failures": failures, "warnings": warnings}
+            "checked": checked, "failures": failures,
+            "warnings": warnings, "skips": skips}
 
 
 def run_fresh(decode_sparse_only: bool) -> dict:
@@ -194,6 +202,8 @@ def main(argv=None) -> int:
         with open(args.out, "w") as fh:
             json.dump(verdict, fh, indent=2)
             fh.write("\n")
+    for s in verdict["skips"]:
+        print(f"skip: {s}")
     for w in verdict["warnings"]:
         print(f"warn: {w}")
     for f in verdict["failures"]:
@@ -201,7 +211,7 @@ def main(argv=None) -> int:
     print(f"bench_gate: {verdict['verdict']} "
           f"({verdict['checked']} leaves checked, "
           f"{len(verdict['failures'])} failures, "
-          f"{len(verdict['warnings'])} warnings)")
+          f"{len(verdict['skips'])} skipped)")
     return 0 if verdict["verdict"] == "pass" else 1
 
 
