@@ -34,6 +34,9 @@ DLZS prediction stage (§IV-A) decide which pages stay hot:
                    set quantize, the decode gather dequantizes
                    (``SchedulerCfg.kv_quant``). Host flag bookkeeping is
                    ``pool.QuantTracker``.
+* ``wire``       — the flat-payload swap format pinned down as a wire
+                   contract: schema validation + byte accounting for
+                   cross-instance KV transfer (serving/disagg).
 
 Page size choice
 ----------------
@@ -76,7 +79,8 @@ from repro.kvcache.allocator import PagedAllocator, select_hot_sphere
 from repro.kvcache.pool import (SCRATCH, PagePool, PoolExhausted, PoolStats,
                                 QuantStats, QuantTracker, SwapArea,
                                 SwapStats)
+from repro.kvcache.wire import payload_bytes, validate_payload
 
 __all__ = ["PagePool", "PagedAllocator", "PoolExhausted", "PoolStats",
            "QuantStats", "QuantTracker", "SCRATCH", "SwapArea", "SwapStats",
-           "select_hot_sphere"]
+           "payload_bytes", "select_hot_sphere", "validate_payload"]

@@ -1,0 +1,135 @@
+"""Wire format for cross-instance KV page transfer (disaggregation).
+
+The backend-uniform flat-payload swap format — the exact dict every
+``EngineCore`` backend produces at ``gather_park``/``exec_preempt`` and
+consumes at ``exec_swap_in`` — doubles as the wire format the
+``serving.disagg.KVTransfer`` fabric moves between a prefill-tuned and a
+decode-tuned instance.  This module pins that contract down as data:
+what keys a payload must carry, what invariants tie them together, and
+how many bytes a payload costs on the hop.  Both ends validate, so a
+drifting backend payload fails loudly at the seam instead of corrupting
+the peer's pool.
+
+Payload schema (one dict per request)::
+
+    rows         host tree (or None) — every leaf has the page axis at 1
+                 ([L, n_park, page, ...]); fp K/V slabs and, when the
+                 int8 cold tier is configured, the quantized mirrors AND
+                 their per-page scales ride in the same tree, so the
+                 quant tier survives the hop for free
+    park         [j] global logical indices of the gathered pages, in
+                 rows' page-axis order
+    kept         [(j, pid)] device-resident shared pages.  A transfer
+                 payload must have kept == [] — physical ids are
+                 meaningless on the peer instance
+    n_pages      block-table length (park ∪ kept must cover it)
+    lookup_toks  token tuple for the peer's prefix re-lookup (None when
+                 prefix sharing is off)
+    kind         "prefill" | "decode" + the matching progress fields
+                 (swap_policy.progress_state / restore_progress)
+    scores       optional [float] per-park-page DLZS scores (decode-side
+                 hot-set selection warms up before its first own pull)
+    register_prefix  optional bool — ask the importer to register
+                 uploaded full-prompt pages in its prefix index so later
+                 same-prefix imports COW-share instead of re-uploading
+
+The importing engine re-derives quant flags from the uploaded scale rows
+(``quant.find_scale``) and recomputes DLZS scores from page content, so
+``scores`` is advisory — conservation never depends on it.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+PREFILL_KEYS = ("prompt", "toks", "spans", "chunk", "sharing",
+                "suppress_first")
+DECODE_KEYS = ("length", "last_token", "budget")
+_BASE_KEYS = ("rows", "park", "kept", "n_pages", "lookup_toks", "kind")
+
+
+def payload_bytes(payload: dict) -> int:
+    """Host bytes the payload's row tree carries (the hop's cost)."""
+    rows = payload.get("rows")
+    if rows is None:
+        return 0
+    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(rows))
+
+
+def validate_payload(payload: dict, *,
+                     page_size: Optional[int] = None,
+                     transfer: bool = False) -> None:
+    """Raise ValueError when ``payload`` violates the wire contract.
+
+    ``transfer=True`` additionally enforces the cross-instance rules:
+    no ``kept`` device references (physical ids do not travel) and a
+    row tree present whenever pages are parked.
+    """
+    missing = [k for k in _BASE_KEYS if k not in payload]
+    if missing:
+        raise ValueError(f"payload missing keys {missing}")
+    kind = payload["kind"]
+    if kind == "prefill":
+        want = PREFILL_KEYS
+    elif kind == "decode":
+        want = DECODE_KEYS
+    else:
+        raise ValueError(f"payload kind {kind!r} not in "
+                         "('prefill', 'decode')")
+    missing = [k for k in want if k not in payload]
+    if missing:
+        raise ValueError(f"{kind} payload missing keys {missing}")
+
+    park = list(payload["park"])
+    kept = list(payload["kept"])
+    n_pages = payload["n_pages"]
+    covered = set(park) | {j for j, _ in kept}
+    if covered != set(range(n_pages)):
+        raise ValueError(
+            f"park ∪ kept covers {sorted(covered)}, expected exactly "
+            f"0..{n_pages - 1}")
+    if len(covered) != len(park) + len(kept):
+        raise ValueError("park and kept overlap")
+
+    rows = payload["rows"]
+    if park and rows is None:
+        raise ValueError(f"{len(park)} parked pages but rows is None")
+    if rows is not None:
+        for leaf in jax.tree.leaves(rows):
+            if leaf.ndim < 2 or leaf.shape[1] != len(park):
+                raise ValueError(
+                    f"rows leaf {leaf.shape} page axis (1) != "
+                    f"len(park)={len(park)}")
+        if page_size is not None:
+            # the K/V slab leaves carry page rows at axis 2; smaller
+            # leaves (per-page scales) legitimately have fewer axes
+            widths = {leaf.shape[2] for leaf in jax.tree.leaves(rows)
+                      if leaf.ndim >= 5}
+            if widths and widths != {page_size}:
+                raise ValueError(
+                    f"rows page width {sorted(widths)} != page_size "
+                    f"{page_size}")
+
+    scores = payload.get("scores")
+    if scores is not None and len(scores) != len(park):
+        raise ValueError(
+            f"scores carries {len(scores)} entries for "
+            f"{len(park)} parked pages")
+
+    if transfer:
+        if kept:
+            raise ValueError(
+                "transfer payload carries device page ids (kept="
+                f"{kept}); physical ids do not travel between pools")
+
+
+def describe(payload: dict) -> dict:
+    """Compact summary for recorder/trace events (no array data)."""
+    return {"kind": payload.get("kind"),
+            "n_pages": payload.get("n_pages"),
+            "parked": len(payload.get("park", ())),
+            "kept": len(payload.get("kept", ())),
+            "bytes": payload_bytes(payload),
+            "scored": payload.get("scores") is not None}

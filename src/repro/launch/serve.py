@@ -3,16 +3,23 @@
 Drives the unified serving front door (``repro.serving.api.LLM``) over
 one of the three backends:
 
-* ``--engine dense``   — the slot-based baseline (STAR sparse decode per
-  the arch's config).
-* ``--engine paged``   — the paged KV-cache engine with chunked prefill
-  and the preemption scheduler (batched varlen prefill with the
-  ``prefill_tokens="auto"`` budget controller by default).
+* ``--engine paged``   — the default: the paged KV-cache engine with
+  chunked prefill and the preemption scheduler (batched varlen prefill
+  with the ``prefill_tokens="auto"`` budget controller by default).
 * ``--engine spatial`` — the sequence-sharded multi-device runtime
   (``--shards N``): context length scales with device count. When the
   process has fewer devices than shards it re-executes itself with
   ``xla_force_host_platform_device_count`` set, so the fake-device
   harness works out of the box on a laptop.
+* ``--engine dense``   — the retired slot-based engine, kept as the
+  parity oracle and footprint baseline (tests/benchmarks); serve it
+  only to compare against the pool-backed engines.
+
+``--disagg`` serves through the prefill/decode-disaggregated router
+instead (``repro.serving.disagg``, docs/disaggregation.md): submits
+land on a prefill-tuned instance of the chosen backend and the
+KVTransfer fabric hands each request to a paged decode-tuned instance
+at the phase boundary.
 
 Requests carry an SLA class (``--sla-mix`` cycles interactive / standard
 / batch) that the scheduler maps onto priorities: interactive traffic is
@@ -49,8 +56,13 @@ def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--engine", default="dense",
+    ap.add_argument("--engine", default="paged",
                     choices=("dense", "paged", "spatial"))
+    ap.add_argument("--disagg", action="store_true",
+                    help="prefill/decode disaggregation: serve through "
+                         "a (prefill-tuned, decode-tuned) instance pair "
+                         "of --engine joined by the KVTransfer fabric "
+                         "(paged/spatial)")
     ap.add_argument("--shards", type=int, default=2,
                     help="sequence shards (spatial engine)")
     ap.add_argument("--requests", type=int, default=8)
@@ -158,10 +170,22 @@ def main(argv=None):
                                      admission=admission)
     tel = None if args.no_telemetry else obs.Telemetry(
         {"launcher": "repro.launch.serve", "engine": args.engine,
-         "arch": args.arch})
-    llm = LLM.from_config(cfg, backend=args.engine, params=params,
-                          shards=args.shards, engine_cfg=engine_cfg,
-                          sched_cfg=sched_cfg, telemetry=tel)
+         "arch": args.arch, "disagg": args.disagg})
+    if args.disagg:
+        if args.engine == "dense":
+            raise SystemExit("--disagg needs a pool-backed engine "
+                             "(paged/spatial)")
+        from repro.serving import DisaggRouter
+        llm = DisaggRouter.from_config(
+            cfg, backend="paged", prefill_backend=args.engine,
+            params=params, shards=args.shards,
+            prefill_engine_cfg=engine_cfg if args.engine != "paged"
+            else None,
+            prefill_sched_cfg=sched_cfg, telemetry=tel)
+    else:
+        llm = LLM.from_config(cfg, backend=args.engine, params=params,
+                              shards=args.shards, engine_cfg=engine_cfg,
+                              sched_cfg=sched_cfg, telemetry=tel)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -192,10 +216,16 @@ def main(argv=None):
         if abnormal:
             extra += ", " + ", ".join(
                 f"{k}={n}" for k, n in sorted(abnormal.items()))
+    if args.disagg:
+        tr = llm.transfer.stats()
+        extra += (f", transfers={tr['n_transfers']}"
+                  f", transfer_bytes={tr['bytes_total']}")
     dt = time.time() - t0
     shards = f", {args.shards} shards" if args.engine == "spatial" else ""
+    mode = ", disagg" if args.disagg else ""
     print(f"[serve] {args.arch} ({'full' if args.full else 'smoke'}, "
-          f"{args.engine}{shards}): {len(done)} requests, {n_tok} tokens, "
+          f"{args.engine}{shards}{mode}): "
+          f"{len(done)} requests, {n_tok} tokens, "
           f"{n_tok / dt:.1f} tok/s, star={'on' if cfg.star else 'off'}"
           f"{extra}")
 

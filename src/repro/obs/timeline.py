@@ -42,6 +42,7 @@ class RequestTimeline:
 
     __slots__ = ("rid", "sla", "submit_t", "admit_t", "first_chunk_t",
                  "first_token_t", "done_t", "preempt_ts", "resume_ts",
+                 "transfer_out_ts", "transfer_in_ts",
                  "token_ts", "n_tokens", "outcome")
 
     def __init__(self, rid: int, sla: Optional[str] = None,
@@ -55,6 +56,9 @@ class RequestTimeline:
         self.done_t: Optional[float] = None
         self.preempt_ts: list[float] = []
         self.resume_ts: list[float] = []
+        self.transfer_out_ts: list[float] = []   # left an instance (disagg
+        #                                          handoff export staged)
+        self.transfer_in_ts: list[float] = []    # adopted by the peer
         self.token_ts: list[float] = []
         self.n_tokens = 0
         self.outcome: Optional[str] = None
@@ -96,6 +100,8 @@ class RequestTimeline:
                 out.append((name[:-2], t))
         out.extend(("preempt", t) for t in self.preempt_ts)
         out.extend(("resume", t) for t in self.resume_ts)
+        out.extend(("transfer_out", t) for t in self.transfer_out_ts)
+        out.extend(("transfer_in", t) for t in self.transfer_in_ts)
         out.sort(key=lambda e: e[1])
         return out
 

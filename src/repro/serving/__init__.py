@@ -1,4 +1,5 @@
 from repro.serving.api import LLM, RequestHandle
+from repro.serving.disagg import DisaggRouter, KVTransfer
 from repro.serving.engine import EngineCfg, Request, ServingEngine
 from repro.serving.engine_core import Backend, EngineCore
 from repro.serving.faults import FaultInjected, FaultPlan, FaultyBackend
@@ -9,9 +10,9 @@ from repro.serving.scheduler import (AdmissionCfg, BudgetController,
                                      SchedulerCfg)
 from repro.serving.swap_policy import RetryGovernor
 
-__all__ = ["AdmissionCfg", "Backend", "BudgetController", "EngineCfg",
-           "EngineCore", "ExecFault", "FaultInjected", "FaultPlan",
-           "FaultyBackend", "LLM", "NeedPages", "PagedBackend",
-           "PagedEngineCfg", "PagedServingEngine", "Request",
-           "RequestHandle", "RetryGovernor", "Scheduler", "SchedulerCfg",
-           "ServingEngine"]
+__all__ = ["AdmissionCfg", "Backend", "BudgetController", "DisaggRouter",
+           "EngineCfg", "EngineCore", "ExecFault", "FaultInjected",
+           "FaultPlan", "FaultyBackend", "KVTransfer", "LLM", "NeedPages",
+           "PagedBackend", "PagedEngineCfg", "PagedServingEngine",
+           "Request", "RequestHandle", "RetryGovernor", "Scheduler",
+           "SchedulerCfg", "ServingEngine"]

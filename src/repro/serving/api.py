@@ -238,7 +238,7 @@ class LLM:
             # submit before keeping the record: a capacity rejection
             # (ValueError) must not leave a phantom never-finishing
             # record behind in a long-lived server
-            self.engine.submit(req)
+            self._submit_engine(req)
         except Exception:
             if self.tel.enabled:
                 self.tel.timelines.pop(rid, None)
@@ -249,18 +249,33 @@ class LLM:
 
     # -- the serve loop ------------------------------------------------------
 
-    def tick(self) -> list[Request]:
-        """One engine step; stamps TTFT / completion times."""
+    # The three engine touch-points below are the subclass seam: the
+    # disaggregated router (serving/disagg) overrides them to route
+    # submits to a prefill instance, step both instances with a KV
+    # handoff in between, and cancel across instances — while tick()'s
+    # record stamping and submit()'s rollback discipline stay shared.
+
+    def _submit_engine(self, req: Request) -> None:
+        self.engine.submit(req)
+
+    def _cancel_engine(self, rid: int, *, reason: str) -> bool:
+        return self.engine.cancel(rid, reason=reason)
+
+    def _step_engines(self) -> list[Request]:
         if self._dense:
             span = self.tel.tracer.span("tick")
             with span:
                 self.engine.admit()
                 finished = list(self.engine.step() or ())
             finished += self.engine.drain_terminal()
-        else:
-            # core engines trace their own tick span inside step() and
-            # fold abnormal terminals into the finished list themselves
-            finished = self.engine.step() or []
+            return finished
+        # core engines trace their own tick span inside step() and
+        # fold abnormal terminals into the finished list themselves
+        return self.engine.step() or []
+
+    def tick(self) -> list[Request]:
+        """One engine step; stamps TTFT / completion times."""
+        finished = self._step_engines()
         now = time.perf_counter()
         for rec in self._pending.values():
             if rec.first_token_t is None and rec.req.out:
@@ -282,7 +297,7 @@ class LLM:
         engine also reports it terminal on the next tick, which is a
         no-op here). Returns False for unknown / already-terminal rids."""
         rec = self._pending.get(rid)
-        if rec is None or not self.engine.cancel(rid, reason=reason):
+        if rec is None or not self._cancel_engine(rid, reason=reason):
             return False
         self._pending.pop(rid, None)
         if rec.done_t is None:

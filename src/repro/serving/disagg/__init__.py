@@ -1,0 +1,14 @@
+"""Prefill/decode disaggregation: KVTransfer fabric + dual-instance
+router (docs/disaggregation.md).
+
+``KVTransfer`` moves a request's committed KV pages between two
+``EngineCore`` instances using the backend-uniform flat-payload swap
+format as the wire format (``kvcache.wire``); ``DisaggRouter`` is the
+``LLM``-compatible front door that admits to a prefill-tuned instance
+and hands each request off to a decode-tuned one at the phase
+boundary."""
+
+from repro.serving.disagg.router import DisaggRouter
+from repro.serving.disagg.transfer import KVTransfer
+
+__all__ = ["DisaggRouter", "KVTransfer"]

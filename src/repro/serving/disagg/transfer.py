@@ -1,0 +1,165 @@
+"""KVTransfer: the page fabric between disaggregated instances.
+
+One ``KVTransfer`` moves committed KV state from a source
+``EngineCore`` (the prefill-tuned instance) to a destination core (the
+decode-tuned one). The wire format IS the backend-uniform flat-payload
+swap format (``kvcache.wire``) — the exporter gathers every resident
+page to host rows with ``kept == []`` (physical ids never travel), so
+any backend pair that speaks the swap format can disaggregate:
+paged↔paged, spatial↔paged, either direction.
+
+A handoff is two phases around a staging ``SwapArea``:
+
+    begin(rid)     src.export_request → validate → stage → summary
+    complete(rid)  unstage → dst.adopt (payload resumes via the swap-in
+                   path; None replays via chunked-prefill recompute)
+
+Between the two the payload lives ONLY in ``self.staging`` and the
+request object ONLY in ``self._reqs`` — neither holds device
+references (export closed them), so a crash/cancel between phases
+leaks nothing: ``drop(rid)`` discards the staged rows and hands the
+request back for recompute or teardown.
+
+Staging modes: ``"device"`` passes the gathered host rows through
+as-is — in process, the importer's ``upload_park`` is then the only
+copy (host→dst-device), the fast path. ``"host"`` deep-copies every
+leaf first, modelling a real fabric hop where the bytes are
+serialized: the staged payload shares no buffers with the exporter.
+
+Fault injection: the fabric consults a ``FaultPlan`` directly at the
+``transfer`` seam (like the dense engine's ``dense_prefill`` — this
+seam lives outside any ``FaultyBackend`` wrapper). The fault fires
+AFTER export, modelling a payload lost on the hop: source pages are
+already released (its conservation closes), nothing is staged, and
+the retained request recovers through ``drop`` + decode-side
+recompute.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+import jax
+
+from repro.kvcache import SwapArea
+from repro.kvcache.wire import describe, payload_bytes, validate_payload
+from repro.obs import NULL_TELEMETRY
+from repro.serving.engine import Request
+from repro.serving.faults import FaultInjected
+
+STAGING_MODES = ("device", "host")
+
+
+class KVTransfer:
+    """Move committed KV pages between two engine instances.
+
+    ``src``/``dst`` are ``EngineCore`` instances (any backend). ``plan``
+    is an optional ``FaultPlan`` consulted at the ``transfer`` seam.
+    ``telemetry`` stamps transfer spans, byte counters and per-request
+    ``transfer_out``/``transfer_in`` timeline epochs."""
+
+    def __init__(self, src, dst, *, plan=None, telemetry=None,
+                 staging: str = "device"):
+        if staging not in STAGING_MODES:
+            raise ValueError(f"unknown staging mode {staging!r}: "
+                             f"choose from {STAGING_MODES}")
+        self.src = src
+        self.dst = dst
+        self.plan = plan
+        self.tel = telemetry or NULL_TELEMETRY
+        self.staging_mode = staging
+        self.staging = SwapArea()
+        self._reqs: dict[int, Request] = {}   # in-flight: begun, not landed
+        self.n_transfers = 0
+        self.n_recompute = 0
+        self.n_faults = 0
+        self.bytes_total = 0
+
+    # -- phases --------------------------------------------------------------
+
+    def begin(self, rid: int) -> Optional[dict]:
+        """Detach ``rid`` from the source and stage its payload; returns
+        the transfer summary (``describe`` + ``recompute`` flag) or None
+        when the rid is not in flight on the source. Raises
+        ``FaultInjected`` when the plan fires at the seam — the request
+        is retained for ``drop``-then-recompute recovery."""
+        with self.tel.tracer.span("transfer", rid=rid):
+            found = self.src.export_request(rid)
+            if found is None:
+                return None
+            req, payload = found
+            self._reqs[rid] = req
+            if self.plan is not None and self.plan.fire("transfer"):
+                # the hop dropped the payload: src already released its
+                # pages, nothing staged — only req survives, for the
+                # router's recompute fallback
+                self.n_faults += 1
+                if self.tel.enabled:
+                    self.tel.recorder.record(
+                        "transfer_fault", rid=rid,
+                        pages=len(payload["park"]) if payload else 0)
+                raise FaultInjected(f"transfer fault: rid {rid} payload "
+                                    "lost on the hop")
+            if payload is None:
+                self.n_recompute += 1
+                return {"rid": rid, "recompute": True, "bytes": 0}
+            payload = self._stage_rows(payload)
+            validate_payload(payload,
+                             page_size=self.dst.backend.page_size,
+                             transfer=True)
+            nbytes = payload_bytes(payload)
+            self.staging.put(rid, payload, nbytes)
+            self.n_transfers += 1
+            self.bytes_total += nbytes
+        if self.tel.enabled:
+            self.tel.metrics.counter(
+                "engine_kv_transfer_bytes_total",
+                "KV payload bytes moved between instances").inc(
+                nbytes, mode=self.staging_mode)
+            self.tel.timeline(rid).transfer_out_ts.append(
+                time.perf_counter())
+        return dict(describe(payload), rid=rid, recompute=False)
+
+    def complete(self, rid: int) -> Request:
+        """Land a begun transfer on the destination: the staged payload
+        (or recompute marker) becomes a ``dst.adopt`` — the request is
+        live on the peer when this returns."""
+        req = self._reqs.pop(rid)
+        payload = self.staging.discard(rid)    # None → recompute replay
+        self.dst.adopt(req, payload)
+        if self.tel.enabled:
+            self.tel.timeline(rid).transfer_in_ts.append(
+                time.perf_counter())
+        return req
+
+    def drop(self, rid: int) -> Optional[Request]:
+        """Abandon an in-flight transfer (fault or cancel mid-hop):
+        discard any staged payload — it holds no device references, so
+        this cannot leak pages — and return the detached request (None
+        when no transfer for ``rid`` is in flight)."""
+        self.staging.discard(rid)
+        return self._reqs.pop(rid, None)
+
+    def in_flight(self) -> list[int]:
+        return sorted(self._reqs)
+
+    # -- internals -----------------------------------------------------------
+
+    def _stage_rows(self, payload: dict) -> dict:
+        if self.staging_mode == "device" or payload.get("rows") is None:
+            return payload
+        # host staging: a serialization boundary — the staged tree must
+        # not alias the exporter's buffers
+        return dict(payload, rows=jax.tree.map(
+            lambda x: np.array(x, copy=True), payload["rows"]))
+
+    def stats(self) -> dict:
+        return {"n_transfers": self.n_transfers,
+                "n_recompute": self.n_recompute,
+                "n_faults": self.n_faults,
+                "bytes_total": self.bytes_total,
+                "staging": self.staging.stats(),
+                "in_flight": len(self._reqs)}

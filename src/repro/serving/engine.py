@@ -1,13 +1,27 @@
-"""Batched serving engine with continuous batching (slot-based).
+"""The RETIRED dense slot engine — kept as the serving test oracle.
 
-The engine owns a fixed pool of ``max_batch`` sequence slots over a shared
-KV cache (the LM's cache pytree, batch dim = slots). Requests are admitted
-into free slots as others finish — continuous batching — so decode steps
-always run at full tensor shapes (static compile). STAR sparse decode is
-whatever the model config says (cfg.star): the engine is sparsity-agnostic.
+This is the original slot-based continuous-batching engine: a fixed
+pool of ``max_batch`` sequence slots over one dense ``[max_batch,
+max_len]`` KV slab. It predates the paged pool, the scheduler protocol,
+and the shared ``EngineCore`` executor, and it is NOT a production
+serving path anymore — ``launch/serve.py`` defaults to the paged
+engine, and every serving surface (``LLM``, benchmarks, smoke tests)
+drives the pool-backed backends.
 
-Single-step flow:
-  admit()  — fill free slots from the queue: per-slot prefill, cache splice
+It stays in the tree for exactly two jobs:
+
+* **parity oracle** — its prefill + greedy decode over a contiguous
+  dense cache is the simplest correct serving semantics; the backend
+  conformance suites (tests/engine_core_scenarios.py) check every
+  paged/spatial/disaggregated configuration token-for-token against it
+  (``LLM(backend="dense")`` through the same front door).
+* **footprint baseline** — benchmarks/serving.py measures the paged
+  pool's working set against this engine's worst-case slab, the
+  number the paging design exists to beat.
+
+``Request`` (defined here) remains the live request type shared by
+every engine. The oracle's single-step flow:
+  admit()  — fill free slots from the queue: per-slot prefill + splice
   step()   — one fused decode for all active slots
   reap()   — emit finished sequences (EOS or max_tokens), free slots
 """

@@ -1064,6 +1064,13 @@ class EngineCore:
                     self.backend.upload_park(
                         state["rows"],
                         [(pos, park[pos], pid) for pos, pid in upload])
+                if upload and state.get("register_prefix") \
+                        and self.backend.share:
+                    # transfer import: index uploaded full-prompt pages
+                    # so later same-prefix imports COW-share them here
+                    # instead of re-uploading (the plan's lookup already
+                    # missed, so each registration is a fresh key)
+                    self._register_imported(state, park, upload)
                 self.tables[slot] = pages
                 self.active[slot] = req
                 pf = swap_policy.restore_progress(state)
@@ -1111,6 +1118,172 @@ class EngineCore:
                                      uploads=len(upload),
                                      kept=len(state["kept"]))
         return slot
+
+    def _register_imported(self, state: dict, park, upload) -> None:
+        """Prefix-index freshly uploaded full-prompt pages from a
+        transfer payload. COW-shared prefixes therefore transfer once:
+        the first import materializes and registers them; every later
+        same-prefix import's page-in plan hits the index and shares the
+        physical page with zero upload."""
+        toks = state.get("lookup_toks")
+        if not toks:
+            return
+        page = self.backend.page_size
+        for pos, pid in upload:
+            j = park[pos]
+            end = (j + 1) * page
+            if end <= len(toks):
+                self.backend.register_prefix(j, tuple(toks[:end]), pid)
+
+    # -- cross-instance transfer hooks (serving.disagg) ----------------------
+
+    def export_request(self, rid: int
+                       ) -> Optional[tuple[Request, Optional[dict]]]:
+        """Detach a request from THIS instance for a cross-instance
+        handoff; returns ``(req, payload)`` or None when ``rid`` is not
+        in flight here.
+
+        The payload is the backend-uniform flat swap format with every
+        resident page gathered to the host — shared pages included:
+        unlike a preemption, the request leaves this instance entirely,
+        so no device reference may survive (``kept == []``) and the
+        conservation invariant closes the moment this returns. Any
+        lazy-shed payload merges in; per-page DLZS scores ride along
+        when the backend can supply them. ``payload is None`` means the
+        peer must recompute from prompt + emitted tokens (a waiting
+        request that never started, or one preempted in recompute mode).
+        """
+        for slot, req in list(self.active.items()):
+            if req.rid != rid:
+                continue
+            self.sched.drop_running_slot(slot)
+            payload = self._export_slot(slot)
+            self._note_export(req, payload)
+            return req, payload
+        for w in list(self.sched.waiting):
+            if w.req.rid != rid:
+                continue
+            swapped = w.swapped
+            req = self.sched.drop_waiting(rid)
+            payload = self._export_parked(rid) if swapped else None
+            if not swapped:
+                self.swap_area.discard(rid)        # defensive
+            self._note_export(req, payload)
+            return req, payload
+        return None
+
+    def _export_slot(self, slot: int) -> dict:
+        """Gather a bound slot's full state into a transfer payload and
+        release everything it holds (mirrors ``exec_preempt``, except
+        shared pages are gathered too — the peer's pool knows nothing of
+        this pool's physical ids)."""
+        req = self.active.pop(slot)
+        table = self.tables.pop(slot)
+        pf = self._pf.pop(slot, None)
+        swap_policy.release_pending(
+            pf, lambda pgs: self.backend.release_pages(pgs, len(table)))
+        park = [j for j, pid in enumerate(table) if pid >= 0]
+        shed = [j for j, pid in enumerate(table) if pid < 0]
+        # gather BEFORE any decref: content is only guaranteed while
+        # the pages hold at least one reference
+        rows = self.backend.gather_park(table, park) if park else None
+        state = swap_policy.progress_state(
+            req, pf, share=self.backend.share,
+            length=int(self.lengths[slot]),
+            last_token=self.backend.get_last_token(slot),
+            budget=self.budget.get(slot, 0))
+        state.update(rows=rows, park=park, kept=[], n_pages=len(table))
+        scorer = getattr(self.backend, "export_page_scores", None)
+        scores = scorer(table, park) if scorer and park else None
+        state = swap_policy.merge_shed(
+            state, self.swap_area.discard(req.rid) if shed else None,
+            concat_rows)
+        if scores is not None:
+            # shed pages were DLZS-cold when parked: score them 0 so the
+            # advisory list still lines up with the merged park order
+            state["scores"] = list(scores) + [0.0] * (
+                len(state["park"]) - len(scores))
+        state["register_prefix"] = bool(self.backend.share)
+        self.backend.release_table(table)
+        self.budget.pop(slot, None)
+        self.lengths[slot] = 0
+        self.free.append(slot)
+        return state
+
+    def _export_parked(self, rid: int) -> Optional[dict]:
+        """Turn a fully-swapped sequence's payload into a transfer
+        payload: ``kept`` pages (shared at preemption, still referenced
+        on this pool) are gathered and their references dropped — the
+        peer re-materializes them from rows like any parked page."""
+        state = self.swap_area.discard(rid)
+        if state is None:
+            return None
+        kept = list(state.get("kept", ()))
+        if kept:
+            synth = [-1] * state["n_pages"]
+            for j, pid in kept:
+                synth[j] = pid
+            js = [j for j, _ in kept]
+            kept_rows = self.backend.gather_park(synth, js)
+            rows = kept_rows if state["rows"] is None \
+                else concat_rows(state["rows"], kept_rows)
+            for j, pid in kept:
+                self.backend.decref_page(j, pid)
+            state = dict(state, rows=rows,
+                         park=list(state["park"]) + js, kept=[])
+        else:
+            state = dict(state, kept=[])
+        state.pop("scores", None)
+        state["register_prefix"] = bool(self.backend.share)
+        return state
+
+    def _note_export(self, req: Request,
+                     payload: Optional[dict]) -> None:
+        if not self.tel.enabled:
+            return
+        pages = len(payload["park"]) if payload else 0
+        if pages:
+            self.tel.metrics.counter(
+                "engine_pages_swapped_total",
+                "pages moved between pool and host").inc(
+                pages, dir="out", kind="transfer")
+        self.tel.recorder.record(
+            "transfer_out", tick=self._tick_no, rid=req.rid,
+            pages=pages, recompute=payload is None)
+
+    def adopt(self, req: Request, payload: Optional[dict] = None) -> None:
+        """Accept a request a peer instance exported.
+
+        Unlike ``submit``, already-emitted tokens are PRESERVED. With a
+        payload the request resumes exactly where it left off through
+        the ordinary swap-in path: the payload parks in this instance's
+        ``SwapArea`` and the scheduler admits it as a swapped waiting
+        entry (``exec_swap_in`` re-allocates pages, uploads rows, and
+        restores decode/prefill progress). Without one it replays
+        prompt + emitted tokens through chunked prefill (exact under
+        greedy decode) — the transfer-fault recompute fallback."""
+        total = len(req.prompt) + req.max_tokens
+        if req.max_len is not None:
+            total = min(total, req.max_len)
+        need = -(-total // self.backend.page_size)
+        self.backend.check_capacity(req.rid, total, need)
+        req.out = list(req.out or ())
+        if req.submit_t is None:
+            req.submit_t = time.perf_counter()
+        if self.tel.enabled:
+            self.tel.timeline(req.rid, sla=getattr(req, "sla", None))
+            self.tel.recorder.record(
+                "transfer_in", tick=self._tick_no, rid=req.rid,
+                pages=len(payload["park"]) if payload else 0,
+                recompute=payload is None)
+        if payload is None:
+            self.sched.submit(req)
+            return
+        assert not payload.get("kept"), \
+            "transfer payloads must not carry device page ids"
+        self.swap_area.put(req.rid, payload,
+                           _rows_bytes(payload.get("rows")))
+        self.sched.submit(req, swapped=True)
 
     # -- driver -------------------------------------------------------------
 

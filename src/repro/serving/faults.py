@@ -32,10 +32,14 @@ seam            raises                 engine path exercised
 ``decode``      ``FaultInjected``      decode-batch recompute retry
 ``stall``       (sleeps ``stall_s``)   slow-tick tolerance — budget
                                        autotuner and deadline sweeps
+``transfer``    ``FaultInjected``      disaggregated KV handoff loss —
+                (at ``KVTransfer``)    decode-side recompute fallback
 ==============  =====================  =================================
 
 The dense slot engine, which predates the Backend protocol, consults the
-plan directly at its one seam (``dense_prefill``).
+plan directly at its one seam (``dense_prefill``); the disaggregation
+fabric (``serving.disagg.KVTransfer``) does the same at ``transfer`` —
+both are seams that sit outside the ``FaultyBackend`` wrapper.
 """
 
 from __future__ import annotations
@@ -47,7 +51,7 @@ from typing import Iterable, Optional
 from repro.kvcache.pool import PoolExhausted
 
 SEAMS = ("alloc", "page_in", "swap_corrupt", "dispatch", "decode",
-         "stall", "dense_prefill")
+         "stall", "dense_prefill", "transfer")
 
 
 class FaultInjected(RuntimeError):
@@ -82,7 +86,8 @@ class FaultPlan:
     @classmethod
     def seeded(cls, seed: int, *, alloc: int = 0, page_in: int = 0,
                swap_corrupt: int = 0, dispatch: int = 0, decode: int = 0,
-               stall: int = 0, dense_prefill: int = 0, window: int = 40,
+               stall: int = 0, dense_prefill: int = 0, transfer: int = 0,
+               window: int = 40,
                stall_s: float = 0.002) -> "FaultPlan":
         """Schedule ``n`` failures per seam at seed-determined call
         indices inside ``[1, window)`` (index 0 — usually the compile
@@ -91,7 +96,7 @@ class FaultPlan:
         counts = {"alloc": alloc, "page_in": page_in,
                   "swap_corrupt": swap_corrupt, "dispatch": dispatch,
                   "decode": decode, "stall": stall,
-                  "dense_prefill": dense_prefill}
+                  "dense_prefill": dense_prefill, "transfer": transfer}
         schedule = {}
         for seam, n in counts.items():
             if n > 0:

@@ -252,6 +252,12 @@ class PagedBackend:
     def _pull_scores(self) -> np.ndarray:
         return np.asarray(self._scores(self.cache["layers"]))
 
+    def export_page_scores(self, table, js) -> list[float]:
+        """Per-page DLZS scores for a transfer payload (advisory: the
+        importer recomputes scores from the uploaded page content)."""
+        scores = self._pull_scores()
+        return [float(scores[table[j]]) for j in js]
+
     # -- admission ----------------------------------------------------------
 
     def check_capacity(self, rid: int, total: int, need: int) -> None:

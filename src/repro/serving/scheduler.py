@@ -403,12 +403,15 @@ class Scheduler:
 
     # -- queue --------------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, *, swapped: bool = False) -> None:
         # the QoS input: an SLA class maps onto the priority every policy
         # below ranks by — unless the caller pinned an explicit priority
         if getattr(req, "sla", None) is not None and req.priority == 0:
             req.priority = sla_priority(req.sla)
-        self.waiting.append(_Waiting(req, self._seqno))
+        # swapped=True: the caller already parked a payload for this rid
+        # in the engine's SwapArea (a cross-instance transfer adopting a
+        # request) — admission goes through exec_swap_in, not exec_admit
+        self.waiting.append(_Waiting(req, self._seqno, swapped=swapped))
         self._seqno += 1
 
     def has_work(self) -> bool:

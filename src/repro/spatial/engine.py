@@ -680,6 +680,12 @@ class SpatialBackend:
     def owner_of(self, j: int) -> int:
         return self.topo.owner(j)
 
+    def export_page_scores(self, table, js) -> list[float]:
+        """Per-page DLZS scores for a transfer payload, resolved on each
+        page's owner shard (advisory: the importer recomputes)."""
+        scores = self._pull_scores()
+        return [float(scores[self.topo.owner(j), table[j]]) for j in js]
+
     def audit_decode(self, slot: int, table, length: int):
         """Exact-attention audit probe, sequence-sharded form (obs.audit).
 

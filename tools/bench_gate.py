@@ -154,6 +154,21 @@ def diff(baseline: dict, fresh: dict) -> dict:
             "warnings": warnings, "skips": skips}
 
 
+def baseline_sha(path: str) -> str:
+    """Git SHA of the commit that last touched the baseline file — the
+    version stamp every verdict carries, so a verdict JSON archived
+    from CI says exactly which baseline it gated against. "unknown"
+    outside a git checkout or for an uncommitted baseline."""
+    try:
+        out = subprocess.run(
+            ["git", "log", "-n", "1", "--format=%H", "--", str(path)],
+            cwd=REPO, capture_output=True, text=True, timeout=30)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except OSError:
+        return "unknown"
+
+
 def run_fresh(decode_sparse_only: bool) -> dict:
     """Execute the serving bench into a temp file and load the result."""
     with tempfile.TemporaryDirectory() as td:
@@ -198,6 +213,8 @@ def main(argv=None) -> int:
         fresh = {"decode_sparse": fresh.get("decode_sparse", {})}
 
     verdict = diff(baseline, fresh)
+    # string leaf: ignored by leaves(), so stamping can never be gated
+    verdict["baseline_sha"] = baseline_sha(args.baseline)
     if args.out:
         with open(args.out, "w") as fh:
             json.dump(verdict, fh, indent=2)
@@ -211,7 +228,8 @@ def main(argv=None) -> int:
     print(f"bench_gate: {verdict['verdict']} "
           f"({verdict['checked']} leaves checked, "
           f"{len(verdict['failures'])} failures, "
-          f"{len(verdict['skips'])} skipped)")
+          f"{len(verdict['skips'])} skipped, "
+          f"baseline@{verdict['baseline_sha'][:12]})")
     return 0 if verdict["verdict"] == "pass" else 1
 
 

@@ -320,6 +320,53 @@ def bundle_smoke(cfg, params, out_dir: pathlib.Path) -> bool:
     return True
 
 
+def bundle_disagg_smoke(cfg, params, out_dir: pathlib.Path) -> bool:
+    """One disaggregated (paged prefill -> paged decode) run with full
+    telemetry, dumped as ``DisaggRouter.debug_bundle()`` — the artifact
+    the CI disagg job uploads on failure, and the smoke that the router
+    adds the fabric artifacts (transfer.json, accounting_prefill.json)
+    on top of the base bundle."""
+    from repro import obs
+    from repro.serving import (DisaggRouter, PagedServingEngine,
+                               SchedulerCfg)
+
+    tel = obs.Telemetry({"backend": "paged", "disagg": True})
+    llm = DisaggRouter(
+        PagedServingEngine(cfg, params,
+                           PagedEngineCfg(max_batch=2, page_size=16,
+                                          n_pages=32, hot_pages=4,
+                                          eos_id=-1),
+                           SchedulerCfg(chunk_pages=1,
+                                        prefill_tokens=48)),
+        PagedServingEngine(cfg, params,
+                           PagedEngineCfg(max_batch=4, page_size=16,
+                                          n_pages=64, hot_pages=4,
+                                          eos_id=-1),
+                           SchedulerCfg(chunk_pages=1)),
+        telemetry=tel)
+    for i, n in enumerate((16, 33, 16, 40)):
+        llm.submit((np.arange(n, dtype=np.int32) * 3 + i) % cfg.vocab,
+                   max_tokens=16, rid=i)
+    llm.run_until_done(max_steps=8000)
+    out = llm.debug_bundle(str(out_dir))
+    want = {"recorder.jsonl", "trace.json", "metrics.json",
+            "metrics.prom", "accounting.json", "accounting_prefill.json",
+            "transfer.json", "timelines.json", "config.json"}
+    have = {p.name for p in pathlib.Path(out).iterdir()}
+    missing = want - have
+    if missing:
+        print(f"smoke_serve[bundle-disagg]: FAIL "
+              f"(missing {sorted(missing)})")
+        return False
+    tr = llm.transfer.stats()
+    if tr["n_transfers"] == 0 or tr["in_flight"]:
+        print(f"smoke_serve[bundle-disagg]: FAIL (fabric stats {tr})")
+        return False
+    print(f"smoke_serve[bundle-disagg]: {out} ({len(have)} artifacts, "
+          f"{tr['n_transfers']} transfers) -> PASS")
+    return True
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description="serving smoke")
     ap.add_argument("--trace", nargs="?", const="", metavar="DIR",
@@ -329,6 +376,10 @@ def main() -> int:
     ap.add_argument("--bundle", metavar="DIR", default=None,
                     help="run ONLY a pressured paged workload and dump "
                          "an LLM.debug_bundle() into DIR")
+    ap.add_argument("--bundle-disagg", metavar="DIR", default=None,
+                    help="run ONLY a disaggregated (prefill -> decode) "
+                         "workload and dump a DisaggRouter."
+                         "debug_bundle() into DIR")
     args = ap.parse_args()
 
     from benchmarks import serving as bench_serving
@@ -342,6 +393,9 @@ def main() -> int:
     if args.bundle is not None:
         return 0 if bundle_smoke(cfg, params,
                                  pathlib.Path(args.bundle)) else 1
+    if args.bundle_disagg is not None:
+        return 0 if bundle_disagg_smoke(
+            cfg, params, pathlib.Path(args.bundle_disagg)) else 1
 
     ok = basic(cfg, params)
     ok = overload(cfg, params) and ok
